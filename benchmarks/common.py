@@ -1,0 +1,22 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+
+class Row:
+    def __init__(self, name: str, us_per_call: float, derived: str):
+        self.name = name
+        self.us_per_call = us_per_call
+        self.derived = derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0)

@@ -1,0 +1,91 @@
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments_tables
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def _gib(b):
+    return b / 2**30
+
+
+def load(mesh, variant=""):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, f"*__{mesh}{variant}.json"))):
+        if not variant and p.count("__") != 2:
+            continue  # baseline only
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_table() -> str:
+    rows = [
+        "| arch | shape | mem/dev GiB | compute s | memory s | collective s "
+        "| dominant | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|".replace("|---|---|---|---|---|---|---|---|---|",
+                                                          "|---|---|---:|---:|---:|---:|---|---:|---:|"),
+    ]
+    for r in load("pod16x16"):
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        useful = r.get("useful_flops_ratio") or 0
+        # roofline fraction: useful compute time / bound time
+        useful_t = (r["model_flops_per_device"] / 197e12)
+        frac = useful_t / max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {_gib(r['memory']['peak_device_bytes']):.2f} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+            f"| {useful:.3f} | {frac:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def multipod_table() -> str:
+    rows = [
+        "| arch | shape | compile s | mem/dev GiB |",
+        "|---|---|---:|---:|",
+    ]
+    for r in load("pod2x16x16"):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} "
+            f"| {_gib(r['memory']['peak_device_bytes']):.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def variant_rows(arch, shape, mesh="pod16x16"):
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART, f"{arch}__{shape}__{mesh}*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.append({
+            "variant": r.get("variant") or "baseline",
+            "mem_gib": _gib(r["memory"]["peak_device_bytes"]),
+            "compute_s": rf["compute_s"],
+            "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "dominant": rf["dominant"],
+            "useful": r.get("useful_flops_ratio"),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    print("## Single-pod roofline (16×16 = 256 chips)\n")
+    print(roofline_table())
+    print("\n## Multi-pod proof (2×16×16 = 512 chips)\n")
+    print(multipod_table())

@@ -1,0 +1,51 @@
+"""Roofline report — renders the §Roofline table from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by ``repro.launch.dryrun``) and
+emits one row per (arch × shape) single-pod cell with the three roofline
+terms, the dominant bottleneck, and the useful-FLOPs ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh: str = "pod16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for r in load_records():
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        useful = r.get("useful_flops_ratio")
+        derived = (
+            f"compute={rf['compute_s']:.4f}s memory={rf['memory_s']:.4f}s "
+            f"collective={rf['collective_s']:.4f}s dominant={rf['dominant']} "
+            f"mem/dev={r['memory']['peak_device_bytes']/2**30:.2f}GiB "
+            f"useful_ratio={useful and round(useful, 3)}"
+        )
+        rows.append(Row(f"roofline_{r['arch']}_{r['shape']}",
+                        rf["compute_s"] * 1e6, derived))
+    if not rows:
+        rows.append(Row("roofline_pending", 0.0,
+                        "no dry-run artifacts yet — run repro.launch.dryrun --all"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,49 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one entry per paper table/figure plus the roofline
+report.  ``python -m benchmarks.run [--fast]``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sweep sizes (CI)")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        beyond_tpu_g,
+        fig3_cost_surface,
+        fig4_selectivity,
+        fig5_simulation,
+        fig6_costs,
+        fig7_quality,
+        roofline_report,
+        table2_stats,
+    )
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    rows = []
+    rows.append(fig3_cost_surface.run())
+    rows.append(fig4_selectivity.run())
+    rows.extend(table2_stats.run())
+    rows.extend(fig5_simulation.run(fast=args.fast))
+    rows.extend(fig6_costs.run())
+    rows.extend(fig7_quality.run())
+    rows.extend(beyond_tpu_g.run())
+    rows.extend(roofline_report.run())
+    flat = []
+    for r in rows:
+        flat.extend(r if isinstance(r, list) else [r])
+    for r in flat:
+        print(r.csv())
+    print(f"# total benchmark wall time: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

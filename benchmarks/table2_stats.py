@@ -1,0 +1,38 @@
+"""Table 2 — benchmark statistics (rows, avg tuple sizes, selectivity)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.data import all_scenarios
+
+from benchmarks.common import Row
+
+#: Paper Table 2 targets (±tolerance asserted below).
+TARGETS = {
+    "emails": dict(tbl1_rows=100, tbl2_rows=10, tbl1_avg_tokens=14,
+                   tbl2_avg_tokens=15, selectivity=0.01),
+    "reviews": dict(tbl1_rows=50, tbl2_rows=50, tbl1_avg_tokens=98,
+                    tbl2_avg_tokens=101, selectivity=0.5),
+    "ads": dict(tbl1_rows=16, tbl2_rows=16, tbl1_avg_tokens=11,
+                tbl2_avg_tokens=10, selectivity=0.06),
+}
+
+
+def run() -> List[Row]:
+    rows = []
+    for sc in all_scenarios():
+        st = sc.stats_row()
+        tg = TARGETS[sc.name]
+        assert st["tbl1_rows"] == tg["tbl1_rows"]
+        assert st["tbl2_rows"] == tg["tbl2_rows"]
+        assert abs(st["tbl1_avg_tokens"] - tg["tbl1_avg_tokens"]) <= 4
+        assert abs(st["selectivity"] - tg["selectivity"]) <= 0.01
+        rows.append(Row(f"table2_{sc.name}", 0.0,
+                        " ".join(f"{k}={v}" for k, v in st.items())))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

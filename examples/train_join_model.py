@@ -1,0 +1,75 @@
+"""Training driver — fine-tune a small model on join-prompt data with the
+full fault-tolerant substrate (AdamW, cosine schedule, microbatching,
+async checkpointing, crash-resume).
+
+The corpus is the paper's own artifact: rendered block-join prompts and
+their oracle answers from all three scenarios — i.e. this is what
+distilling the join task into a small self-hosted model looks like on
+this framework (a few hundred steps of a reduced config on CPU; the same
+driver scales to the 512-chip mesh via the sharding rules).
+
+    PYTHONPATH=src python examples/train_join_model.py [--steps 200]
+"""
+
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.oracle import OracleLLM
+from repro.core.prompts import block_prompt
+from repro.data import all_scenarios
+from repro.data.loader import corpus_lm_batches
+from repro.data.tokenizer import ByteTokenizer
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def build_corpus():
+    """Rendered (block prompt, oracle answer) training documents."""
+    docs = []
+    for sc in all_scenarios():
+        oracle = OracleLLM(sc.predicate, context_limit=100_000)
+        for lo in range(0, len(sc.r1), 4):
+            for lo2 in range(0, len(sc.r2), 4):
+                b1 = sc.r1[lo : lo + 4]
+                b2 = sc.r2[lo2 : lo2 + 4]
+                prompt = block_prompt(b1, b2, sc.condition)
+                answer = oracle._invoke_impl(prompt, max_tokens=4096, stop=None).text
+                docs.append(prompt + " " + answer)
+    return docs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("granite-3-2b")
+    tok = ByteTokenizer(cfg.vocab_size)
+    docs = build_corpus()
+    print(f"corpus: {len(docs)} join-prompt documents")
+
+    batches = corpus_lm_batches(docs, tok.encode, batch=8, seq_len=128,
+                                eos_id=tok.eos_id, seed=0)
+    batch_list = [next(batches) for _ in range(args.steps + 1)]
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="join_model_")
+    tcfg = TrainerConfig(
+        total_steps=args.steps, checkpoint_every=50, checkpoint_dir=ckpt_dir,
+        peak_lr=1e-3, warmup=20, accum_steps=2, log_every=20,
+    )
+    trainer = Trainer(cfg, tcfg, lambda step: {"tokens": batch_list[step]})
+    state = trainer.run(jax.random.PRNGKey(0))
+
+    first = trainer.metrics_log[0]["loss"]
+    last = trainer.metrics_log[-1]["loss"]
+    print(f"\nloss {first:.3f} → {last:.3f} over {args.steps} steps "
+          f"({(1 - last/first)*100:.0f}% reduction); "
+          f"checkpoints in {ckpt_dir}")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

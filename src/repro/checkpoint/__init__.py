@@ -1,0 +1,8 @@
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    save,
+)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

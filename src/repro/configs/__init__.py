@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    InputShape,
+    ModelConfig,
+    cells,
+    get_config,
+    get_smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "InputShape", "ModelConfig", "cells",
+    "get_config", "get_smoke_config",
+]

@@ -1,0 +1,57 @@
+"""Paper core: semantic join operators executed via LLMs.
+
+Implements Trummer, "Implementing Semantic Join Operators Efficiently"
+(CS.DB 2025): tuple nested-loops join (Alg. 1), block nested-loops join
+(Alg. 2), adaptive join (Alg. 3), the token-budget cost model (§3–5), the
+embedding-join and LOTUS baselines, and the §7.2 simulator.
+"""
+
+from repro.core.accounting import (
+    GPT4_PRICING,
+    Ledger,
+    Pricing,
+    Usage,
+    count_tokens,
+    simple_tokenize,
+)
+from repro.core.adaptive_join import adaptive_join, generate_statistics
+from repro.core.batch_opt import (
+    BatchPlan,
+    InfeasibleBudget,
+    optimal_b1_continuous,
+    optimal_b2_continuous,
+    optimal_batch_sizes,
+    plan,
+)
+from repro.core.block_join import block_join
+from repro.core.cost_model import (
+    JoinStats,
+    ModelParams,
+    block_join_cost,
+    budget_lhs,
+    b2_on_boundary,
+    c_star,
+    cost_per_call,
+    num_calls,
+    tokens_per_call,
+    tuple_join_cost,
+)
+from repro.core.embedding_join import HashEmbedder, embedding_join
+from repro.core.join_types import JoinResult, Overflow
+from repro.core.llm_client import Embedder, LLMClient, LLMResponse
+from repro.core.lotus_join import lotus_join
+from repro.core.oracle import OracleLLM
+from repro.core.simulator import SimParams, SimulatedLLM, synthetic_table
+from repro.core.tuple_join import tuple_join
+
+__all__ = [
+    "GPT4_PRICING", "Ledger", "Pricing", "Usage", "count_tokens",
+    "simple_tokenize", "adaptive_join", "generate_statistics", "BatchPlan",
+    "InfeasibleBudget", "optimal_b1_continuous", "optimal_b2_continuous",
+    "optimal_batch_sizes", "plan", "block_join", "JoinStats", "ModelParams",
+    "block_join_cost", "budget_lhs", "b2_on_boundary", "c_star",
+    "cost_per_call", "num_calls", "tokens_per_call", "tuple_join_cost",
+    "HashEmbedder", "embedding_join", "JoinResult", "Overflow", "Embedder",
+    "LLMClient", "LLMResponse", "lotus_join", "OracleLLM", "SimParams",
+    "SimulatedLLM", "synthetic_table", "tuple_join",
+]

@@ -1,0 +1,150 @@
+"""Token and monetary accounting for LLM-executed join operators.
+
+The paper's cost metric is *token consumption*, weighted by the relative
+cost ``g`` of generated tokens (Definition 2.2, §4.2).  Every LLM client in
+this framework (rule-based oracle, simulator, and the real JAX serving
+engine) reports a :class:`Usage` per invocation; a :class:`Ledger`
+accumulates them and converts to dollars under a :class:`Pricing`.
+
+GPT-4 pricing from the paper (§7.1): 3c / 1k tokens read, 6c / 1k tokens
+generated, i.e. ``g = 2``.  We additionally ship a TPU-roofline pricing
+(see ``repro.utils.roofline.tpu_pricing``) where ``g`` is derived from the
+prefill-vs-decode cost asymmetry of the serving stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Iterable, List, Optional
+
+# ---------------------------------------------------------------------------
+# Tokenization (counting only — the serving stack has a real tokenizer in
+# repro.data.tokenizer; core stays dependency-free so the paper's algorithms
+# can run against any client).
+# ---------------------------------------------------------------------------
+
+_TOKEN_RE = re.compile(r"\w+|[^\w\s]")
+
+
+def simple_tokenize(text: str) -> List[str]:
+    """Deterministic word/punctuation tokenizer used for token accounting.
+
+    This approximates BPE token counts well enough for the cost model: every
+    word and every punctuation mark is one token.  All statistics (s1, s2,
+    s3, p) are *measured with the same counter*, so the cost model is
+    self-consistent regardless of the absolute calibration.
+    """
+    return _TOKEN_RE.findall(text)
+
+
+def count_tokens(text: str) -> int:
+    return len(simple_tokenize(text))
+
+
+TokenCounter = Callable[[str], int]
+
+
+# ---------------------------------------------------------------------------
+# Usage + pricing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Usage:
+    """Tokens read (prompt) and generated (completion) by one invocation."""
+
+    prompt_tokens: int
+    completion_tokens: int
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_tokens + self.completion_tokens
+
+    def __add__(self, other: "Usage") -> "Usage":
+        return Usage(
+            self.prompt_tokens + other.prompt_tokens,
+            self.completion_tokens + other.completion_tokens,
+        )
+
+
+ZERO_USAGE = Usage(0, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pricing:
+    """Dollar cost per token read / generated.
+
+    ``g = write_per_token / read_per_token`` is the paper's relative output
+    cost factor.
+    """
+
+    read_per_token: float
+    write_per_token: float
+    name: str = "custom"
+
+    @property
+    def g(self) -> float:
+        return self.write_per_token / self.read_per_token
+
+    def cost(self, usage: Usage) -> float:
+        return (
+            usage.prompt_tokens * self.read_per_token
+            + usage.completion_tokens * self.write_per_token
+        )
+
+
+#: §7.1 — GPT-4 (gpt-4-0613) pricing at the time of the paper's writing.
+GPT4_PRICING = Pricing(read_per_token=0.03e-3, write_per_token=0.06e-3, name="gpt-4")
+
+
+@dataclasses.dataclass
+class Ledger:
+    """Accumulates per-invocation usage for one join execution."""
+
+    calls: int = 0
+    prompt_tokens: int = 0
+    completion_tokens: int = 0
+    overflows: int = 0
+    wasted_prompt_tokens: int = 0  # prompt tokens of calls discarded by overflow
+
+    def record(self, usage: Usage, *, overflow: bool = False) -> None:
+        self.calls += 1
+        self.prompt_tokens += usage.prompt_tokens
+        self.completion_tokens += usage.completion_tokens
+        if overflow:
+            self.overflows += 1
+            self.wasted_prompt_tokens += usage.prompt_tokens
+
+    def merge(self, other: "Ledger") -> None:
+        self.calls += other.calls
+        self.prompt_tokens += other.prompt_tokens
+        self.completion_tokens += other.completion_tokens
+        self.overflows += other.overflows
+        self.wasted_prompt_tokens += other.wasted_prompt_tokens
+
+    @property
+    def usage(self) -> Usage:
+        return Usage(self.prompt_tokens, self.completion_tokens)
+
+    def cost(self, pricing: Pricing = GPT4_PRICING) -> float:
+        return pricing.cost(self.usage)
+
+    def summary(self, pricing: Pricing = GPT4_PRICING) -> dict:
+        return {
+            "calls": self.calls,
+            "prompt_tokens": self.prompt_tokens,
+            "completion_tokens": self.completion_tokens,
+            "total_tokens": self.prompt_tokens + self.completion_tokens,
+            "overflows": self.overflows,
+            "wasted_prompt_tokens": self.wasted_prompt_tokens,
+            "cost_usd": self.cost(pricing),
+            "pricing": pricing.name,
+        }
+
+
+def merge_ledgers(ledgers: Iterable[Ledger]) -> Ledger:
+    out = Ledger()
+    for l in ledgers:
+        out.merge(l)
+    return out

@@ -1,0 +1,105 @@
+"""Abstract LLM client interface used by every join operator.
+
+Three implementations ship with the framework:
+
+* :class:`repro.core.oracle.OracleLLM` — a deterministic rule-based stand-in
+  for GPT-4 with exact token accounting, context limits, ``max_tokens``
+  truncation, and stop-sequence semantics.  Used for quality benchmarks.
+* :class:`repro.core.simulator.SimulatedLLM` — the paper's §7.2 simulator:
+  responds with synthetic matches sampled at a configured selectivity; used
+  for the cost-scaling experiments (Fig. 5).
+* :class:`repro.serve.client.EngineClient` — the real thing: routes prompts
+  through the JAX serving engine (prefill + decode with KV cache) hosting any
+  of the 10 assigned architectures.
+
+The join algorithms are written against this interface only, so the paper's
+contribution (block/adaptive batching) is model- and backend-agnostic.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core.accounting import TokenCounter, Usage, count_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class LLMResponse:
+    """One model invocation's result.
+
+    ``finish_reason`` follows the OpenAI convention: ``"stop"`` when
+    generation ended at a stop sequence / EOS, ``"length"`` when it was
+    truncated by ``max_tokens`` (the paper's *overflow* signal, §4.1).
+    """
+
+    text: str
+    usage: Usage
+    finish_reason: str  # "stop" | "length"
+
+
+class LLMClient(abc.ABC):
+    """Minimal text-in/text-out interface with token accounting."""
+
+    #: Hard bound on prompt + completion tokens per invocation
+    #: (Definition 2.2: "The sum of tokens read and generated per model
+    #: invocation is upper-bounded by a model-specific constant.")
+    context_limit: int
+
+    @abc.abstractmethod
+    def invoke(
+        self,
+        prompt: str,
+        *,
+        max_tokens: int,
+        stop: Optional[str] = None,
+    ) -> LLMResponse:
+        """Run one model invocation.
+
+        Implementations must
+          * count ``prompt_tokens`` with :meth:`count_tokens`,
+          * never generate more than ``max_tokens`` tokens,
+          * stop *before* emitting ``stop`` if it would occur, reporting
+            ``finish_reason="stop"`` (OpenAI semantics) — except that the
+            block join's sentinel handling accepts either convention, see
+            :mod:`repro.core.block_join`.
+        """
+
+    def invoke_many(
+        self,
+        prompts: Sequence[str],
+        *,
+        max_tokens: int,
+        stop: Optional[str] = None,
+    ) -> List[LLMResponse]:
+        """Batched entry point.
+
+        The default implementation is sequential; the serving-engine client
+        overrides this with true continuous batching (the paper's noted
+        future work: "different blocks of input tuples could be processed in
+        parallel as well", §7.3).
+        """
+        return [self.invoke(p, max_tokens=max_tokens, stop=stop) for p in prompts]
+
+    def count_tokens(self, text: str) -> int:
+        return count_tokens(text)
+
+    def max_completion_tokens(self, prompt: str) -> int:
+        """Tokens left for generation after reading ``prompt``."""
+        return max(0, self.context_limit - self.count_tokens(prompt))
+
+
+class Embedder(abc.ABC):
+    """Embedding interface for the embedding-join baseline (§7.1)."""
+
+    dim: int
+
+    @abc.abstractmethod
+    def embed(self, texts: Sequence[str]) -> "list[list[float]]":
+        ...
+
+    @property
+    def tokens_read(self) -> int:
+        """Total tokens read so far (embedding APIs charge for input only)."""
+        return 0

@@ -1,0 +1,169 @@
+"""Rule-based oracle LLM — a deterministic stand-in for GPT-4.
+
+No pretrained weights ship with this container, so join *quality*
+experiments run against this oracle: it receives exactly the prompt text the
+join operators render (Figures 1/2), parses it back, evaluates the join
+predicate with a scenario-provided ground-truth function, and produces the
+answer **under real API semantics**:
+
+* prompt tokens counted with the shared counter,
+* hard ``context_limit`` on prompt + completion (Definition 2.2),
+* ``max_tokens`` truncation mid-answer → ``finish_reason="length"`` and a
+  missing ``Finished`` sentinel — the paper's *overflow*,
+* optional per-pair deterministic noise (false-negative / false-positive
+  rates) to model an imperfect LLM; the noise is keyed on the text pair, so
+  tuple and block joins see *the same* errors and quality is comparable.
+
+A configurable latency model supports the paper's wall-time comparisons
+(sequential tuple join vs parallel LOTUS vs block joins).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.accounting import Usage, count_tokens
+from repro.core.llm_client import LLMClient, LLMResponse
+from repro.core.prompts import (
+    FINISHED,
+    parse_block_prompt,
+    parse_tuple_prompt,
+)
+
+Predicate = Callable[[str, str], bool]
+
+
+class ContextWindowExceeded(ValueError):
+    pass
+
+
+class OracleLLM(LLMClient):
+    def __init__(
+        self,
+        predicate: Predicate,
+        *,
+        context_limit: int = 8192,
+        fn_rate: float = 0.0,
+        fp_rate: float = 0.0,
+        noise_seed: int = 0,
+        latency_base_s: float = 0.5,
+        latency_per_in_tok: float = 1e-4,
+        latency_per_out_tok: float = 2e-2,
+    ):
+        self.predicate = predicate
+        self.context_limit = context_limit
+        self.fn_rate = fn_rate
+        self.fp_rate = fp_rate
+        self.noise_seed = noise_seed
+        self.latency_base_s = latency_base_s
+        self.latency_per_in_tok = latency_per_in_tok
+        self.latency_per_out_tok = latency_per_out_tok
+        #: simulated wall-clock (sequential invocations; waves take max)
+        self.sim_clock_s = 0.0
+
+    # -- noisy predicate -------------------------------------------------
+    def _unit_hash(self, t1: str, t2: str) -> float:
+        h = hashlib.blake2b(
+            f"{self.noise_seed}|{t1}|{t2}".encode(), digest_size=8
+        ).digest()
+        return int.from_bytes(h, "little") / 2**64
+
+    def _decide(self, t1: str, t2: str) -> bool:
+        truth = self.predicate(t1, t2)
+        if self.fn_rate == 0.0 and self.fp_rate == 0.0:
+            return truth
+        u = self._unit_hash(t1, t2)
+        if truth:
+            return u >= self.fn_rate
+        return u < self.fp_rate
+
+    # -- answer construction ---------------------------------------------
+    def _latency(self, usage: Usage) -> float:
+        return (
+            self.latency_base_s
+            + usage.prompt_tokens * self.latency_per_in_tok
+            + usage.completion_tokens * self.latency_per_out_tok
+        )
+
+    def _answer_tuple(self, t1: str, t2: str) -> str:
+        return "Yes" if self._decide(t1, t2) else "No"
+
+    def _answer_block(
+        self, b1: Sequence[str], b2: Sequence[str], budget: int
+    ) -> Tuple[str, str]:
+        """Emit ``x,y; `` pairs then the sentinel, truncating at ``budget``
+        generated tokens (the paper's overflow mechanism)."""
+        parts: List[str] = []
+        used = 0
+        sentinel_cost = count_tokens(FINISHED)
+        for x, t1 in enumerate(b1, start=1):
+            for y, t2 in enumerate(b2, start=1):
+                if not self._decide(t1, t2):
+                    continue
+                piece = f"{x},{y}; "
+                cost = count_tokens(piece)
+                if used + cost > budget:
+                    # cannot fit this pair: answer is truncated mid-stream
+                    return "".join(parts).rstrip(), "length"
+                parts.append(piece)
+                used += cost
+        if used + sentinel_cost > budget:
+            return "".join(parts).rstrip(), "length"
+        parts.append(FINISHED)
+        return "".join(parts), "stop"
+
+    # -- LLMClient --------------------------------------------------------
+    def invoke(
+        self, prompt: str, *, max_tokens: int, stop: Optional[str] = None
+    ) -> LLMResponse:
+        resp = self._invoke_impl(prompt, max_tokens=max_tokens, stop=stop)
+        self.sim_clock_s += self._latency(resp.usage)
+        return resp
+
+    def invoke_many(
+        self,
+        prompts: Sequence[str],
+        *,
+        max_tokens: int,
+        stop: Optional[str] = None,
+    ) -> List[LLMResponse]:
+        """A wave of parallel requests advances the simulated clock by the
+        slowest request only (LOTUS-style concurrency / engine batching)."""
+        responses = [
+            self._invoke_impl(p, max_tokens=max_tokens, stop=stop) for p in prompts
+        ]
+        if responses:
+            self.sim_clock_s += max(self._latency(r.usage) for r in responses)
+        return responses
+
+    def _invoke_impl(
+        self, prompt: str, *, max_tokens: int, stop: Optional[str]
+    ) -> LLMResponse:
+        in_toks = self.count_tokens(prompt)
+        if in_toks >= self.context_limit:
+            raise ContextWindowExceeded(
+                f"prompt has {in_toks} tokens >= context limit {self.context_limit}"
+            )
+        budget = min(max_tokens, self.context_limit - in_toks)
+
+        parsed_tuple = parse_tuple_prompt(prompt)
+        if parsed_tuple is not None:
+            t1, t2, _ = parsed_tuple
+            text = self._answer_tuple(t1, t2)
+            text_toks = count_tokens(text)
+            if text_toks > budget:
+                text = text[:0]  # nothing fits — degenerate but consistent
+                return LLMResponse(text, Usage(in_toks, 0), "length")
+            return LLMResponse(text, Usage(in_toks, text_toks), "stop")
+
+        parsed_block = parse_block_prompt(prompt)
+        if parsed_block is not None:
+            b1, b2, _ = parsed_block
+            text, finish = self._answer_block(b1, b2, budget)
+            return LLMResponse(text, Usage(in_toks, count_tokens(text)), finish)
+
+        raise ValueError(
+            "oracle received a prompt that matches neither join template:\n"
+            + prompt[:200]
+        )

@@ -1,0 +1,152 @@
+"""Prompt templates for the join operators (paper Figures 1 and 2).
+
+Both render (join side) and parse (oracle side, answer-extraction side)
+functions live here so the two directions are tested against each other.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.accounting import count_tokens
+
+FINISHED = "Finished"
+
+# ---------------------------------------------------------------------------
+# Figure 1 — tuple nested loops join prompt
+# ---------------------------------------------------------------------------
+
+TUPLE_TEMPLATE = (
+    'Is the following true ("Yes"/"No"): {j}?\n'
+    "Text 1: {t1}\n"
+    "Text 2: {t2}\n"
+    "Answer:"
+)
+
+
+def tuple_prompt(t1: str, t2: str, j: str) -> str:
+    """Function TuplePrompt in Algorithm 1."""
+    return TUPLE_TEMPLATE.format(j=j, t1=t1, t2=t2)
+
+
+_TUPLE_RE = re.compile(
+    r'Is the following true \("Yes"/"No"\): (?P<j>.*?)\?\n'
+    r"Text 1: (?P<t1>.*?)\n"
+    r"Text 2: (?P<t2>.*?)\n"
+    r"Answer:\Z",
+    re.DOTALL,
+)
+
+
+def parse_tuple_prompt(prompt: str) -> Optional[Tuple[str, str, str]]:
+    """Inverse of :func:`tuple_prompt` → ``(t1, t2, j)`` or ``None``."""
+    m = _TUPLE_RE.match(prompt)
+    if not m:
+        return None
+    return m.group("t1"), m.group("t2"), m.group("j")
+
+
+def parse_yes_no(answer: str) -> bool:
+    """Interpret the (single-token) answer of a tuple-join invocation."""
+    return answer.strip().lower().startswith("yes")
+
+
+# ---------------------------------------------------------------------------
+# Figure 2 — block nested loops join prompt
+# ---------------------------------------------------------------------------
+
+BLOCK_HEADER = (
+    "Find indexes x,y where x is the number of an entry in collection 1 "
+    "and y the number of an entry in collection 2 such that {j} "
+    "(make sure to catch all pairs!)!\n"
+    "Separate index pairs by semicolons.\n"
+    'Write "' + FINISHED + '" after the last pair!\n'
+)
+
+
+def block_prompt(batch1: Sequence[str], batch2: Sequence[str], j: str) -> str:
+    """Function BlockPrompt in Algorithm 2 (paper Figure 2).
+
+    Entries are 1-indexed, matching the paper's template.
+    """
+    lines = [BLOCK_HEADER.format(j=j)]
+    lines.append("Text Collection 1:")
+    for i, t in enumerate(batch1, start=1):
+        lines.append(f"{i}. {t}")
+    lines.append("Text Collection 2:")
+    for i, t in enumerate(batch2, start=1):
+        lines.append(f"{i}. {t}")
+    lines.append("Index pairs:")
+    return "\n".join(lines)
+
+
+_COLLECTION_RE = re.compile(
+    r"Text Collection 1:\n(?P<c1>.*?)\nText Collection 2:\n(?P<c2>.*?)\nIndex pairs:\Z",
+    re.DOTALL,
+)
+_ENTRY_RE = re.compile(r"^(\d+)\. (.*)$")
+_HEADER_J_RE = re.compile(
+    r"entry in collection 2 such that (?P<j>.*?) \(make sure to catch all pairs!\)!",
+    re.DOTALL,
+)
+
+
+def _parse_collection(block: str) -> List[str]:
+    """Parse numbered entries; multi-line tuples are folded into the entry."""
+    entries: List[str] = []
+    for line in block.split("\n"):
+        m = _ENTRY_RE.match(line)
+        if m and int(m.group(1)) == len(entries) + 1:
+            entries.append(m.group(2))
+        elif entries:
+            entries[-1] += "\n" + line
+        # else: stray prefix text — ignore
+    return entries
+
+
+def parse_block_prompt(prompt: str) -> Optional[Tuple[List[str], List[str], str]]:
+    """Inverse of :func:`block_prompt` → ``(batch1, batch2, j)`` or ``None``."""
+    mj = _HEADER_J_RE.search(prompt)
+    mc = _COLLECTION_RE.search(prompt)
+    if not (mj and mc):
+        return None
+    return _parse_collection(mc.group("c1")), _parse_collection(mc.group("c2")), mj.group("j")
+
+
+def render_index_pairs(pairs: Sequence[Tuple[int, int]], finished: bool = True) -> str:
+    """Render the model answer: ``x,y; x,y; ... Finished`` (1-indexed)."""
+    body = "; ".join(f"{x},{y}" for x, y in pairs)
+    if finished:
+        return (body + "; " if body else "") + FINISHED
+    return body
+
+
+_PAIR_RE = re.compile(r"(\d+)\s*,\s*(\d+)")
+
+
+def parse_index_pairs(answer: str) -> Tuple[List[Tuple[int, int]], bool]:
+    """Extract ``(pairs, finished)`` from a block-join answer.
+
+    ``finished`` is True iff the answer's final word is the sentinel
+    (Algorithm 2 line: ``if A[-1] != Finished then return <Overflow>``).
+    Robust to truncated trailing pairs (a pair cut mid-digits is dropped —
+    ExtractTuples in the paper).
+    """
+    finished = answer.rstrip().endswith(FINISHED)
+    pairs = [(int(a), int(b)) for a, b in _PAIR_RE.findall(answer)]
+    return pairs, finished
+
+
+def static_prompt_tokens(j: str) -> int:
+    """``p`` — tokens of the tuple-independent prompt parts (block template).
+
+    Measured by rendering the template with empty collections, matching how
+    GenerateStatistics (Algorithm 3) derives it.
+    """
+    return count_tokens(block_prompt([], [], j))
+
+
+def tuple_static_prompt_tokens(j: str) -> int:
+    """``p`` for the tuple-join template (Figure 1)."""
+    return count_tokens(tuple_prompt("", "", j))

@@ -1,0 +1,38 @@
+"""Algorithm 1 — tuple nested loops join via per-pair LLM invocations."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.accounting import Ledger
+from repro.core.join_types import JoinResult, Timer
+from repro.core.llm_client import LLMClient
+from repro.core.prompts import parse_yes_no, tuple_prompt
+
+
+def tuple_join(
+    r1: Sequence[str],
+    r2: Sequence[str],
+    j: str,
+    client: LLMClient,
+    *,
+    max_answer_tokens: int = 1,
+) -> JoinResult:
+    """Iterate over all tuple pairs, one LLM call each (paper Algorithm 1).
+
+    ``max_answer_tokens=1`` reproduces the paper's InvokeLLM configuration:
+    "the implementation of InvokeLLM configures the language model to
+    generate at most one single output token".
+    """
+    ledger = Ledger()
+    pairs = set()
+    with Timer() as timer:
+        for i, t1 in enumerate(r1):
+            for k, t2 in enumerate(r2):
+                prompt = tuple_prompt(t1, t2, j)
+                resp = client.invoke(prompt, max_tokens=max_answer_tokens)
+                ledger.record(resp.usage)
+                if parse_yes_no(resp.text):
+                    pairs.add((i, k))
+    return JoinResult(pairs=pairs, ledger=ledger, wall_time_s=timer.elapsed,
+                      meta={"operator": "tuple"})

@@ -1,0 +1,15 @@
+"""Data substrate: tokenizers, benchmark scenario generators, host loaders."""
+
+from repro.data.scenarios import (
+    Scenario,
+    ads_scenario,
+    emails_scenario,
+    reviews_scenario,
+    all_scenarios,
+)
+from repro.data.tokenizer import ByteTokenizer, HashWordTokenizer
+
+__all__ = [
+    "Scenario", "ads_scenario", "emails_scenario", "reviews_scenario",
+    "all_scenarios", "ByteTokenizer", "HashWordTokenizer",
+]

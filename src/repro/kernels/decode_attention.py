@@ -1,0 +1,103 @@
+"""Pallas TPU decode attention — one query token vs a long KV cache.
+
+Decode is memory-bound: the work is streaming the KV cache shard from HBM
+through VMEM exactly once.  Grid: ``(batch, kv_head, n_kv_blocks)`` with
+the cache block minor; all ``G`` grouped query heads of one KV head ride
+along in a single (G, hd) VMEM tile, so each cache byte is read once per
+group (not once per query head).
+
+Ragged lengths (continuous batching) are masked per block from the
+``cache_len`` scalar — blocks entirely past the valid prefix are skipped
+with ``pl.when`` (no HBM reads wasted on dead cache tail).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, block_k, n_kv):
+    ki = pl.program_id(2)
+    cache_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * block_k < cache_len)
+    def _compute():
+        q = q_ref[0, 0, :, :]                     # (G, hd)
+        k = k_ref[0, :, 0, :]                     # (ck, hd)
+        v = v_ref[0, :, 0, :]                     # (ck, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # (G, ck)
+        G, ck = s.shape
+        pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (G, ck), 1)
+        s = jnp.where(pos < cache_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0, :, :] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, Skv, KV, hd)
+    v_cache: jax.Array,  # (B, Skv, KV, hd)
+    cache_len: jax.Array,  # (B,) int32 — valid prefix per row
+    *,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Skv, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    block_k = min(block_k, Skv)
+    while Skv % block_k:
+        block_k -= 1
+    n_kv = Skv // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, KV, G, hd)
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (causal, GQA) — prefill/training path.
+
+Grid layout: ``(batch, q_heads, n_q_blocks, n_kv_blocks)`` with the KV
+block index minor (sequential), the canonical TPU pattern: the fp32
+running-softmax accumulators live in VMEM scratch and persist across the
+minor grid dimension; blocks strictly above the causal diagonal are
+skipped with ``pl.when`` (no MXU work issued).
+
+GQA is handled in the index maps: the K/V BlockSpecs map query head ``h``
+to KV head ``h // group_size`` — each KV block is streamed from HBM once
+per group, never materialized repeated (unlike the XLA fallback path,
+which trades that HBM traffic for GSPMD shardability).
+
+Block sizes default to (min(512, S), head_dim) — head_dim is 128 for every
+assigned arch, matching the MXU lane width; the q/k tiles keep the working
+set ≤ ~1.5 MB of VMEM at bf16.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, n_kv):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal block skip: compute only blocks whose first key position is
+    # ≤ the last query position of this q block (works for cq ≠ ck too).
+    q_ref_len = q_ref.shape[1]
+    k_ref_len = k_ref.shape[1]
+
+    @pl.when(ki * k_ref_len <= qi * q_ref_len + q_ref_len - 1)
+    def _compute():
+        q = q_ref[0, :, 0, :]                    # (cq, hd)
+        k = k_ref[0, :, 0, :]                    # (ck, hd)
+        v = v_ref[0, :, 0, :]                    # (ck, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                 # (cq, ck)
+        cq, ck = s.shape
+        rows = qi * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+        cols = ki * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+        s_blk = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s_blk, axis=1, keepdims=True))
+        p = jnp.exp(s_blk - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc_scr[...] * alpha
+        acc = acc + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, S, H, hd)
+    k: jax.Array,   # (B, S, KV, hd)
+    v: jax.Array,   # (B, S, KV, hd)
+    *,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    while S % block_q:
+        block_q -= 1
+    while S % block_k:
+        block_k -= 1
+    n_q = S // block_q
+    n_kv = S // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_kernel, scale=scale, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On a real TPU backend the kernels compile natively
+(``interpret=False``); everywhere else (this CPU container, CI) they run
+in interpret mode, which executes the kernel body in Python per grid step
+— bit-accurate semantics for the allclose tests against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import topk_sim as _tk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def flash_attention(q, k, v, *, chunk: int = 512):
+    return _fa.flash_attention(
+        q, k, v, block_q=chunk, block_k=chunk, interpret=_interpret()
+    )
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, cache_len):
+    return _da.decode_attention(
+        q, k_cache, v_cache, cache_len, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, b, c, *, chunk: int = 256):
+    return _ssd.ssd_scan(x, dt, A, b, c, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, weight, *, eps: float = 1e-5):
+    return _rn.rmsnorm(x, weight, eps=eps, interpret=_interpret())
+
+
+@jax.jit
+def top1_similarity(e1, e2):
+    return _tk.top1_similarity(e1, e2, interpret=_interpret())
+
+
+@jax.jit
+def similarity_matrix(e1, e2):
+    """Dense fallback used by the embedding join for tiny tables."""
+    return jnp.asarray(e1) @ jnp.asarray(e2).T

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v):
+    """Causal GQA attention.  q: (B,S,H,hd); k/v: (B,S,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """q: (B,1,H,hd); caches: (B,Skv,KV,hd); cache_len: (B,)."""
+    B, Skv, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(Skv)[None, None, None] < cache_len[:, None, None, None]
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, b, c):
+    """Sequential (non-chunked) SSD recurrence — the gold reference.
+
+    x: (B,S,H,P); dt: (B,S,H) fp32 ≥0; A: (H,) fp32 <0; b,c: (B,S,N).
+    Returns y: (B,S,H,P) fp32.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp        # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * A[None, :])                      # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bt, dtt, xt)
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.swapaxes(x.astype(jnp.float32), 0, 1),
+          jnp.swapaxes(dt, 0, 1),
+          jnp.swapaxes(b.astype(jnp.float32), 0, 1),
+          jnp.swapaxes(c.astype(jnp.float32), 0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1)
+
+
+def rmsnorm_ref(x, weight, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def top1_sim_ref(e1, e2):
+    """Cosine top-1 match of every e1 row against e2 rows.
+
+    e1: (M,D); e2: (N,D) — both L2-normalized by the caller.
+    Returns (best_idx: (M,) int32, best_sim: (M,) f32).
+    """
+    sim = e1.astype(jnp.float32) @ e2.astype(jnp.float32).T
+    return jnp.argmax(sim, axis=1).astype(jnp.int32), jnp.max(sim, axis=1)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+TPU adaptation of the CUDA SSD kernel (arXiv:2405.21060): the intra-chunk
+quadratic term is (c × c) MXU matmuls; the inter-chunk recurrence is a
+small VPU update on a persistent (N × P) state tile in VMEM scratch.
+
+Grid: ``(batch, heads, n_chunks)`` — chunk index minor/sequential, state
+scratch carried across chunk steps (re-zeroed at chunk 0).  B/C are shared
+across heads (Mamba2's single-group layout), so their BlockSpecs ignore
+the head index — Pallas/TPU streams each (c × N) tile once per head from
+HBM; a multi-head fused variant is a further optimization documented in
+EXPERIMENTS §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, chunk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (c,)
+    A = a_ref[0]                                   # scalar
+    b = b_ref[0, :, :].astype(jnp.float32)         # (c, N)
+    c = c_ref[0, :, :].astype(jnp.float32)         # (c, N)
+
+    a = dt * A                                     # (c,) log-decay ≤ 0
+    cum = jnp.cumsum(a)                            # (c,)
+
+    # intra-chunk quadratic term (MXU): y[i] += Σ_{j≤i} C_i·B_j L_ij dt_j x_j
+    diff = cum[:, None] - cum[None, :]             # (c, c)
+    rows = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1)
+    Lm = jnp.exp(jnp.where(rows >= cols, diff, -jnp.inf))
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    w = cb * Lm * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (c, P)
+
+    # inter-chunk term from carried state: y[i] += exp(cum_i)·(C_i · h)
+    h = h_scr[...]                                 # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: h' = exp(cum_last)·h + Σ_j exp(cum_last−cum_j)·dt_j·B_j⊗x_j
+    w_state = jnp.exp(cum[-1] - cum) * dt          # (c,)
+    upd = jax.lax.dot_general(b * w_state[:, None], x,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (N, P)
+    h_scr[...] = h * jnp.exp(cum[-1]) + upd
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H) fp32
+    A: jax.Array,    # (H,) fp32
+    b: jax.Array,    # (B, S, N)
+    c: jax.Array,    # (B, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, h, ci: (bi, ci, h)),
+            pl.BlockSpec((1,), lambda bi, h, ci: (h,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, N), lambda bi, h, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, h, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda bi, h, ci: (bi, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), b, c)

@@ -1,0 +1,406 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init) — this process, and only this process, sees 512
+placeholder CPU devices so ``jax.make_mesh`` can build the production
+meshes.  No arrays are ever allocated: parameters, optimizer state, KV
+caches and batches are all ``jax.ShapeDtypeStruct`` with attached
+``NamedSharding``.
+
+Per single-pod cell this script performs THREE compiles:
+
+1. **full** — the real config (scan over layers, microbatched): proves the
+   distribution config compiles, and provides ``memory_analysis()``
+   (per-device HBM footprint).
+2. **probe(1 stack)** and **probe(2 stacks)** — unrolled variants (python
+   loops instead of ``lax.scan``) used for cost accounting, because XLA's
+   ``cost_analysis()`` counts a while-loop body ONCE regardless of trip
+   count.  Per-layer FLOPs / HBM bytes / collective bytes are the probe
+   difference; totals extrapolate linearly in depth:
+       total = probe1 + (n_stacks − 1) · (probe2 − probe1).
+
+Multi-pod cells run the full compile only (the pod-axis sharding proof);
+the roofline table is single-pod per the assignment.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ARCH_IDS, InputShape, ModelConfig, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import cache_specs, decode_step, model_specs, prefill
+from repro.models.params import abstract_params, param_count
+from repro.sharding.logical import axes_to_sharding, use_mesh
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainState, train_step
+from repro.utils.hlo_analysis import collective_bytes
+from repro.utils.roofline import active_params, model_flops, roofline
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+#: >100B-param archs: bf16 optimizer state + bf16 grad accumulation
+#: (memory compression to fit v5e HBM; DESIGN.md §6).
+BIG_ARCHS = {"mistral-large-123b", "jamba-1.5-large-398b", "arctic-480b",
+             "grok-1-314b"}
+
+#: Microbatch accumulation per arch for train_4k — keeps the per-device
+#: live activation footprint (remat-saved layer inputs) within v5e HBM.
+TRAIN_ACCUM = {
+    "musicgen-large": 8, "mistral-large-123b": 16, "starcoder2-7b": 16,
+    "granite-3-2b": 16, "yi-9b": 16, "jamba-1.5-large-398b": 16,
+    "arctic-480b": 16, "grok-1-314b": 16, "mamba2-130m": 4, "pixtral-12b": 16,
+}
+
+
+def opt_config(cfg: ModelConfig) -> AdamWConfig:
+    dtype = jnp.bfloat16 if cfg.name in BIG_ARCHS else jnp.float32
+    return AdamWConfig(state_dtype=dtype)
+
+
+def _accum_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.name in BIG_ARCHS else jnp.float32
+
+
+def probe_config(cfg: ModelConfig, stacks: int, shape: InputShape) -> ModelConfig:
+    per_stack = cfg.attn_period if cfg.family == "hybrid" else 1
+    # default chunks are enlarged for unrolled-probe compile speed, but an
+    # explicit --cfg chunk override (hillclimb iteration) is respected so
+    # the probes measure exactly the changed configuration
+    attn_chunk = cfg.attn_chunk if cfg.attn_chunk != 512 else max(512, shape.seq_len // 16)
+    ssm_chunk = cfg.ssm_chunk if cfg.ssm_chunk != 256 else max(256, shape.seq_len // 16)
+    return dataclasses.replace(
+        cfg,
+        n_layers=stacks * per_stack,
+        unroll=True,
+        attn_chunk=attn_chunk,
+        ssm_chunk=ssm_chunk,
+    )
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh, rules) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = axes_to_sharding(("batch", "seq"), mesh, rules, shape=(B, S))
+    if cfg.input_mode == "embeddings" and shape.kind != "decode":
+        emb_sh = axes_to_sharding(("batch", "seq", "embed"), mesh, rules,
+                                  shape=(B, S, cfg.d_model))
+        return {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16,
+                                           sharding=emb_sh),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=tok_sh),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=tok_sh)}
+
+
+def state_specs(cfg: ModelConfig, mesh, rules, ocfg: AdamWConfig) -> TrainState:
+    specs = model_specs(cfg)
+    params = abstract_params(specs, jnp.bfloat16, mesh, rules)
+    mom = abstract_params(specs, ocfg.state_dtype, mesh, rules)
+    opt = {"m": mom, "v": mom, "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    return TrainState(params=params, opt=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every input of one (arch × shape) cell
+    — weak-type-correct, sharding-attached, zero device allocation.
+
+    train  → (TrainState, batch)        — for jit(train_step).lower(...)
+    prefill→ (params, batch)            — for jit(prefill).lower(...)
+    decode → (params, cache, tokens)    — for jit(decode_step).lower(...)
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = cfg.rules()
+    if shape.kind == "train":
+        ocfg = opt_config(cfg)
+        return state_specs(cfg, mesh, rules, ocfg), batch_specs(cfg, shape, mesh, rules)
+    params = abstract_params(model_specs(cfg), jnp.bfloat16, mesh, rules)
+    if shape.kind == "prefill":
+        return params, batch_specs(cfg, shape, mesh, rules)
+    cache = abstract_params(
+        cache_specs(cfg, shape.global_batch, shape.seq_len),
+        jnp.bfloat16, mesh, rules)
+    cache["len"] = jax.ShapeDtypeStruct(
+        (shape.global_batch,), jnp.int32,
+        sharding=axes_to_sharding(("batch",), mesh, rules,
+                                  shape=(shape.global_batch,)))
+    tok = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32,
+        sharding=axes_to_sharding(("batch", None), mesh, rules,
+                                  shape=(shape.global_batch, 1)))
+    return params, cache, tok
+
+
+def lower_cell(cfg: ModelConfig, shape: InputShape, mesh, *, accum_steps: int = 1,
+               rule_overrides: Optional[Dict[str, Any]] = None,
+               quant: bool = False):
+    rules = cfg.rules()
+    if rule_overrides:
+        rules.update(rule_overrides)
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            ocfg = opt_config(cfg)
+            state = state_specs(cfg, mesh, rules, ocfg)
+            batch = batch_specs(cfg, shape, mesh, rules)
+
+            def fn(s, b):
+                return train_step(cfg, s, b, opt_cfg=ocfg,
+                                  accum_steps=accum_steps,
+                                  accum_dtype=_accum_dtype(cfg))
+
+            return jax.jit(fn, donate_argnums=0).lower(state, batch)
+
+        if quant:
+            from repro.models.quant import abstract_quantized_params
+
+            params = abstract_quantized_params(model_specs(cfg), mesh, rules)
+        else:
+            params = abstract_params(model_specs(cfg), jnp.bfloat16, mesh, rules)
+        if shape.kind == "prefill":
+            batch = batch_specs(cfg, shape, mesh, rules)
+
+            def fn(p, b):
+                return prefill(cfg, p, b, max_seq=shape.seq_len)
+
+            return jax.jit(fn).lower(params, batch)
+
+        if shape.kind == "decode":
+            cache = abstract_params(
+                cache_specs(cfg, shape.global_batch, shape.seq_len),
+                jnp.bfloat16, mesh, rules)
+            if cfg.kv_cache_dtype != "auto":  # fp8 KV cache variant
+                kv_dt = jnp.dtype(cfg.kv_cache_dtype)
+                for key in ("k", "v"):
+                    if key in cache:
+                        c = cache[key]
+                        cache[key] = jax.ShapeDtypeStruct(
+                            c.shape, kv_dt, sharding=c.sharding)
+            cache["len"] = jax.ShapeDtypeStruct(
+                (shape.global_batch,), jnp.int32,
+                sharding=axes_to_sharding(("batch",), mesh, rules,
+                                          shape=(shape.global_batch,)))
+            tok = jax.ShapeDtypeStruct(
+                (shape.global_batch, 1), jnp.int32,
+                sharding=axes_to_sharding(("batch", None), mesh, rules,
+                                          shape=(shape.global_batch, 1)))
+
+            def fn(p, c, t):
+                return decode_step(cfg, p, c, t)
+
+            return jax.jit(fn, donate_argnums=1).lower(params, cache, tok)
+
+    raise ValueError(shape.kind)
+
+
+def _costs(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": {k: float(v) for k, v in coll.items()},
+    }
+
+
+def _extrapolate(p1: Dict, p2: Dict, stacks: int) -> Dict[str, float]:
+    def ext(a, b):
+        return a + (stacks - 1) * max(b - a, 0.0)
+
+    coll = {k: ext(p1["coll"][k], p2["coll"][k]) for k in p1["coll"]}
+    return {
+        "flops": ext(p1["flops"], p2["flops"]),
+        "bytes": ext(p1["bytes"], p2["bytes"]),
+        "coll": coll,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = ARTIFACT_DIR, verbose: bool = True,
+             variant: str = "", rule_overrides: Optional[Dict[str, Any]] = None,
+             quant: bool = False, accum: Optional[int] = None,
+             cfg_overrides: Optional[Dict[str, Any]] = None,
+             probes: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    out_path = os.path.join(out_dir,
+                            f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    if accum is None:
+        accum = TRAIN_ACCUM[arch] if shape.kind == "train" else 1
+    kw = dict(rule_overrides=rule_overrides, quant=quant)
+
+    # ---- 1. full compile: the distribution proof + memory analysis -------
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, accum_steps=accum, **kw)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": int(n_chips), "kind": shape.kind,
+        "accum_steps": accum, "variant": variant,
+        "rule_overrides": rule_overrides, "quant": quant,
+        "params_total": param_count(model_specs(cfg)),
+        "params_active": int(active_params(cfg)),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_device_bytes": int(mem.argument_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     - mem.alias_size_in_bytes),
+        },
+    }
+    del compiled, lowered
+
+    # ---- 2. cost probes (single-pod only: the roofline table) ------------
+    if not multi_pod and probes:
+        from repro.models.model import n_stacks
+
+        stacks = n_stacks(cfg)
+        probes = {}
+        for k in (1, 2):
+            pc = probe_config(cfg, k, shape)
+            c = lower_cell(pc, shape, mesh, accum_steps=1, **kw).compile()
+            probes[k] = _costs(c)
+            del c
+        total = _extrapolate(probes[1], probes[2], stacks)
+        terms = roofline(total["flops"], total["bytes"], total["coll"]["total"])
+        mflops_dev = model_flops(cfg, shape) / n_chips
+        record.update({
+            "probe1": probes[1], "probe2": probes[2], "stacks": stacks,
+            "cost": {"flops_per_device": total["flops"],
+                     "bytes_per_device": total["bytes"]},
+            "collectives": total["coll"],
+            "roofline": terms.as_dict(),
+            "model_flops_per_device": mflops_dev,
+            "useful_flops_ratio": (mflops_dev / total["flops"])
+                                  if total["flops"] else None,
+        })
+
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    if verbose:
+        msg = (f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+               f"compile {t_compile:.0f}s, "
+               f"mem/dev {record['memory']['peak_device_bytes']/2**30:.2f} GiB")
+        if "roofline" in record:
+            r = record["roofline"]
+            msg += (f", flops/dev {r['flops_per_chip']:.3e}"
+                    f", coll/dev {r['coll_bytes_per_chip']/2**20:.1f} MiB"
+                    f", dominant={r['dominant']}"
+                    f", useful={round(record['useful_flops_ratio'], 3)}")
+        print(msg, flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every assigned cell")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out-dir", default=ARTIFACT_DIR)
+    # ---- hillclimb knobs (EXPERIMENTS.md §Perf) ----
+    ap.add_argument("--variant", default="", help="artifact name suffix")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="LOGICAL=MESHAXIS",
+                    help="sharding rule override, e.g. heads=None, "
+                         "batch=data+model, act_seq=model")
+    ap.add_argument("--quant", action="store_true",
+                    help="int8 weight-only params (serving cells)")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--no-probes", action="store_true",
+                    help="full compile only (memory-footprint iterations)")
+    ap.add_argument("--cfg", action="append", default=[],
+                    metavar="FIELD=VALUE",
+                    help="ModelConfig override, e.g. remat=slot ssm_chunk=128")
+    args = ap.parse_args()
+
+    cfg_overrides: Dict[str, Any] = {}
+    for cv in args.cfg:
+        k, v = cv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        cfg_overrides[k] = v
+    cfg_overrides = cfg_overrides or None
+
+    overrides: Dict[str, Any] = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("None", "none", ""):
+            overrides[k] = None
+        elif "+" in v:
+            overrides[k] = tuple(v.split("+"))
+        else:
+            overrides[k] = v
+    overrides = overrides or None
+
+    if args.all:
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in cells(arch):
+                mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+                out_path = os.path.join(
+                    args.out_dir, f"{arch}__{shape.name}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(out_path):
+                    print(f"[dryrun] skip existing {out_path}", flush=True)
+                    continue
+                try:
+                    run_cell(arch, shape.name, args.multi_pod, args.out_dir)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape.name, repr(e)))
+        if failures:
+            print(f"[dryrun] FAILURES ({len(failures)}):")
+            for f in failures:
+                print("  ", f)
+            raise SystemExit(1)
+        print("[dryrun] all cells compiled OK")
+        return
+
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --all)")
+    run_cell(args.arch, args.shape, args.multi_pod, args.out_dir,
+             variant=args.variant, rule_overrides=overrides,
+             quant=args.quant, accum=args.accum, cfg_overrides=cfg_overrides,
+             probes=not args.no_probes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant, so importing this module never
+touches jax device state (smoke tests must keep seeing 1 CPU device; only
+``dryrun.py`` forces 512 host devices via XLA_FLAGS before first init).
+
+Topology: TPU v5e pods of 256 chips as a (16, 16) torus.
+  single-pod:  (16, 16)        axes ("data", "model")
+  multi-pod:   (2, 16, 16)     axes ("pod", "data", "model")
+
+DP spans ("pod", "data") — the pod axis carries only gradient
+all-reduces (DCN-friendly); TP/EP stay inside a pod's ICI.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,22 @@
+from repro.models.model import (
+    cache_specs,
+    decode_step,
+    forward,
+    model_specs,
+    n_stacks,
+    prefill,
+)
+from repro.models.params import (
+    Spec,
+    abstract_params,
+    init_params,
+    param_count,
+    param_shardings,
+    stack_specs,
+)
+
+__all__ = [
+    "cache_specs", "decode_step", "forward", "model_specs", "n_stacks",
+    "prefill", "Spec", "abstract_params", "init_params", "param_count",
+    "param_shardings", "stack_specs",
+]

@@ -1,0 +1,224 @@
+"""Transformer blocks: GQA attention and dense/MoE FFNs (specs + apply)."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import Spec
+from repro.models.quant import deq
+from repro.sharding.logical import shard
+
+
+# ---------------------------------------------------------------------------
+# Attention block (pre-norm, GQA + RoPE)
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    D, KV, hd = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    H = cfg.padded_heads  # TP head padding (see ModelConfig.head_pad_to)
+    return {
+        "norm": Spec((D,), ("embed",), init="ones"),
+        "wq": Spec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+
+
+def _head_mask(cfg: ModelConfig, dtype):
+    """(Hp,) mask zeroing padded heads' outputs (grads to their weights
+    vanish, so dead heads stay dead during training)."""
+    if cfg.padded_heads == cfg.n_heads:
+        return None
+    return (jnp.arange(cfg.padded_heads) < cfg.n_heads).astype(dtype)
+
+
+def _qkv(cfg: ModelConfig, p, x, positions):
+    xn = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, deq(p["wq"], xn.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xn, deq(p["wk"], xn.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xn, deq(p["wv"], xn.dtype))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,KV,hd) → (B,S,H,hd) by group repetition (GSPMD-friendly)."""
+    B, S, KV, hd = k.shape
+    G = n_heads // KV
+    k = jnp.repeat(k, G, axis=2)
+    return shard(k, "batch", "seq", "heads", "head_dim")
+
+
+def attn_apply(
+    cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
+    *, return_kv: bool = False,
+):
+    """Full-sequence causal attention (train / prefill)."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    kf = _repeat_kv(k, cfg.padded_heads)
+    vf = _repeat_kv(v, cfg.padded_heads)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        o = kops.flash_attention(q, kf, vf, chunk=cfg.attn_chunk)
+    else:
+        o = L.blockwise_causal_attention(q, kf, vf, chunk=cfg.attn_chunk,
+                                         unroll=cfg.unroll)
+    mask = _head_mask(cfg, o.dtype)
+    if mask is not None:
+        o = o * mask[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, deq(p["wo"], o.dtype))
+    out = shard(out, "batch", "seq", "embed")
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode(
+    cfg: ModelConfig, p, x: jax.Array,
+    k_cache: jax.Array, v_cache: jax.Array, cache_len: jax.Array,
+):
+    """One-token attention against the cache.
+
+    ``x``: (B, 1, D).  Returns (out, new_k_cache, new_v_cache).
+    Decode overrides ``heads → None`` (context-parallel cache instead).
+    """
+    B = x.shape[0]
+    positions = cache_len[:, None]  # (B,1) — position of the new token
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = shard(q, "batch", None, None, None)
+    # per-row scatter: rows may have ragged lengths (continuous batching)
+    def _write(cache_row, new_row, pos):
+        return jax.lax.dynamic_update_slice_in_dim(cache_row, new_row, pos, axis=0)
+
+    k_cache = jax.vmap(_write)(k_cache, k.astype(k_cache.dtype), cache_len)
+    v_cache = jax.vmap(_write)(v_cache, v.astype(v_cache.dtype), cache_len)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        o = kops.decode_attention(q, k_cache, v_cache, cache_len + 1)
+    else:
+        o = L.decode_attention(q, k_cache, v_cache, cache_len + 1)
+    mask = _head_mask(cfg, o.dtype)
+    if mask is not None:
+        o = o * mask[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, deq(p["wo"], o.dtype))
+    return shard(out, "batch", None, "embed"), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN block (pre-norm SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Spec]:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "norm": Spec((D,), ("embed",), init="ones"),
+        "w_gate": Spec((D, F), ("embed", "mlp")),
+        "w_up": Spec((D, F), ("embed", "mlp")),
+        "w_down": Spec((F, D), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    xn = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    out = L.swiglu(xn, deq(p["w_gate"], xn.dtype), deq(p["w_up"], xn.dtype), deq(p["w_down"], xn.dtype))
+    return shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN block — GShard-style token-dropping dispatch
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    specs = {
+        "norm": Spec((D,), ("embed",), init="ones"),
+        "router": Spec((D, E), ("embed", "experts"), scale=0.02),
+        "w_gate": Spec((E, D, F), ("experts", "embed", "expert_mlp")),
+        "w_up": Spec((E, D, F), ("experts", "embed", "expert_mlp")),
+        "w_down": Spec((E, F, D), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.moe_dense_residual:  # arctic: parallel dense FFN
+        specs["dense"] = mlp_specs(cfg)
+    return specs
+
+
+def _capacity(cfg: ModelConfig, n_group_tokens: int) -> int:
+    c = math.ceil(
+        n_group_tokens * cfg.experts_per_token * cfg.capacity_factor / cfg.n_experts
+    )
+    return max(int(c), 1)
+
+
+def moe_apply(cfg: ModelConfig, p, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routed experts with capacity-bounded one-hot dispatch.
+
+    Returns ``(out, aux_loss)`` — aux is the Switch load-balance loss.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.experts_per_token
+    G = cfg.moe_groups or max(1, T // 512)
+    while T % G != 0:
+        G -= 1
+    N = T // G
+    C = _capacity(cfg, N)
+
+    xn = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    xg = xn.reshape(G, N, D)
+    xg = shard(xg, "groups", None, "embed")
+
+    logits = jnp.einsum("gnd,de->gne", xg, p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)              # (G,N,E)
+
+    topv, topi = jax.lax.top_k(gates, k)                 # (G,N,k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    # capacity assignment — token-major priority, choice-major within token
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.float32)      # (G,N,k,E)
+    flat = oh.reshape(G, N * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                # exclusive cumsum
+    keep = (pos < C) * flat                              # (G,N*k,E)
+    slot = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)  # (G,N*k,E,C)
+    dispatch = (keep[..., None] * slot).reshape(G, N, k, E, C)
+    combine = dispatch * topv[..., None, None]
+    dispatch = dispatch.sum(axis=2)                      # (G,N,E,C)
+    combine = combine.sum(axis=2)
+    dispatch = shard(dispatch, "groups", None, "experts", None)
+    combine = shard(combine, "groups", None, "experts", None)
+
+    xe = jnp.einsum("gnd,gnec->gecd", xg.astype(x.dtype), dispatch.astype(x.dtype))
+    xe = shard(xe, "groups", "experts", None, "embed")
+
+    g_ = jnp.einsum("gecd,edf->gecf", xe, deq(p["w_gate"], xe.dtype))
+    u_ = jnp.einsum("gecd,edf->gecf", xe, deq(p["w_up"], xe.dtype))
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(x.dtype) * u_
+    h = shard(h, "groups", "experts", None, "expert_mlp")
+    ye = jnp.einsum("gecf,efd->gecd", h, deq(p["w_down"], h.dtype))
+    ye = shard(ye, "groups", "experts", None, "embed")
+
+    y = jnp.einsum("gecd,gnec->gnd", ye, combine.astype(x.dtype))
+    out = y.reshape(B, S, D)
+    out = shard(out, "batch", "seq", "embed")
+
+    # Switch aux loss: E * Σ_e (fraction routed to e) · (mean gate of e)
+    frac = keep.reshape(G, N, k, E).sum(axis=(1, 2)) / (N * k)   # (G,E)
+    mean_gate = gates.mean(axis=1)                                # (G,E)
+    aux = E * jnp.mean(jnp.sum(frac * mean_gate, axis=-1))
+
+    if cfg.moe_dense_residual:
+        out = out + mlp_apply(cfg, p["dense"], x)
+    return out, aux

@@ -1,0 +1,267 @@
+"""Shared pure-JAX layers, annotated with logical sharding axes.
+
+Conventions
+-----------
+* Activations: ``(batch, seq, ...)``; params live in spec trees
+  (:mod:`repro.models.params`).
+* GQA: K/V are *stored* with ``n_kv_heads`` heads (cache memory) and
+  repeated to ``n_heads`` right before the attention einsum — the
+  GSPMD-friendly layout (head dim shards cleanly over the ``model`` axis).
+  The Pallas kernel path avoids the repeat (loads each KV head once per
+  group); the XLA path trades HBM traffic for shardability.
+* Attention is **blockwise-causal** ("flash in jnp"): an
+  O(chunk²)-memory running-softmax scan over the lower-triangular chunk
+  pairs.  Exact causal FLOPs (no wasted masked blocks), bounded VMEM-sized
+  working set — this is also the reference for the Pallas flash kernel.
+* Numerics: matmuls in the activation dtype (bf16 on TPU), softmax /
+  normalizers / losses in fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import shard
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise causal attention (exact-FLOPs flash formulation)
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -1e30
+
+
+def _merge(m, l, o, m_new, l_new, o_new):
+    """Merge two partial softmax accumulators (flash-attention update)."""
+    m_out = jnp.maximum(m, m_new)
+    a = jnp.exp(m - m_out)
+    b = jnp.exp(m_new - m_out)
+    return m_out, l * a + l_new * b, o * a[..., None] + o_new * b[..., None]
+
+
+def _block_attn(qb, kb, vb, scale, mask: Optional[jax.Array]):
+    """One (q-chunk × kv-chunk) attention block → partial (m, l, o).
+
+    qb: (B, c, H, hd); kb/vb: (B, c, H, hd).  fp32 accumulators.
+    """
+    s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                   preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, _NEG_INF)
+    m = jnp.max(s, axis=-1)                      # (B,H,c)
+    e = jnp.exp(s - m[..., None])                # (B,H,c,c)
+    l = jnp.sum(e, axis=-1)                      # (B,H,c)
+    o = jnp.einsum("bhqk,bkhd->bhqd", e.astype(vb.dtype), vb,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def pick_chunk(seq_len: int, target: int = 512) -> int:
+    """Largest divisor of ``seq_len`` that is ≤ target (≥ 1)."""
+    c = min(target, seq_len)
+    while seq_len % c != 0:
+        c -= 1
+    return c
+
+
+def blockwise_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Causal attention over (B, S, H, hd) with O(S·chunk) score memory.
+
+    Scans the ``n(n+1)/2`` lower-triangular chunk pairs with a running
+    softmax; diagonal pairs get the intra-chunk causal mask.  FLOPs equal
+    the exact causal cost (no masked-out blocks are computed).
+
+    ``unroll=True`` emits a python loop instead of ``lax.scan`` — used by
+    the dry-run cost probes (XLA's cost analysis counts a while body once).
+    """
+    B, S, H, hd = q.shape
+    chunk = pick_chunk(S, chunk)
+    n = S // chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = q.reshape(B, n, chunk, H, hd)
+    kc = k.reshape(B, n, chunk, H, hd)
+    vc = v.reshape(B, n, chunk, H, hd)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None]  # (1,1,c,c)
+
+    if unroll:
+        outs = []
+        for qi in range(n):
+            qb = qc[:, qi]
+            m = jnp.full((B, H, chunk), _NEG_INF, jnp.float32)
+            l = jnp.zeros((B, H, chunk), jnp.float32)
+            o = jnp.zeros((B, H, chunk, hd), jnp.float32)
+            for ki in range(qi + 1):
+                mask = causal if ki == qi else None
+                mb, lb, ob = _block_attn(qb, kc[:, ki], vc[:, ki], scale, mask)
+                m, l, o = _merge(m, l, o, mb, lb, ob)
+            outs.append(jnp.swapaxes(o / l[..., None], 1, 2))  # (B,c,H,hd)
+        return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+    # accumulators per query position
+    m0 = jnp.full((B, n, H, chunk), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, n, H, chunk), jnp.float32)
+    o0 = jnp.zeros((B, n, H, chunk, hd), jnp.float32)
+
+    pairs = jnp.asarray(
+        [(qi, ki) for qi in range(n) for ki in range(qi + 1)], jnp.int32
+    )
+
+    def body(carry, pair):
+        m, l, o = carry
+        qi, ki = pair[0], pair[1]
+        qb = jax.lax.dynamic_index_in_dim(qc, qi, axis=1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kc, ki, axis=1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, ki, axis=1, keepdims=False)
+        mask = jnp.where(qi == ki, causal, jnp.ones_like(causal))
+        mb, lb, ob = _block_attn(qb, kb, vb, scale, mask)
+        m_q = jax.lax.dynamic_index_in_dim(m, qi, axis=1, keepdims=False)
+        l_q = jax.lax.dynamic_index_in_dim(l, qi, axis=1, keepdims=False)
+        o_q = jax.lax.dynamic_index_in_dim(o, qi, axis=1, keepdims=False)
+        m2, l2, o2 = _merge(m_q, l_q, o_q, mb, lb, ob)
+        m = jax.lax.dynamic_update_index_in_dim(m, m2, qi, axis=1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l2, qi, axis=1)
+        o = jax.lax.dynamic_update_index_in_dim(o, o2, qi, axis=1)
+        return (m, l, o), None
+
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), pairs)
+    out = o / l[..., None]                         # (B,n,H,c,hd)
+    out = jnp.swapaxes(out, 2, 3).reshape(B, S, H, hd)  # (B,n,c,H,hd) → (B,S,H,hd)
+    return out.astype(q.dtype)
+
+
+def full_causal_attention(q, k, v):
+    """Reference O(S²)-memory attention (small shapes / tests only)."""
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,       # (B, 1, H, hd) — current token's queries
+    k_cache: jax.Array, # (B, Skv, KVH, hd)
+    v_cache: jax.Array, # (B, Skv, KVH, hd)
+    cache_len: jax.Array,  # (B,) valid prefix length per sequence
+) -> jax.Array:
+    """Single-token attention against the KV cache.
+
+    The cache's ``Skv`` dim may be sharded over the ``model`` axis
+    (context-parallel decode); the fp32 softmax reductions below then lower
+    to the flash-decode partial max/sum all-reduces under GSPMD.
+    """
+    B, Skv, KVH, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    if k_cache.dtype != q.dtype:  # fp8 KV cache: convert-on-load
+        k_cache = k_cache.astype(q.dtype)
+        v_cache = v_cache.astype(q.dtype)
+    qg = q.reshape(B, H, hd).reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Skv)[None, None, None, :]
+    valid = pos < cache_len[:, None, None, None]
+    s = jnp.where(valid, s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / l
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """x: (B,S,D); w_gate/w_up: (D,F); w_down: (F,D)."""
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    return shard(out, "batch", "seq", "embed")
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits over the (possibly padded) vocab; fp32 for the loss."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table,
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(
+    logits: jax.Array,   # (B, S, Vpad) fp32
+    labels: jax.Array,   # (B, S) int32
+    vocab_size: int,     # true (unpadded) vocab
+) -> jax.Array:
+    """Mean NLL with padded-vocab masking (granite's 49,155 → 49,168)."""
+    vpad = logits.shape[-1]
+    if vpad > vocab_size:
+        mask = (jnp.arange(vpad) < vocab_size)[None, None]
+        logits = jnp.where(mask, logits, _NEG_INF)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,200 @@
+"""Mamba2 SSD (state-space duality) layer — chunked scan formulation.
+
+Follows the SSD algorithm of arXiv:2405.21060 §6: the sequence is split
+into chunks; each chunk computes its quadratic intra-chunk attention-like
+term, plus a low-rank inter-chunk correction through the recurrent state
+``h ∈ (heads, head_dim, state)`` carried across chunks by a ``lax.scan``.
+This is also the pure-jnp oracle for the ``ssd_scan`` Pallas kernel.
+
+TPU adaptation note (DESIGN.md §3): the CUDA implementation fuses the
+chunk scan in a single kernel with warp-level parallel prefix sums; on TPU
+the chunk-level quadratic term maps naturally onto the MXU as (c × c)
+matmuls and the inter-chunk recurrence is a cheap VPU scan — the Pallas
+kernel mirrors exactly this split.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import Spec
+from repro.models.quant import deq
+from repro.sharding.logical import shard
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    D = cfg.d_model
+    DI = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    W = cfg.conv_width
+    # in_proj emits [z (DI), x (DI), B (N), C (N), dt (H)]
+    return {
+        "norm": Spec((D,), ("embed",), init="ones"),
+        "w_in": Spec((D, 2 * DI + 2 * N + H), ("embed", "inner")),
+        "conv_w": Spec((W, DI + 2 * N), ("conv", "inner"), scale=0.5),
+        "conv_b": Spec((DI + 2 * N,), ("inner",), init="zeros"),
+        "a_log": Spec((H,), ("ssm_heads",), init="small_a"),
+        "d_skip": Spec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": Spec((H,), ("ssm_heads",), init="zeros"),
+        "gate_norm": Spec((DI,), ("inner",), init="ones"),
+        "w_out": Spec((DI, D), ("inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :DI]
+    x = zxbcdt[..., DI : 2 * DI]
+    b = zxbcdt[..., 2 * DI : 2 * DI + N]
+    c = zxbcdt[..., 2 * DI + N : 2 * DI + 2 * N]
+    dt = zxbcdt[..., 2 * DI + 2 * N :]
+    return z, x, b, c, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, width W.  xbc: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(W):  # W is tiny (4): unrolled taps beat a conv op here
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunk_scan(
+    x: jax.Array,    # (B,S,H,P)
+    dt: jax.Array,   # (B,S,H) fp32, post-softplus
+    A: jax.Array,    # (H,) fp32, negative
+    b: jax.Array,    # (B,S,N)
+    c: jax.Array,    # (B,S,N)
+    chunk: int,
+    unroll: bool = False,
+) -> jax.Array:
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = L.pick_chunk(S, chunk)
+    nc = S // chunk
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc_ = b.reshape(B, nc, chunk, N)
+    cc_ = c.reshape(B, nc, chunk, N)
+
+    def body(h, inputs):
+        xk, dtk, bk, ck = inputs          # (B,c,H,P),(B,c,H),(B,c,N),(B,c,N)
+        a = dtk * A[None, None, :]        # (B,c,H) log-decay, ≤ 0
+        cum = jnp.cumsum(a, axis=1)       # inclusive cumulative log-decay
+        # intra-chunk: L[i,j] = exp(cum_i − cum_j) for i ≥ j (else 0).
+        # Mask BEFORE exp: the upper triangle has positive diffs whose exp
+        # overflows and would poison gradients through the where (the
+        # standard double-where trap).
+        diff = cum[:, :, None, :] - cum[:, None, :, :]     # (B,c,c,H)
+        ii = jnp.arange(xk.shape[1])
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        Lm = jnp.exp(jnp.where(causal, diff, -jnp.inf))    # (B,c,c,H)
+        cb = jnp.einsum("bin,bjn->bij", ck, bk,
+                        preferred_element_type=jnp.float32)  # (B,c,c)
+        w = cb[..., None] * Lm * dtk[:, None, :, :]        # (B,c,c,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xk.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bin,bhnp->bihp", ck, h) * jnp.exp(cum)[..., None]
+        # new state: h' = exp(cum_last)·h + Σ_j exp(cum_last − cum_j)·dt_j·B_j⊗x_j
+        decay_last = jnp.exp(cum[:, -1, :])                # (B,H)
+        w_state = jnp.exp(cum[:, -1, None, :] - cum) * dtk  # (B,c,H)
+        state_new = jnp.einsum(
+            "bjn,bjh,bjhp->bhnp", bk, w_state, xk.astype(jnp.float32)
+        )
+        h = h * decay_last[:, :, None, None] + state_new
+        return h, (y_intra + y_inter).astype(x.dtype)
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    if unroll:  # dry-run cost probes (see layers.blockwise_causal_attention)
+        h = h0
+        chunks = []
+        for ci in range(nc):
+            h, y = body(h, (xc[:, ci], dtc[:, ci], bc_[:, ci], cc_[:, ci]))
+            chunks.append(y)
+        return jnp.stack(chunks, axis=1).reshape(B, S, H, P)
+    inputs = (
+        jnp.swapaxes(xc, 0, 1), jnp.swapaxes(dtc, 0, 1),
+        jnp.swapaxes(bc_, 0, 1), jnp.swapaxes(cc_, 0, 1),
+    )
+    _, ys = jax.lax.scan(body, h0, inputs)                 # (nc,B,c,H,P)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, H, P)
+    return y
+
+
+def mamba_apply(cfg: ModelConfig, p, x: jax.Array, *, chunk: int = 0) -> jax.Array:
+    """Full-sequence SSD mixer (train / prefill)."""
+    chunk = chunk or cfg.ssm_chunk
+    B, S, D = x.shape
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xn = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,di->bsi", xn, deq(p["w_in"], xn.dtype))
+    z, xi, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(jnp.concatenate([xi, b, c], axis=-1), p["conv_w"], p["conv_b"])
+    xi, b, c = xbc[..., :DI], xbc[..., DI : DI + N], xbc[..., DI + N :]
+    xi = shard(xi.reshape(B, S, H, P), "batch", "seq", "ssm_heads", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        y = kops.ssd_scan(xi, dt, A, b, c, chunk=chunk)
+    else:
+        y = _ssd_chunk_scan(xi, dt, A, b, c, chunk, unroll=cfg.unroll)
+    y = y + xi * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, DI)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = L.rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, deq(p["w_out"], y.dtype))
+    return shard(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode path — O(1) state per layer
+# ---------------------------------------------------------------------------
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int):
+    """(conv_state, ssm_state) shapes for one layer."""
+    DI, N, H, P, W = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_head_dim, cfg.conv_width)
+    return (batch, W - 1, DI + 2 * N), (batch, H, N, P)
+
+
+def mamba_decode(cfg: ModelConfig, p, x: jax.Array, conv_state, ssm_state):
+    """One-token SSD step.  x: (B,1,D) → (out, conv_state', ssm_state')."""
+    B = x.shape[0]
+    DI, N, H, P, W = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_head_dim, cfg.conv_width)
+    xn = L.rms_norm(x[:, 0], p["norm"], cfg.norm_eps)          # (B,D)
+    zxbcdt = jnp.einsum("bd,di->bi", xn, deq(p["w_in"], xn.dtype))
+    z, xi, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([xi, b, c], axis=-1)             # (B,DI+2N)
+    window = jnp.concatenate([conv_state, xbc_new[:, None]], axis=1)  # (B,W,·)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    conv_state = window[:, 1:]
+    xi = conv_out[:, :DI].reshape(B, H, P)
+    b = conv_out[:, DI : DI + N]
+    c = conv_out[:, DI + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                            # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", b.astype(jnp.float32), dt,
+                     xi.astype(jnp.float32))
+    ssm_state = ssm_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), ssm_state)
+    y = y.astype(x.dtype) + xi * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, DI) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = L.rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, deq(p["w_out"], y.dtype))[:, None]
+    return out, conv_state, ssm_state

@@ -1,0 +1,472 @@
+"""Unified decoder assembly for all 10 assigned architectures.
+
+One spec/apply family per architecture *family*; layer stacks are
+``lax.scan``-ed over stacked params (hybrid scans over 8-layer
+superblocks), keeping HLO size and compile time flat in depth — essential
+for compiling 88-layer×512-device dry-runs on a single CPU host.
+
+Public surface (all pure functions of (cfg, params, ...)):
+
+* :func:`model_specs`       — parameter spec tree
+* :func:`forward`           — full-sequence logits (training / teacher forcing)
+* :func:`prefill`           — full-sequence → (cache, last-token logits)
+* :func:`decode_step`       — (cache, token) → (cache, logits)
+* :func:`cache_specs`       — abstract cache tree for the dry-run
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.params import Spec, stack_specs
+from repro.models.quant import deq
+from repro.sharding.logical import shard
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _superblock_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """One jamba superblock: slot 0 attention, slots 1..P-1 mamba; FFN
+    alternates dense (even slots) / MoE (odd slots)."""
+    P = cfg.attn_period
+    n_dense = (P + 1) // 2
+    n_moe = P // 2
+    return {
+        "attn": B.attn_specs(cfg),
+        "mamba": stack_specs(M.mamba_specs(cfg), P - 1),
+        "ffn_dense": stack_specs(B.mlp_specs(cfg), n_dense),
+        "ffn_moe": stack_specs(B.moe_specs(cfg), n_moe),
+    }
+
+
+def _block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm"):
+        return {"attn": B.attn_specs(cfg), "mlp": B.mlp_specs(cfg)}
+    if fam == "moe":
+        return {"attn": B.attn_specs(cfg), "moe": B.moe_specs(cfg)}
+    if fam == "ssm":
+        return {"mamba": M.mamba_specs(cfg)}
+    if fam == "hybrid":
+        return _superblock_specs(cfg)
+    raise ValueError(f"unknown family {fam}")
+
+
+def n_stacks(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.attn_period == 0
+        return cfg.n_layers // cfg.attn_period
+    return cfg.n_layers
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    specs: Dict[str, Any] = {
+        "embed": Spec((V, D), ("vocab", "embed"), scale=0.02),
+        "final_norm": Spec((D,), ("embed",), init="ones"),
+        "blocks": stack_specs(_block_specs(cfg), n_stacks(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = Spec((V, D), ("vocab", "embed"), scale=0.02)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block application
+# ---------------------------------------------------------------------------
+
+
+def _take(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _apply_block_seq(cfg: ModelConfig, p, x, positions):
+    """(x, aux) → (x', aux') for one stacked-layer element."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam in ("dense", "audio", "vlm"):
+        x = x + B.attn_apply(cfg, p["attn"], x, positions)
+        x = x + B.mlp_apply(cfg, p["mlp"], x)
+    elif fam == "moe":
+        x = x + B.attn_apply(cfg, p["attn"], x, positions)
+        out, aux = B.moe_apply(cfg, p["moe"], x)
+        x = x + out
+    elif fam == "ssm":
+        x = x + M.mamba_apply(cfg, p["mamba"], x)
+    elif fam == "hybrid":
+        P = cfg.attn_period
+
+        def apply_slot(s, p, x, aux):
+            if s == 0:
+                x = x + B.attn_apply(cfg, p["attn"], x, positions)
+            else:
+                x = x + M.mamba_apply(cfg, _take(p["mamba"], s - 1), x)
+            if s % 2 == 0:
+                x = x + B.mlp_apply(cfg, _take(p["ffn_dense"], s // 2), x)
+            else:
+                out, a = B.moe_apply(cfg, _take(p["ffn_moe"], s // 2), x)
+                x = x + out
+                aux = aux + a
+            return x, aux
+
+        for s in range(P):
+            if cfg.remat == "slot":
+                # per-slot remat: the backward recompute window is ONE
+                # layer instead of a whole 8-layer superblock (§Perf —
+                # jamba train_4k hillclimb)
+                x, aux = jax.checkpoint(
+                    functools.partial(apply_slot, s))(p, x, aux)
+            else:
+                x, aux = apply_slot(s, p, x, aux)
+    else:
+        raise ValueError(fam)
+    return x, aux
+
+
+def _backbone(cfg: ModelConfig, params, x, positions):
+    """Scan the stacked blocks; returns (hidden, total_aux)."""
+
+    def body(carry, layer_params):
+        x, aux = carry
+        # the remat-saved residual: optionally sequence-sharded ("act_seq")
+        x = shard(x, "batch", "act_seq", "embed")
+        block = functools.partial(_apply_block_seq, cfg)
+        if cfg.remat == "block":
+            block = jax.checkpoint(block)
+        x, a = block(layer_params, x, positions)
+        return (x, aux + a), None
+
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if cfg.unroll:  # dry-run cost probes
+        carry = carry0
+        for i in range(n_stacks(cfg)):
+            carry, _ = body(carry, _take(params["blocks"], i))
+        return carry
+    (x, aux), _ = jax.lax.scan(body, carry0, params["blocks"])
+    return x, aux
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    if cfg.input_mode == "embeddings":
+        x = batch["embeds"]
+    else:
+        x = L.embed(batch["tokens"], params["embed"])
+    return shard(x, "batch", "seq", "embed")
+
+
+def forward(
+    cfg: ModelConfig, params, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forcing logits over the full sequence → (logits, aux_loss)."""
+    x = _embed_inputs(cfg, params, batch)
+    Bsz, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+    x, aux = _backbone(cfg, params, x, positions)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """Abstract cache tree (Spec objects; materialize like params)."""
+    fam = cfg.family
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    nst = n_stacks(cfg)
+    out: Dict[str, Any] = {"len": Spec((batch,), (None,), init="zeros")}
+    if fam in ("dense", "audio", "vlm", "moe"):
+        kv = Spec((nst, batch, max_seq, KV, hd),
+                  ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                  init="zeros")
+        out.update(k=kv, v=kv)
+    elif fam == "ssm":
+        cs, ss = M.mamba_cache_shape(cfg, batch)
+        out.update(
+            conv=Spec((nst,) + cs, ("layers", "batch", None, "inner"), init="zeros"),
+            ssm=Spec((nst,) + ss, ("layers", "batch", "ssm_heads", None, None),
+                     init="zeros"),
+        )
+    elif fam == "hybrid":
+        P = cfg.attn_period
+        cs, ss = M.mamba_cache_shape(cfg, batch)
+        kv = Spec((nst, batch, max_seq, KV, hd),
+                  ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                  init="zeros")
+        out.update(
+            k=kv, v=kv,
+            conv=Spec((nst, P - 1) + cs,
+                      ("layers", None, "batch", None, "inner"), init="zeros"),
+            ssm=Spec((nst, P - 1) + ss,
+                     ("layers", None, "batch", "ssm_heads", None, None),
+                     init="zeros"),
+        )
+    else:
+        raise ValueError(fam)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig, params, batch: Dict[str, jax.Array], max_seq: int,
+    valid_len: Optional[jax.Array] = None,
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Process the prompt; return (cache, last-token logits).
+
+    The cache is allocated at ``max_seq`` (≥ prompt length) so subsequent
+    decode steps write in place.
+
+    ``valid_len`` (B,) supports right-padded *ragged* prompt batches
+    (continuous batching): causality makes padded key/values harmless for
+    attention; SSM layers zero ``dt``/``x`` beyond the valid prefix so the
+    carried state stops there; last-token logits are gathered per row.
+    """
+    x = _embed_inputs(cfg, params, batch)
+    Bsz, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+    if valid_len is not None:
+        seq_valid = positions < valid_len[:, None]  # (B,S) bool
+    else:
+        seq_valid = None
+    fam = cfg.family
+    pad = max_seq - S
+    cache_dtype = (x.dtype if cfg.kv_cache_dtype == "auto"
+                   else jnp.dtype(cfg.kv_cache_dtype))
+
+    def pad_kv(k):  # (B,S,KV,hd) → (B,max_seq,KV,hd)
+        k = k.astype(cache_dtype)
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    def body(carry, layer_params):
+        x = carry
+        # optional sequence-parallel residual stream (Korthikanti-style):
+        # with "act_seq"→model, the stream lives seq-sharded between blocks
+        # and GSPMD turns the two per-layer TP all-reduces into
+        # reduce-scatter + all-gather pairs (half the wire bytes)
+        x = shard(x, "batch", "act_seq", "embed")
+        ys = {}
+        if fam in ("dense", "audio", "vlm", "moe"):
+            out, (k, v) = B.attn_apply(cfg, layer_params["attn"], x, positions,
+                                       return_kv=True)
+            x = x + out
+            ys["k"], ys["v"] = pad_kv(k), pad_kv(v)
+            if fam == "moe":
+                out, _ = B.moe_apply(cfg, layer_params["moe"], x)
+                x = x + out
+            else:
+                x = x + B.mlp_apply(cfg, layer_params["mlp"], x)
+        elif fam == "ssm":
+            x, conv_s, ssm_s = _mamba_prefill(cfg, layer_params["mamba"], x,
+                                              seq_valid)
+            ys["conv"], ys["ssm"] = conv_s, ssm_s
+        elif fam == "hybrid":
+            P = cfg.attn_period
+            convs, ssms = [], []
+            for s in range(P):
+                if s == 0:
+                    out, (k, v) = B.attn_apply(cfg, layer_params["attn"], x,
+                                               positions, return_kv=True)
+                    x = x + out
+                    ys["k"], ys["v"] = pad_kv(k), pad_kv(v)
+                else:
+                    x, cs, ss = _mamba_prefill(
+                        cfg, _take(layer_params["mamba"], s - 1), x, seq_valid)
+                    convs.append(cs)
+                    ssms.append(ss)
+                if s % 2 == 0:
+                    x = x + B.mlp_apply(cfg, _take(layer_params["ffn_dense"], s // 2), x)
+                else:
+                    out, _ = B.moe_apply(cfg, _take(layer_params["ffn_moe"], s // 2), x)
+                    x = x + out
+            ys["conv"] = jnp.stack(convs)
+            ys["ssm"] = jnp.stack(ssms)
+        return x, ys
+
+    if cfg.unroll:  # dry-run cost probes
+        ys_list = []
+        for i in range(n_stacks(cfg)):
+            x, ys = body(x, _take(params["blocks"], i))
+            ys_list.append(ys)
+        caches = jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+    else:
+        x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if valid_len is None:
+        x_last = x[:, -1:]
+    else:  # ragged batch: per-row last valid position
+        idx = jnp.clip(valid_len - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x_last, table)[:, 0]
+    caches["len"] = (jnp.full((Bsz,), S, jnp.int32)
+                     if valid_len is None else valid_len.astype(jnp.int32))
+    return caches, logits
+
+
+def _mamba_prefill(cfg: ModelConfig, p, x, seq_valid=None):
+    """Run the mamba mixer over the full sequence AND produce final states.
+
+    ``seq_valid`` (B,S) masks right padding: dt→0 and x→0 beyond the valid
+    prefix freeze the carried SSM/conv state exactly at ``valid_len``.
+    """
+    out = M.mamba_apply(cfg, p, x)
+    if seq_valid is not None:
+        out = out * seq_valid[..., None].astype(out.dtype)
+    conv_s, ssm_s = _mamba_final_state(cfg, p, x, seq_valid)
+    return x + out, conv_s, ssm_s
+
+
+def _mamba_final_state(cfg: ModelConfig, p, x, seq_valid=None):
+    """State-only SSD pass returning (conv_state, ssm_state) after ``x``."""
+    Bsz, S, D = x.shape
+    DI, N, H, P_ = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    W = cfg.conv_width
+    xn = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,di->bsi", xn, deq(p["w_in"], xn.dtype))
+    _, xi, b, c, dt = M._split_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([xi, b, c], axis=-1)
+    if seq_valid is not None:
+        xbc_raw = xbc_raw * seq_valid[..., None].astype(xbc_raw.dtype)
+    # conv state: last W-1 (valid) raw inputs
+    if seq_valid is None:
+        conv_state = xbc_raw[:, -(W - 1):, :]
+        if S < W - 1:
+            conv_state = jnp.pad(xbc_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    else:
+        valid_len = jnp.sum(seq_valid.astype(jnp.int32), axis=1)  # (B,)
+        start = jnp.clip(valid_len - (W - 1), 0, max(S - (W - 1), 0))
+        conv_state = jax.vmap(
+            lambda row, s: jax.lax.dynamic_slice_in_dim(row, s, W - 1, axis=0)
+        )(xbc_raw, start)
+    xbc = M._causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xi2 = xbc[..., :DI].reshape(Bsz, S, H, P_)
+    b2 = xbc[..., DI : DI + N]
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if seq_valid is not None:
+        dtp = dtp * seq_valid[..., None].astype(jnp.float32)
+    a = dtp * A[None, None, :]
+    cum = jnp.cumsum(a, axis=1)
+    w_state = jnp.exp(cum[:, -1:, :] - cum) * dtp          # (B,S,H)
+    ssm_state = jnp.einsum("bsn,bsh,bshp->bhnp", b2, w_state,
+                           xi2.astype(jnp.float32))
+    return conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ModelConfig, params, cache: Dict[str, jax.Array], tokens: jax.Array
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """One greedy-decode step.  tokens: (B, 1) int32 → (cache', logits).
+
+    The stacked cache travels through the layer scan as *carry* with
+    per-layer ``dynamic_update_index_in_dim`` writes — XLA performs these
+    in place inside the while loop on the donated buffer, so decode holds
+    exactly ONE copy of the KV cache (a scan ``ys`` output would
+    double-buffer it: +12 GiB/device for mistral-large decode_32k).
+    """
+    fam = cfg.family
+    x = L.embed(tokens, params["embed"])
+    x = shard(x, "batch", None, "embed")
+    cache_len = cache["len"]
+
+    def _layer(x, layer_params, layer_cache):
+        ys = {}
+        if fam in ("dense", "audio", "vlm", "moe"):
+            out, k, v = B.attn_decode(cfg, layer_params["attn"], x,
+                                      layer_cache["k"], layer_cache["v"], cache_len)
+            x = x + out
+            ys["k"], ys["v"] = k, v
+            if fam == "moe":
+                out, _ = B.moe_apply(cfg, layer_params["moe"], x)
+                x = x + out
+            else:
+                x = x + B.mlp_apply(cfg, layer_params["mlp"], x)
+        elif fam == "ssm":
+            out, conv_s, ssm_s = M.mamba_decode(
+                cfg, layer_params["mamba"], x,
+                layer_cache["conv"], layer_cache["ssm"])
+            x = x + out
+            ys["conv"], ys["ssm"] = conv_s, ssm_s
+        elif fam == "hybrid":
+            P = cfg.attn_period
+            convs, ssms = [], []
+            for s in range(P):
+                if s == 0:
+                    out, k, v = B.attn_decode(cfg, layer_params["attn"], x,
+                                              layer_cache["k"], layer_cache["v"],
+                                              cache_len)
+                    x = x + out
+                    ys["k"], ys["v"] = k, v
+                else:
+                    out, cs, ss = M.mamba_decode(
+                        cfg, _take(layer_params["mamba"], s - 1), x,
+                        layer_cache["conv"][s - 1], layer_cache["ssm"][s - 1])
+                    x = x + out
+                    convs.append(cs)
+                    ssms.append(ss)
+                if s % 2 == 0:
+                    x = x + B.mlp_apply(cfg, _take(layer_params["ffn_dense"], s // 2), x)
+                else:
+                    out, _ = B.moe_apply(cfg, _take(layer_params["ffn_moe"], s // 2), x)
+                    x = x + out
+            ys["conv"] = jnp.stack(convs)
+            ys["ssm"] = jnp.stack(ssms)
+        return x, ys
+
+    layer_caches = {k: v for k, v in cache.items() if k != "len"}
+
+    def _update(caches, ys, i):
+        return {
+            k: jax.lax.dynamic_update_index_in_dim(
+                caches[k], v.astype(caches[k].dtype), i, 0)
+            for k, v in ys.items()
+        }
+
+    if cfg.unroll:  # dry-run cost probes
+        new_caches = dict(layer_caches)
+        for i in range(n_stacks(cfg)):
+            x, ys = _layer(x, _take(params["blocks"], i), _take(layer_caches, i))
+            new_caches = _update(new_caches, ys, i)
+    else:
+        def body(carry, layer_params):
+            x, caches, i = carry
+            layer_cache = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+                caches)
+            x, ys = _layer(x, layer_params, layer_cache)
+            return (x, _update(caches, ys, i), i + 1), None
+
+        (x, new_caches, _), _ = jax.lax.scan(
+            body, (x, layer_caches, jnp.zeros((), jnp.int32)), params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table)[:, 0]
+    new_caches["len"] = cache_len + 1
+    return new_caches, logits

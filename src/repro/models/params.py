@@ -1,0 +1,119 @@
+"""Parameter *specs*: shape + logical axes + initializer, as a pytree.
+
+Models are defined as spec trees plus pure ``apply`` functions.  Specs can
+be materialized three ways:
+
+* :func:`init_params` — real arrays (smoke tests, training, serving);
+* :func:`abstract_params` — ``jax.ShapeDtypeStruct`` with attached
+  ``NamedSharding`` (the multi-pod dry-run: lower + compile with **zero**
+  allocation);
+* :func:`param_shardings` — shardings only (jit ``in_shardings``).
+
+The FSDP convention: a spec's logical axis named ``embed`` on a *parameter*
+is rewritten to ``embed_fsdp`` (→ ``"data"`` mesh axis by default) so that
+weights/optimizer state are 2-D sharded while *activations'* ``embed`` stays
+replicated.  See ``repro.sharding.logical``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.logical import MeshContext, Rules, axes_to_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | small_a (mamba A_log)
+    scale: Optional[float] = None  # stddev override for normal init
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"spec rank mismatch: {self.shape} vs {self.axes}")
+
+    def fsdp_axes(self) -> Tuple[Optional[str], ...]:
+        """Parameter-storage axes: embed → embed_fsdp (ZeRO sharding)."""
+        return tuple("embed_fsdp" if a == "embed" else a for a in self.axes)
+
+
+SpecTree = Any  # pytree of Spec
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def stack_specs(tree: SpecTree, n: int) -> SpecTree:
+    """Prepend a scan-stacked ``layers`` dimension to every spec."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def _init_one(spec: Spec, key: jax.Array, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "small_a":
+        # mamba A_log init: log of Uniform[1, 16]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "normal":
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(tree: SpecTree, key: jax.Array, dtype=jnp.float32):
+    """Materialize real parameter arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        out.append(_init_one(spec, jax.random.fold_in(key, i), dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(
+    tree: SpecTree,
+    dtype,
+    mesh=None,
+    rules: Optional[Rules] = None,
+) -> Any:
+    """ShapeDtypeStructs (+shardings if mesh given) — dry-run stand-ins."""
+
+    def mk(spec: Spec):
+        sharding = (
+            axes_to_sharding(spec.fsdp_axes(), mesh, rules, shape=spec.shape)
+            if mesh is not None else None
+        )
+        return jax.ShapeDtypeStruct(spec.shape, dtype, sharding=sharding)
+
+    return jax.tree.map(mk, tree, is_leaf=is_spec)
+
+
+def param_shardings(tree: SpecTree, mesh, rules: Optional[Rules] = None):
+    return jax.tree.map(
+        lambda s: axes_to_sharding(s.fsdp_axes(), mesh, rules, shape=s.shape),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def param_count(tree: SpecTree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+def param_bytes(tree: SpecTree, bytes_per_param: int = 2) -> int:
+    return param_count(tree) * bytes_per_param

@@ -1,0 +1,5 @@
+from repro.serve.engine import Engine, GenResult
+from repro.serve.client import EngineClient
+from repro.serve.scheduler import Scheduler, Request
+
+__all__ = ["Engine", "GenResult", "EngineClient", "Scheduler", "Request"]

@@ -1,0 +1,69 @@
+"""EngineClient — the join operators' LLMClient backed by the JAX engine.
+
+This closes the loop of the reproduction: Algorithms 1–3 run unmodified
+against a model *hosted by this framework* instead of the OpenAI API.  The
+token budget ``t`` of the cost model is the engine's ``max_seq``; overflow
+is a real ``finish_reason == "length"`` from the decode loop.
+
+``oracle_answers=True`` (demo default) teacher-forces the rule-oracle's
+answer through the engine so every prompt still exercises real prefill /
+decode / cache / stop-string machinery with honest token accounting —
+random demo weights can't answer semantic questions, pretrained ones would.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.core.accounting import Usage
+from repro.core.llm_client import LLMClient, LLMResponse
+from repro.core.oracle import OracleLLM
+from repro.serve.engine import Engine
+
+
+class EngineClient(LLMClient):
+    def __init__(
+        self,
+        engine: Engine,
+        *,
+        oracle: Optional[OracleLLM] = None,
+    ):
+        self.engine = engine
+        self.oracle = oracle
+        self.context_limit = engine.max_seq
+
+    def count_tokens(self, text: str) -> int:
+        return self.engine.count_tokens(text)
+
+    def _expected(self, prompts: Sequence[str], max_tokens: int,
+                  stop: Optional[str]) -> Optional[List[str]]:
+        if self.oracle is None:
+            return None
+        return [
+            self.oracle._invoke_impl(p, max_tokens=max_tokens, stop=stop).text
+            for p in prompts
+        ]
+
+    def invoke(self, prompt: str, *, max_tokens: int,
+               stop: Optional[str] = None) -> LLMResponse:
+        return self.invoke_many([prompt], max_tokens=max_tokens, stop=stop)[0]
+
+    def invoke_many(
+        self,
+        prompts: Sequence[str],
+        *,
+        max_tokens: int,
+        stop: Optional[str] = None,
+    ) -> List[LLMResponse]:
+        expected = self._expected(prompts, max_tokens, stop)
+        results = self.engine.generate(
+            prompts, max_tokens=max_tokens, stop=stop, expected=expected
+        )
+        return [
+            LLMResponse(
+                text=r.text,
+                usage=Usage(r.prompt_tokens, r.completion_tokens),
+                finish_reason="stop" if r.finish_reason in ("stop", "eos") else "length",
+            )
+            for r in results
+        ]

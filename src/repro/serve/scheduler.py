@@ -1,0 +1,81 @@
+"""Request scheduler with token-budget admission control.
+
+The admission condition is literally the paper's Eq. (1): a wave of
+requests is admitted while the sum of prompt tokens plus reserved output
+tokens stays within the engine's per-wave budget
+(``slots × max_seq``) — the block join's batch-size optimizer and this
+scheduler are two views of the same constraint, one at the operator level,
+one at the serving level.
+
+Re-queue on failure: an engine exception re-queues in-flight requests
+(block-join prompts are idempotent — the paper's overflow path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.serve.engine import Engine, GenResult
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: str
+    max_tokens: int
+    stop: Optional[str] = None
+    expected: Optional[str] = None
+    result: Optional[GenResult] = None
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, *, max_retries: int = 2):
+        self.engine = engine
+        self.max_retries = max_retries
+        self.completed: Dict[int, GenResult] = {}
+
+    def _wave_budget(self) -> int:
+        return self.engine.slots * self.engine.max_seq
+
+    def _admit(self, queue: List[Request]) -> List[Request]:
+        wave: List[Request] = []
+        budget = self._wave_budget()
+        used = 0
+        while queue and len(wave) < self.engine.slots:
+            req = queue[0]
+            need = self.engine.count_tokens(req.prompt) + req.max_tokens
+            if wave and used + need > budget:
+                break
+            used += need
+            wave.append(queue.pop(0))
+        return wave
+
+    def run(self, requests: Sequence[Request]) -> Dict[int, GenResult]:
+        queue = list(requests)
+        retries: Dict[int, int] = {}
+        while queue:
+            wave = self._admit(queue)
+            stops = {r.stop for r in wave}
+            maxt = max(r.max_tokens for r in wave)
+            stop = stops.pop() if len(stops) == 1 else None
+            expected = None
+            if all(r.expected is not None for r in wave):
+                expected = [r.expected for r in wave]
+            try:
+                results = self.engine.generate(
+                    [r.prompt for r in wave], max_tokens=maxt, stop=stop,
+                    expected=expected,
+                )
+            except Exception:
+                # engine failure: re-queue the in-flight wave (idempotent)
+                for r in wave:
+                    retries[r.request_id] = retries.get(r.request_id, 0) + 1
+                    if retries[r.request_id] > self.max_retries:
+                        raise
+                queue = wave + queue
+                continue
+            for req, res in zip(wave, results):
+                req.result = res
+                self.completed[req.request_id] = res
+        return self.completed

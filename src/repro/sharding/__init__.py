@@ -1,0 +1,13 @@
+from repro.sharding.logical import (
+    DEFAULT_RULES,
+    MeshContext,
+    axes_to_sharding,
+    current_context,
+    shard,
+    use_mesh,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "MeshContext", "axes_to_sharding", "current_context",
+    "shard", "use_mesh",
+]

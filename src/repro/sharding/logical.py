@@ -1,0 +1,181 @@
+"""Logical-axis sharding (MaxText-style rules → GSPMD constraints).
+
+Every tensor in the model zoo is annotated with *logical* axis names
+(``batch``, ``embed``, ``heads``, ``experts``, …).  A rules table maps each
+logical axis to zero or more *mesh* axes; :func:`shard` applies the
+resulting ``NamedSharding`` via ``with_sharding_constraint``.  Outside a
+mesh context (CPU smoke tests) everything is a no-op, so the exact same
+model code runs on one device and on the 512-chip production mesh.
+
+The default rules implement the framework's baseline parallelism:
+
+* **DP**    activations' ``batch`` → ``("pod", "data")``
+* **TP**    ``heads`` / ``mlp`` / ``vocab`` / ``inner`` → ``"model"``
+* **EP**    ``experts`` → ``"model"`` (per-arch override when the expert
+  count doesn't divide the axis — e.g. grok's 8 experts on a 16-way axis
+  switch to ``expert_mlp`` TP instead, see configs)
+* **FSDP/ZeRO** params' ``embed`` → ``"data"`` (weights & optimizer state
+  2-D sharded; XLA inserts per-layer all-gathers, overlappable)
+* **Context parallelism** for decode: ``kv_seq`` → ``"model"`` (flash-decode
+  style partial softmax; GSPMD inserts the max/sum all-reduces)
+
+Per-arch overrides are part of each config (``sharding_overrides``) — this
+is where the perf hillclimbing iterates.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, MeshAxes]
+
+DEFAULT_RULES: Rules = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,          # activations keep embed replicated
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "kv_seq": "model",      # decode-time KV cache length (context parallel)
+    "inner": "model",       # mamba d_inner
+    "state": None,          # SSM state dim
+    "ssm_heads": "model",
+    "conv": None,
+    # MoE
+    "experts": "model",
+    "expert_mlp": None,
+    "groups": ("pod", "data"),
+    "capacity": None,
+    # params (weight matrices): FSDP axis
+    "embed_fsdp": "data",   # the `embed` dim *of parameters*
+    # remat-saved block inputs: sequence-sharded activation checkpointing
+    # (None = replicate over model; → "model" shrinks saved residuals 16×,
+    # at the cost of an all-gather on the recompute path — §Perf)
+    "act_seq": None,
+    # scan-stacked layer dim
+    "layers": None,
+    # never sharded
+    "_": None,
+}
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Mesh
+    rules: Rules
+
+    def resolve(
+        self,
+        logical: Sequence[Optional[str]],
+        shape: Optional[Sequence[int]] = None,
+    ) -> PartitionSpec:
+        """Map logical axes to a PartitionSpec.
+
+        When ``shape`` is provided, divisibility is enforced: a mesh axis
+        whose size doesn't divide the dimension is dropped (rightmost
+        first) — jit *argument* shardings reject uneven tiling, and the
+        assigned archs include odd dims (starcoder2's 36 heads before
+        padding, mamba2's 3352-wide in_proj, batch=1 long-context decode).
+        Dropping to replication is always semantically safe; the cost
+        shows up honestly in the roofline terms.
+        """
+        mesh_axis_names = set(self.mesh.axis_names)
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        used = set()
+        spec = []
+        for d, ax in enumerate(logical):
+            if ax is None:
+                spec.append(None)
+                continue
+            target = self.rules.get(ax, None)
+            if target is None:
+                spec.append(None)
+                continue
+            axes = (target,) if isinstance(target, str) else tuple(target)
+            # keep only axes that exist in this mesh and aren't used yet
+            axes = tuple(a for a in axes if a in mesh_axis_names and a not in used)
+            if shape is not None:
+                while axes:
+                    tile = 1
+                    for a in axes:
+                        tile *= sizes[a]
+                    if shape[d] % tile == 0:
+                        break
+                    axes = axes[:-1]  # drop rightmost until divisible
+            used.update(axes)
+            if not axes:
+                spec.append(None)
+            elif len(axes) == 1:
+                spec.append(axes[0])
+            else:
+                spec.append(axes)
+        return PartitionSpec(*spec)
+
+    def sharding(
+        self,
+        logical: Sequence[Optional[str]],
+        shape: Optional[Sequence[int]] = None,
+    ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(logical, shape))
+
+
+_local = threading.local()
+
+
+def current_context() -> Optional[MeshContext]:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Rules] = None, **overrides):
+    """Activate a mesh + rules for model code executed in this thread."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    merged.update(overrides)
+    prev = current_context()
+    _local.ctx = MeshContext(mesh=mesh, rules=merged)
+    try:
+        with mesh:
+            yield _local.ctx
+    finally:
+        _local.ctx = prev
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by its logical axes.
+
+    No-op outside a mesh context so the same model code runs unsharded.
+    """
+    ctx = current_context()
+    if ctx is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(
+            f"rank mismatch: array is {x.ndim}-D but got {len(logical)} axes {logical}"
+        )
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(logical, x.shape))
+
+
+def axes_to_sharding(
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Rules] = None,
+    shape: Optional[Sequence[int]] = None,
+    **overrides,
+) -> NamedSharding:
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    merged.update(overrides)
+    return MeshContext(mesh=mesh, rules=merged).sharding(logical, shape)

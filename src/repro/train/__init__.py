@@ -1,0 +1,7 @@
+from repro.train.optimizer import adamw_init, adamw_update, cosine_schedule
+from repro.train.train_step import TrainState, make_train_state, train_step
+
+__all__ = [
+    "adamw_init", "adamw_update", "cosine_schedule",
+    "TrainState", "make_train_state", "train_step",
+]

@@ -1,0 +1,117 @@
+"""AdamW + schedules, from scratch in pure JAX (no optax dependency).
+
+Distributed-optimization features:
+
+* **ZeRO sharding for free** — optimizer state mirrors parameter sharding
+  (params are 2-D sharded over (data, model) per the FSDP rules), so m/v
+  are fully sharded; no replica ever holds full optimizer state.
+* **Optimizer-state compression** — ``state_dtype=bfloat16`` halves m/v
+  memory (the difference that lets arctic-480b's optimizer fit v5e HBM;
+  see EXPERIMENTS.md §Dry-run).  Updates are computed in fp32 and the
+  state re-cast on store (stochastic-rounding hook included).
+* **Global-norm clipping** in fp32 across the whole pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32   # bf16 → compressed optimizer state
+    stochastic_round: bool = False
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cast_state(x: jax.Array, dtype, stochastic: bool, key) -> jax.Array:
+    if x.dtype == dtype:
+        return x
+    if stochastic and dtype == jnp.bfloat16:
+        # stochastic rounding: add uniform noise below the bf16 ulp
+        noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+        ulp = jnp.abs(x) * 2.0**-8 + 1e-38
+        return (x + noise * ulp).astype(dtype)
+    return x.astype(dtype)
+
+
+def adamw_update(
+    grads,
+    opt_state: Dict[str, Any],
+    params,
+    cfg: AdamWConfig,
+    lr,
+    *,
+    rng: Optional[jax.Array] = None,
+):
+    """One AdamW step → (new_params, new_opt_state, metrics)."""
+    grads, grad_norm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = opt_state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    key = rng if rng is not None else jax.random.PRNGKey(0)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_p = jax.tree.leaves(params)
+
+    new_p, new_m, new_v = [], [], []
+    for i, (g, m, v, p) in enumerate(zip(flat_g, flat_m, flat_v, flat_p)):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * cfg.b1 + gf * (1 - cfg.b1)
+        vf = v.astype(jnp.float32) * cfg.b2 + gf * gf * (1 - cfg.b2)
+        update = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (update + cfg.weight_decay * pf)
+        k = jax.random.fold_in(key, i)
+        new_p.append(pf.astype(p.dtype))
+        new_m.append(_cast_state(mf, cfg.state_dtype, cfg.stochastic_round, k))
+        new_v.append(_cast_state(vf, cfg.state_dtype, cfg.stochastic_round,
+                                 jax.random.fold_in(k, 1)))
+
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "count": count,
+    }
+    return new_params, new_state, {"grad_norm": grad_norm}

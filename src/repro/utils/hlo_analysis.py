@@ -1,0 +1,97 @@
+"""Extract collective-communication bytes from optimized (SPMD) HLO text.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+post-partitioning HLO: build a name → shape table from the instruction
+definitions, then for every collective op sum its *operand* byte sizes
+(the data a chip injects into the interconnect; the standard convention
+for the collective roofline term).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %name = bf16[128,1024]{1,0} all-gather(%operand), ...
+# The shape may carry a layout ({1,0}) and may be a tuple; we capture
+# everything between '=' and the op token preceding the first '('.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<shape>.*?)\s+(?P<op>[\w\-]+)\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape string (handles tuple shapes)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_OPERAND_NAME_RE = re.compile(r"%?([\w\.\-]+)")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-op-kind operand bytes (per device, per execution)."""
+    shapes: Dict[str, str] = {}
+    collectives: List[Tuple[str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape, op = m.group("name"), m.group("shape").strip(), m.group("op")
+        shapes[name] = shape
+        if op in COLLECTIVE_OPS or any(op.startswith(c + "-start") for c in COLLECTIVE_OPS):
+            base = op.replace("-start", "")
+            if base in COLLECTIVE_OPS:
+                # operand list: text between the first '(' after op and its ')'
+                idx = line.find(op + "(")
+                args = line[idx + len(op) + 1 :]
+                depth = 1
+                end = 0
+                for i, ch in enumerate(args):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                operand_names = _OPERAND_NAME_RE.findall(args[:end])
+                collectives.append((base, ",".join(operand_names)))
+
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    for base, operands in collectives:
+        for name in operands.split(","):
+            if name in shapes:
+                out[base] += _shape_bytes(shapes[name])
+    out["total"] = sum(out[op] for op in COLLECTIVE_OPS)
+    return out
+
+
+def count_ops(hlo_text: str, needle: str) -> int:
+    return sum(1 for line in hlo_text.splitlines() if f" {needle}(" in line)

@@ -1,0 +1,72 @@
+"""Accounting/ledger invariants + adaptive-join monotonicity properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GPT4_PRICING,
+    Ledger,
+    OracleLLM,
+    Pricing,
+    Usage,
+    adaptive_join,
+)
+from repro.core.accounting import merge_ledgers
+from repro.utils.roofline import tpu_pricing
+
+
+@given(st.lists(st.tuples(st.integers(0, 10_000), st.integers(0, 2_000)),
+                min_size=1, max_size=30),
+       st.floats(1e-6, 1e-3), st.floats(1.0, 50.0))
+@settings(max_examples=50, deadline=None)
+def test_ledger_cost_is_linear(usages, read_price, g):
+    pricing = Pricing(read_per_token=read_price,
+                      write_per_token=read_price * g)
+    ledger = Ledger()
+    for p, c in usages:
+        ledger.record(Usage(p, c))
+    total_p = sum(p for p, _ in usages)
+    total_c = sum(c for _, c in usages)
+    assert ledger.calls == len(usages)
+    assert ledger.cost(pricing) == pytest.approx(
+        total_p * read_price + total_c * read_price * g)
+    assert pricing.g == pytest.approx(g)
+
+
+def test_merge_ledgers():
+    a, b = Ledger(), Ledger()
+    a.record(Usage(10, 2))
+    b.record(Usage(5, 1), overflow=True)
+    m = merge_ledgers([a, b])
+    assert m.calls == 2 and m.prompt_tokens == 15
+    assert m.overflows == 1 and m.wasted_prompt_tokens == 5
+
+
+def test_adaptive_estimates_monotone_nondecreasing():
+    """Algorithm 3 only ever *increases* the selectivity estimate (§6.1:
+    decreases would risk later-batch overflows under skew)."""
+    import random
+
+    rng = random.Random(0)
+    r1 = [f"item {rng.randrange(3)}" for _ in range(20)]
+    r2 = [f"item {rng.randrange(3)}" for _ in range(20)]
+    pred = lambda a, b: a == b
+    oracle = OracleLLM(pred, context_limit=400)
+    res = adaptive_join(r1, r2, "equal", oracle, initial_estimate=1e-5,
+                        alpha=2.0)
+    estimates = [s["estimate"] for s in res.meta["schedule"]]
+    assert all(e2 >= e1 for e1, e2 in zip(estimates, estimates[1:]))
+    assert res.meta["rounds"] == len(estimates)
+
+
+def test_tpu_pricing_g_closed_form():
+    """g = peak·MFU·bytes_per_param / (2·HBM·batch), arch-independent."""
+    from repro.configs import get_config
+
+    for arch in ["granite-3-2b", "grok-1-314b"]:
+        p = tpu_pricing(get_config(arch), chips=16, batch=8)
+        expected_g = 197e12 * 0.5 * 1 / (2 * 819e9 * 8)
+        assert p.g == pytest.approx(expected_g, rel=1e-6)
+    # smaller decode batch → pricier output tokens
+    p1 = tpu_pricing(get_config("granite-3-2b"), batch=1)
+    assert p1.g == pytest.approx(expected_g * 8, rel=1e-6)

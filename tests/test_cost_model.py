@@ -1,0 +1,201 @@
+"""Property-based tests (hypothesis) for the paper's cost model & theory.
+
+Each test verifies one lemma/theorem of §3–§6 over randomized parameter
+space, not just the paper's worked examples.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batch_opt import (
+    InfeasibleBudget,
+    optimal_b1_continuous,
+    optimal_b2_continuous,
+    optimal_batch_sizes,
+)
+from repro.core.cost_model import (
+    JoinStats,
+    b2_on_boundary,
+    block_join_cost,
+    budget_lhs,
+    c_star,
+    cost_per_call,
+    num_calls,
+    tokens_per_call,
+    tuple_join_cost,
+)
+
+sizes = st.floats(min_value=1.0, max_value=200.0)
+sigmas = st.floats(min_value=1e-5, max_value=1.0)
+budgets = st.floats(min_value=500.0, max_value=16384.0)
+
+
+def make_stats(s1, s2, s3, p=50.0, r1=1000, r2=800):
+    return JoinStats(r1=r1, r2=r2, s1=s1, s2=s2, s3=s3, p=p)
+
+
+# ---------------------------------------------------------------------------
+# §3/§4 formulas
+# ---------------------------------------------------------------------------
+
+
+def test_tuple_cost_corollary_3_2():
+    stats = JoinStats(r1=10, r2=20, s1=30, s2=40, s3=2, p=50)
+    assert tuple_join_cost(stats, g=2.0) == 10 * 20 * (50 + 30 + 40 + 2)
+
+
+@given(sizes, sizes, st.floats(1.0, 8.0), sigmas)
+@settings(max_examples=50, deadline=None)
+def test_lemma_4_1_4_2_4_3(s1, s2, s3, sigma):
+    stats = make_stats(s1, s2, s3)
+    b1, b2 = 7, 13
+    toks = tokens_per_call(b1, b2, stats, sigma)
+    assert toks == pytest.approx(stats.p + b1 * s1 + b2 * s2 + b1 * b2 * sigma * s3)
+    cost = cost_per_call(b1, b2, stats, sigma, g=3.0)
+    assert cost == pytest.approx(
+        stats.p + b1 * s1 + b2 * s2 + b1 * b2 * sigma * s3 * 3.0)
+    assert num_calls(b1, b2, stats) == pytest.approx(
+        (stats.r1 / b1) * (stats.r2 / b2))
+    assert block_join_cost(b1, b2, stats, sigma, 3.0) == pytest.approx(
+        num_calls(b1, b2, stats) * cost)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 5.2 — cost minimized on the budget boundary
+# ---------------------------------------------------------------------------
+
+
+@given(sizes, sizes, st.floats(1.0, 8.0), sigmas, budgets,
+       st.floats(1.05, 3.0))
+@settings(max_examples=50, deadline=None)
+def test_theorem_5_2_scaling_up_never_hurts(s1, s2, s3, sigma, t, alpha):
+    stats = make_stats(s1, s2, s3)
+    b1, b2 = 3.0, 5.0
+    if budget_lhs(b1 * alpha, b2, stats, sigma) > t:
+        return  # scaled point infeasible — theorem precondition unmet
+    c_small = block_join_cost(b1, b2, stats, sigma, 1.0)
+    c_big = block_join_cost(b1 * alpha, b2, stats, sigma, 1.0)
+    assert c_big <= c_small * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 5.4 — b2(b1) lies exactly on the boundary
+# ---------------------------------------------------------------------------
+
+
+@given(sizes, sizes, st.floats(1.0, 8.0), sigmas, budgets)
+@settings(max_examples=50, deadline=None)
+def test_lemma_5_4_boundary(s1, s2, s3, sigma, t):
+    stats = make_stats(s1, s2, s3)
+    b1 = min(3.0, t / (2 * s1))
+    b2 = b2_on_boundary(b1, stats, sigma, t)
+    if b2 <= 0:
+        return
+    assert budget_lhs(b1, b2, stats, sigma) == pytest.approx(t, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 5.6 — the closed form minimizes c*(b1)
+# ---------------------------------------------------------------------------
+
+
+@given(sizes, sizes, st.floats(1.0, 8.0), sigmas, budgets)
+@settings(max_examples=50, deadline=None)
+def test_theorem_5_6_closed_form_is_minimum(s1, s2, s3, sigma, t):
+    stats = make_stats(s1, s2, s3)
+    b1_star = optimal_b1_continuous(s1, s2, s3, sigma, t)
+    if not (0 < b1_star and b1_star * s1 < t):
+        return
+    c_opt = c_star(b1_star, stats, sigma, 1.0, t)
+    for mult in (0.5, 0.8, 1.25, 2.0):
+        b1 = b1_star * mult
+        if not (0 < b1 and b1 * s1 < t and
+                b2_on_boundary(b1, stats, sigma, t) > 0):
+            continue
+        assert c_star(b1, stats, sigma, 1.0, t) >= c_opt * (1 - 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Integer optimizer == exhaustive grid argmin
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 40), st.integers(2, 40), st.integers(1, 4),
+       st.floats(0.001, 1.0), st.integers(200, 2000))
+@settings(max_examples=40, deadline=None)
+def test_integer_optimizer_matches_grid(s1, s2, s3, sigma, t):
+    stats = JoinStats(r1=60, r2=40, s1=s1, s2=s2, s3=s3, p=10)
+    try:
+        b1, b2 = optimal_batch_sizes(stats, sigma, t)
+    except InfeasibleBudget:
+        assert s1 + s2 + s3 * sigma > t
+        return
+    assert budget_lhs(b1, b2, stats, sigma) <= t + 1e-9
+
+    def true_cost(bb1, bb2):
+        calls = math.ceil(stats.r1 / bb1) * math.ceil(stats.r2 / bb2)
+        return calls * cost_per_call(bb1, bb2, stats, sigma, 1.0)
+
+    best = min(
+        (true_cost(bb1, bb2)
+         for bb1 in range(1, 61) for bb2 in range(1, 41)
+         if budget_lhs(bb1, bb2, stats, sigma) <= t),
+        default=None,
+    )
+    assert best is not None
+    assert true_cost(b1, b2) <= best * 1.02  # within 2% of the grid optimum
+
+
+# ---------------------------------------------------------------------------
+# Lemma 6.2 — b1*(σ) anti-monotone; Lemma 6.3/6.4 bounds; Theorem 6.5
+# ---------------------------------------------------------------------------
+
+
+@given(sizes, sizes, st.floats(1.0, 8.0), budgets,
+       st.floats(1e-4, 0.5), st.floats(1.1, 8.0))
+@settings(max_examples=50, deadline=None)
+def test_lemma_6_2_antimonotone(s1, s2, s3, t, sigma, factor):
+    lo = optimal_b1_continuous(s1, s2, s3, sigma, t)
+    hi = optimal_b1_continuous(s1, s2, s3, min(sigma * factor, 1.0), t)
+    assert hi <= lo + 1e-9
+
+
+@given(sizes, sizes, st.floats(1.0, 8.0), budgets,
+       st.floats(1e-4, 0.25), st.floats(1.1, 4.0))
+@settings(max_examples=50, deadline=None)
+def test_lemma_6_3_6_4(s1, s2, s3, t, e_over_alpha, alpha):
+    e = min(e_over_alpha * alpha, 1.0)
+    sigma = e_over_alpha  # σ = e/α ≤ σ ≤ e boundary case
+    b1_sigma = optimal_b1_continuous(s1, s2, s3, sigma, t)
+    b1_e = optimal_b1_continuous(s1, s2, s3, e, t)
+    if b1_sigma * s1 >= t or b1_e * s1 >= t:
+        return
+    assert b1_sigma <= alpha * b1_e + 1e-6  # Lemma 6.3
+    b2_sigma = optimal_b2_continuous(b1_sigma, s1, s2, s3, sigma, t)
+    b2_e = optimal_b2_continuous(b1_e, s1, s2, s3, e, t)
+    if b2_sigma <= 0 or b2_e <= 0:
+        return
+    assert b1_sigma * b2_sigma <= alpha * b1_e * b2_e * (1 + 1e-6)  # Lemma 6.4
+
+
+@given(sizes, sizes, st.floats(1.0, 8.0), budgets,
+       st.floats(1e-4, 0.25), st.floats(1.1, 4.0), st.floats(1.0, 3.0))
+@settings(max_examples=50, deadline=None)
+def test_theorem_6_5_cost_bound(s1, s2, s3, t, sigma, alpha, g):
+    """o(e, σ) ≤ α·g·o(σ, σ) for e ∈ [σ, α·σ]."""
+    e = min(sigma * alpha, 1.0)
+    stats = make_stats(s1, s2, s3)
+    b1_e = optimal_b1_continuous(s1, s2, s3, e, t)
+    b1_s = optimal_b1_continuous(s1, s2, s3, sigma, t)
+    if b1_e * s1 >= t or b1_s * s1 >= t:
+        return
+    b2_e = optimal_b2_continuous(b1_e, s1, s2, s3, e, t)
+    b2_s = optimal_b2_continuous(b1_s, s1, s2, s3, sigma, t)
+    if b2_e <= 0 or b2_s <= 0:
+        return
+    # cost with batch sizes tuned for e, actual selectivity σ
+    o_e = block_join_cost(b1_e, b2_e, stats, sigma, g)
+    o_s = block_join_cost(b1_s, b2_s, stats, sigma, g)
+    assert o_e <= alpha * g * o_s * (1 + 1e-6)

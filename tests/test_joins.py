@@ -1,0 +1,175 @@
+"""Join-operator correctness: property tests against brute-force truth."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    OracleLLM,
+    Overflow,
+    adaptive_join,
+    block_join,
+    embedding_join,
+    generate_statistics,
+    lotus_join,
+    tuple_join,
+)
+from repro.core.prompts import (
+    FINISHED,
+    block_prompt,
+    parse_block_prompt,
+    parse_index_pairs,
+    parse_tuple_prompt,
+    render_index_pairs,
+    tuple_prompt,
+)
+
+# ---------------------------------------------------------------------------
+# prompt render/parse round trips
+# ---------------------------------------------------------------------------
+
+texts = st.lists(
+    st.text(
+        alphabet=st.characters(blacklist_categories=("Cs", "Cc")),
+        min_size=1, max_size=40,
+    ).map(lambda s: " ".join(s.split()) or "x"),
+    min_size=1, max_size=8,
+)
+
+
+@given(texts, texts)
+@settings(max_examples=50, deadline=None)
+def test_block_prompt_roundtrip(b1, b2):
+    j = "the entries match"
+    p = block_prompt(b1, b2, j)
+    parsed = parse_block_prompt(p)
+    assert parsed is not None
+    pb1, pb2, pj = parsed
+    assert pj == j and pb1 == b1 and pb2 == b2
+
+
+@given(st.text(max_size=60).map(lambda s: " ".join(s.split()) or "x"),
+       st.text(max_size=60).map(lambda s: " ".join(s.split()) or "y"))
+@settings(max_examples=50, deadline=None)
+def test_tuple_prompt_roundtrip(t1, t2):
+    p = tuple_prompt(t1, t2, "cond")
+    parsed = parse_tuple_prompt(p)
+    assert parsed == (t1, t2, "cond")
+
+
+@given(st.lists(st.tuples(st.integers(1, 99), st.integers(1, 99)), max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_index_pairs_roundtrip(pairs):
+    text = render_index_pairs(pairs)
+    parsed, finished = parse_index_pairs(text)
+    assert finished and parsed == pairs
+    text_trunc = render_index_pairs(pairs, finished=False)
+    parsed, finished = parse_index_pairs(text_trunc)
+    assert parsed == pairs and (not finished or not pairs)
+
+
+# ---------------------------------------------------------------------------
+# operator equivalence vs brute force
+# ---------------------------------------------------------------------------
+
+
+def _scenario(n1, n2, seed, density):
+    import random
+
+    rng = random.Random(seed)
+    colors = [f"color{i}" for i in range(max(2, int(1 / max(density, 0.05))))]
+    r1 = [f"item {i} is {rng.choice(colors)}" for i in range(n1)]
+    r2 = [f"query {i} wants {rng.choice(colors)}" for i in range(n2)]
+    pred = lambda a, b: a.split()[-1] == b.split()[-1]
+    truth = {(i, k) for i, a in enumerate(r1) for k, b in enumerate(r2)
+             if pred(a, b)}
+    return r1, r2, pred, truth
+
+
+@given(st.integers(2, 12), st.integers(2, 12), st.integers(0, 10_000),
+       st.sampled_from([0.1, 0.3, 0.6]),
+       st.integers(1, 6), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_block_join_equals_truth(n1, n2, seed, density, b1, b2):
+    r1, r2, pred, truth = _scenario(n1, n2, seed, density)
+    oracle = OracleLLM(pred, context_limit=100_000)
+    res = block_join(r1, r2, "match", oracle, b1, b2)
+    assert res.pairs == truth
+
+
+@given(st.integers(2, 10), st.integers(2, 10), st.integers(0, 10_000),
+       st.sampled_from([0.1, 0.5]))
+@settings(max_examples=15, deadline=None)
+def test_all_llm_operators_agree(n1, n2, seed, density):
+    r1, r2, pred, truth = _scenario(n1, n2, seed, density)
+    mk = lambda: OracleLLM(pred, context_limit=100_000)
+    res_t = tuple_join(r1, r2, "match", mk())
+    res_a = adaptive_join(r1, r2, "match", mk(), initial_estimate=1e-3)
+    res_l = lotus_join(r1, r2, "match", mk())
+    assert res_t.pairs == res_a.pairs == res_l.pairs == truth
+
+
+def test_overflow_raised_and_adaptive_recovers():
+    r1, r2, pred, truth = _scenario(12, 12, 7, 0.5)
+    oracle = OracleLLM(pred, context_limit=260)
+    # batches far too large for this tiny window must overflow
+    with pytest.raises(Overflow):
+        block_join(r1, r2, "match", oracle, 12, 12)
+    # the adaptive operator retries its way to a feasible plan
+    res = adaptive_join(r1, r2, "match",
+                        OracleLLM(pred, context_limit=260),
+                        initial_estimate=1e-4)
+    assert res.pairs == truth
+    assert res.meta["rounds"] >= 1
+
+
+def test_adaptive_resume_saves_cost():
+    r1, r2, pred, truth = _scenario(24, 24, 3, 0.4)
+    base = dict(initial_estimate=1e-4, alpha=2.0)
+    o1 = OracleLLM(pred, context_limit=400)
+    full = adaptive_join(r1, r2, "match", o1, **base)
+    o2 = OracleLLM(pred, context_limit=400)
+    res = adaptive_join(r1, r2, "match", o2, resume=True, **base)
+    assert res.pairs == full.pairs == truth
+    if full.meta["rounds"] > 1:
+        assert res.ledger.prompt_tokens <= full.ledger.prompt_tokens
+
+
+def test_noise_consistency_across_operators():
+    """Tuple and block joins must see the SAME noisy answers."""
+    r1, r2, pred, truth = _scenario(8, 8, 1, 0.3)
+    mk = lambda: OracleLLM(pred, context_limit=100_000,
+                           fn_rate=0.3, fp_rate=0.1, noise_seed=5)
+    res_t = tuple_join(r1, r2, "match", mk())
+    res_b = block_join(r1, r2, "match", mk(), 4, 4)
+    assert res_t.pairs == res_b.pairs
+
+
+def test_embedding_join_modes():
+    r1, r2, pred, truth = _scenario(8, 8, 2, 0.3)
+    both = embedding_join(r1, r2, "", mode="both")
+    one = embedding_join(r1, r2, "", mode="r1")
+    assert len(one.pairs) == len(r1)
+    assert one.pairs <= both.pairs
+
+
+def test_generate_statistics_measures_data():
+    r1 = ["one two three"] * 10
+    r2 = ["a b c d e"] * 20
+    stats = generate_statistics(r1, r2, "cond")
+    assert stats.r1 == 10 and stats.r2 == 20
+    # tuple tokens plus the per-entry numbering overhead ("1. " = 2 tokens)
+    assert stats.s1 == 3 + 2 and stats.s2 == 5 + 2
+    assert stats.p > 10 and stats.s3 >= 3
+
+
+def test_generate_statistics_respects_client_counter():
+    """Statistics must live in the client's token space (byte tokenizers
+    see ~5× the word count; planning in the wrong space overflows)."""
+    r1, r2 = ["one two three"] * 4, ["a b"] * 4
+    words = generate_statistics(r1, r2, "cond")
+    bytes_ = generate_statistics(r1, r2, "cond",
+                                 counter=lambda s: len(s.encode()))
+    assert bytes_.s1 > 2 * words.s1
+    assert bytes_.p > 2 * words.p

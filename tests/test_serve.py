@@ -1,0 +1,82 @@
+"""Serving engine: ragged batched prefill, stop strings, scheduler,
+EngineClient-backed joins."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import block_join
+from repro.core.oracle import OracleLLM
+from repro.data.tokenizer import ByteTokenizer, HashWordTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import Engine, EngineClient, Request, Scheduler
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("granite-3-2b")
+    params = init_params(model_specs(cfg), KEY, jnp.float32)
+    tok = ByteTokenizer(cfg.vocab_size)
+    return Engine(cfg, params, tok, max_seq=512, slots=4)
+
+
+def test_ragged_batch_equals_solo(engine):
+    """A prompt decoded in a ragged batch must equal its solo decode."""
+    prompts = ["short one", "a rather much longer prompt with more tokens",
+               "mid size text"]
+    batch = engine.generate(prompts, max_tokens=8)
+    solo = [engine.generate([p], max_tokens=8)[0] for p in prompts]
+    for b, s in zip(batch, solo):
+        assert b.text == s.text
+        assert b.prompt_tokens == s.prompt_tokens
+
+
+def test_teacher_forced_stop_and_accounting(engine):
+    res = engine.generate(
+        ["Q: match?\nA:"], max_tokens=32, stop="Finished",
+        expected=["1,2; Finished"],
+    )[0]
+    assert res.text.rstrip().endswith("Finished")
+    assert res.finish_reason == "stop"
+    assert res.completion_tokens == len(engine.tokenizer.encode(
+        "1,2; Finished", bos=False))
+
+
+def test_max_tokens_truncation(engine):
+    res = engine.generate(
+        ["Q:"], max_tokens=5, expected=["averyveryverylongforcedanswer"],
+    )[0]
+    assert res.completion_tokens == 5
+    assert res.finish_reason == "length"
+
+
+def test_scheduler_admission_and_completion(engine):
+    reqs = [Request(i, f"prompt number {i}", max_tokens=4,
+                    expected=f"ans{i}") for i in range(9)]
+    done = Scheduler(engine).run(reqs)
+    assert set(done) == set(range(9))
+    for i, r in done.items():
+        assert r.completion_tokens > 0
+
+
+def test_engine_client_block_join(engine):
+    r1 = [f"item {c}" for c in ["red", "blue", "green", "teal"]]
+    r2 = [f"want {c}" for c in ["blue", "red", "teal", "green"]]
+    pred = lambda a, b: a.split()[-1] == b.split()[-1]
+    truth = {(i, k) for i, a in enumerate(r1) for k, b in enumerate(r2)
+             if pred(a, b)}
+    client = EngineClient(engine, oracle=OracleLLM(pred, context_limit=512))
+    res = block_join(r1, r2, "colors match", client, 2, 2, parallel=4)
+    assert res.pairs == truth
+    assert res.ledger.prompt_tokens > 0 and res.ledger.completion_tokens > 0
+
+
+def test_hashword_tokenizer_roundtrip():
+    tok = HashWordTokenizer(4096)
+    text = "Find indexes x,y such that 3,4; Finished"
+    ids = tok.encode(text, bos=False)
+    assert tok.decode(ids) == text

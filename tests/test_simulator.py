@@ -1,0 +1,73 @@
+"""§7.2 simulator: per-prompt simulation must agree with the closed-form
+cost model, and the adaptive join must respect the Theorem 6.5 bound."""
+
+import math
+
+import pytest
+
+from repro.core.accounting import GPT4_PRICING
+from repro.core.adaptive_join import adaptive_join
+from repro.core.batch_opt import optimal_batch_sizes
+from repro.core.block_join import block_join
+from repro.core.cost_model import cost_per_call
+from repro.core.simulator import SimParams, SimulatedLLM, synthetic_table
+
+
+def _run_block(params: SimParams, sigma_plan: float):
+    sim = SimulatedLLM(params)
+    stats = params.stats()
+    t = params.context_limit - params.p
+    b1, b2 = optimal_batch_sizes(stats, sigma_plan, t, params.g,
+                                 headroom=params.s3 + 1)
+    r1 = synthetic_table("a", params.r1)
+    r2 = synthetic_table("b", params.r2)
+    res = block_join(r1, r2, "sim", sim, b1, b2)
+    return res, (b1, b2)
+
+
+def test_simulated_cost_matches_formula():
+    p = SimParams(r1=600, r2=400, sigma=0.01)
+    res, (b1, b2) = _run_block(p, p.sigma)
+    stats = p.stats()
+    calls = math.ceil(p.r1 / b1) * math.ceil(p.r2 / b2)
+    assert res.ledger.calls == calls
+    # simulated tokens ≈ analytic expectation (sentinel ≈ +1/call)
+    expected_cost_tokens = calls * cost_per_call(b1, b2, stats, p.sigma, p.g)
+    simulated_tokens = (res.ledger.prompt_tokens
+                        + p.g * res.ledger.completion_tokens)
+    assert simulated_tokens == pytest.approx(expected_cost_tokens, rel=0.05)
+    # match count ≈ r1·r2·σ (deterministic carry)
+    assert len(res.pairs) == pytest.approx(p.r1 * p.r2 * p.sigma, rel=0.02)
+
+
+def test_block_conservative_never_overflows():
+    p = SimParams(r1=500, r2=300, sigma=0.05)
+    res, _ = _run_block(p, 1.0)  # Block-C reserves for σ=1
+    assert res.ledger.overflows == 0
+
+
+def test_adaptive_within_alpha_g_of_informed():
+    """Theorem 6.5/6.6: adaptive ≤ α·g × Block-I (+ the bounded retry
+    prefix, small at this size)."""
+    p = SimParams(r1=2000, r2=1000, sigma=0.004)
+    informed, _ = _run_block(p, p.sigma)
+    sim = SimulatedLLM(p)
+    res = adaptive_join(
+        synthetic_table("a", p.r1), synthetic_table("b", p.r2), "sim", sim,
+        initial_estimate=p.sigma / 100, alpha=p.alpha, stats=p.stats())
+    c_adaptive = res.cost(GPT4_PRICING)
+    c_informed = informed.cost(GPT4_PRICING)
+    assert c_adaptive <= p.alpha * p.g * c_informed * 1.10
+    # and in practice it lands very close (paper: within 0.1% at 10k rows)
+    assert c_adaptive <= 1.5 * c_informed
+
+
+def test_stochastic_mode_variance_triggers_adaptation():
+    p = SimParams(r1=400, r2=400, sigma=0.02, deterministic=False, seed=9)
+    sim = SimulatedLLM(p)
+    res = adaptive_join(
+        synthetic_table("a", p.r1), synthetic_table("b", p.r2), "sim", sim,
+        initial_estimate=p.sigma / 64, alpha=4.0, stats=p.stats())
+    assert res.meta["rounds"] >= 2  # optimistic start must overflow
+    expected = p.r1 * p.r2 * p.sigma
+    assert abs(len(res.pairs) - expected) < 6 * math.sqrt(expected)

@@ -1,0 +1,137 @@
+"""Training substrate: optimizer correctness, accumulation equivalence,
+checkpoint round-trips, trainer crash-resume."""
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import get_smoke_config
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from repro.train.train_step import make_train_state, train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adamw_matches_reference_formula():
+    """One step of our AdamW vs the textbook update, elementwise."""
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8,
+                      weight_decay=0.1, clip_norm=1e9)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    state = adamw_init(p, cfg)
+    new_p, new_state, _ = adamw_update(g, state, p, cfg, lr=1e-2)
+
+    m = 0.1 * np.array([0.1, 0.2, -0.3])
+    v = 0.01 * np.array([0.1, 0.2, -0.3]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    want = (np.array([1.0, -2.0, 3.0])
+            - 1e-2 * (mhat / (np.sqrt(vhat) + 1e-8)
+                      + 0.1 * np.array([1.0, -2.0, 3.0])))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-6)
+    assert int(new_state["count"]) == 1
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert norm == pytest.approx(10.0)
+    assert global_norm(clipped) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(0, peak_lr=1.0, warmup=10, total=100))
+    lr_w = float(cosine_schedule(10, peak_lr=1.0, warmup=10, total=100))
+    lr_end = float(cosine_schedule(100, peak_lr=1.0, warmup=10, total=100))
+    assert lr0 == 0.0 and lr_w == pytest.approx(1.0)
+    assert lr_end == pytest.approx(0.1, rel=1e-5)  # floor_frac
+
+
+def test_accumulation_equivalence():
+    """accum_steps=2 must produce (numerically) the same update as 1."""
+    cfg = get_smoke_config("yi-9b")
+    batch = {"tokens": jax.random.randint(KEY, (4, 32), 0, cfg.vocab_size)}
+    s1 = make_train_state(cfg, KEY, dtype=jnp.float32)
+    s2 = make_train_state(cfg, KEY, dtype=jnp.float32)
+    s1, m1 = train_step(cfg, s1, batch, accum_steps=1)
+    s2, m2 = train_step(cfg, s2, batch, accum_steps=2)
+    assert m1["loss"] == pytest.approx(m2["loss"], rel=1e-5)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     s1.params, s2.params)
+    assert max(jax.tree.leaves(d)) < 1e-5
+
+
+def test_bf16_optimizer_state_still_converges():
+    cfg = get_smoke_config("granite-3-2b")
+    ocfg = AdamWConfig(state_dtype=jnp.bfloat16)
+    state = make_train_state(cfg, KEY, dtype=jnp.float32, opt_cfg=ocfg)
+    batch = {"tokens": jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)}
+    losses = []
+    step = jax.jit(lambda s, b: train_step(cfg, s, b, opt_cfg=ocfg))
+    for _ in range(5):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert state.opt["m"]["final_norm"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_commit_protocol():
+    d = tempfile.mkdtemp()
+    try:
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "nested": {"b": jnp.ones((2,), jnp.int32)}}
+        save(d, 5, tree)
+        assert latest_step(d) == 5
+        out = restore(d, tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+        assert out["nested"]["b"].dtype == jnp.int32
+
+        # uncommitted checkpoint (no COMMIT marker) must be ignored
+        import os
+
+        os.makedirs(os.path.join(d, "step_9"), exist_ok=True)
+        assert latest_step(d) == 5
+    finally:
+        shutil.rmtree(d)
+
+
+def test_trainer_crash_resume():
+    from repro.train.trainer import SimulatedNodeFailure, Trainer, TrainerConfig
+
+    cfg = get_smoke_config("mamba2-130m")
+    d = tempfile.mkdtemp()
+
+    def batch_fn(step):
+        rng = np.random.default_rng(np.random.SeedSequence([0, step]))
+        return {"tokens": rng.integers(0, cfg.vocab_size, size=(2, 32),
+                                       dtype=np.int32)}
+
+    try:
+        tcfg = TrainerConfig(total_steps=8, checkpoint_every=3,
+                             checkpoint_dir=d, fail_at_step=5, log_every=100)
+        with pytest.raises(SimulatedNodeFailure):
+            Trainer(cfg, tcfg, batch_fn).run()
+        assert latest_step(d) == 3
+        tcfg2 = TrainerConfig(total_steps=8, checkpoint_every=3,
+                              checkpoint_dir=d, log_every=100)
+        state = Trainer(cfg, tcfg2, batch_fn).run()
+        assert int(state.step) == 8
+    finally:
+        shutil.rmtree(d)
