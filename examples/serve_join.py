@@ -3,10 +3,12 @@
 Hosts a reduced granite-3-2b on the serving stack (batched ragged
 prefill, KV-cache decode, stop-string handling = the ``Finished``
 sentinel, token accounting) and executes Algorithm 2/3 against it through
-:class:`EngineClient`.  Demo weights are random, so the oracle
-teacher-forces the answers — every forward pass, cache write and decode
-step still runs for real, with honest token accounting (see
-DESIGN.md §8).
+:class:`EngineClient`.  Block prompts are enqueued on the slot-refill
+continuous-batching executor and consumed as they complete — the moment a
+block's answer finishes, its cache slot is reused for the next queued
+block (no barrier waves; DESIGN.md §8).  Demo weights are random, so the
+oracle teacher-forces the answers — every forward pass, cache write and
+decode step still runs for real, with honest token accounting.
 
     PYTHONPATH=src python examples/serve_join.py
 """
@@ -32,27 +34,35 @@ def main() -> None:
     oracle = OracleLLM(sc.predicate, context_limit=1024)
     client = EngineClient(engine, oracle=oracle)
 
-    print("=== block join through the serving engine (batched waves of 4) ===")
-    res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4, parallel=4)
+    print("=== block join through the serving engine (slot-refill batching) ===")
+    res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4)
+    stats = client.executor.stats
     print(f"calls={res.ledger.calls} prompt_toks={res.ledger.prompt_tokens} "
           f"completion_toks={res.ledger.completion_tokens} "
-          f"f1={res.f1(sc.truth):.2f} wall={res.wall_time_s:.1f}s")
+          f"f1={res.f1(sc.truth):.2f} wall={res.wall_time_s:.1f}s "
+          f"decode_steps={stats.decode_steps} refills={stats.refills}")
 
     print("\n=== adaptive join (Alg. 3) through the engine ===")
     res = adaptive_join(sc.r1, sc.r2, sc.condition, client,
-                        initial_estimate=1e-3, parallel=4)
+                        initial_estimate=1e-3)
     print(f"rounds={res.meta['rounds']} calls={res.ledger.calls} "
           f"f1={res.f1(sc.truth):.2f}")
 
-    print("\n=== raw scheduler API: token-budget admission (paper Eq. 1) ===")
+    print("\n=== raw executor API: futures + Eq. (1) admission control ===")
+    ex = engine.executor()
+    handles = [ex.submit(f"Text: {t}\nAnswer:", max_tokens=8)
+               for t in sc.r1[:6]]
+    for h in ex.as_completed(handles):
+        r = h.result
+        if h.request_id < 3:
+            print(f"  req {h.request_id}: {r.prompt_tokens} in / "
+                  f"{r.completion_tokens} out ({r.finish_reason})")
+
+    print("\n=== scheduler facade: blocking run() over the executor ===")
     reqs = [Request(i, f"Text: {t}\nAnswer:", max_tokens=8)
-            for i, t in enumerate(sc.r1[:6])]
-    sched = Scheduler(engine)
-    done = sched.run(reqs)
-    for rid in sorted(done)[:3]:
-        r = done[rid]
-        print(f"  req {rid}: {r.prompt_tokens} in / {r.completion_tokens} out "
-              f"({r.finish_reason})")
+            for i, t in enumerate(sc.r1[:4])]
+    done = Scheduler(engine).run(reqs)
+    print(f"  completed {len(done)} requests")
 
 
 if __name__ == "__main__":

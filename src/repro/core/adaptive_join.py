@@ -59,7 +59,6 @@ def adaptive_join(
     initial_estimate: float = 1e-4,
     alpha: float = 4.0,
     resume: bool = False,
-    parallel: int = 1,
     max_rounds: int = 64,
     stats: Optional[JoinStats] = None,
 ) -> JoinResult:
@@ -69,9 +68,12 @@ def adaptive_join(
     by ``alpha`` each time the block join overflows; Theorem 6.5 bounds the
     resulting cost within ``alpha * g`` of the known-selectivity optimum.
 
-    ``resume`` / ``parallel`` are the beyond-paper extensions documented in
-    :func:`repro.core.block_join.block_join`; both default to the paper's
-    faithful behaviour (full restart, sequential blocks).
+    ``resume`` is the beyond-paper extension documented in
+    :func:`repro.core.block_join.block_join`; it defaults to the paper's
+    faithful behaviour (full restart).  Each round enqueues all of its
+    block prompts through the client's submission surface; on overflow the
+    still-queued blocks of the failed round are cancelled before the next,
+    cheaper-batched round starts.
 
     ``stats`` overrides GenerateStatistics — used by the §7.2 simulator,
     whose token accounting is formula-based rather than text-based.
@@ -81,7 +83,11 @@ def adaptive_join(
     t = client.context_limit - stats.p
     ledger = Ledger()
     e = max(initial_estimate, 1e-9)
-    completed: Optional[Dict[Tuple[int, int], Set[Tuple[int, int]]]] = (
+    # resume memo: solved tuple-range rectangles (sound across rounds even
+    # though each retry re-slices with different batch sizes — see
+    # block_join's ``completed`` docs)
+    completed: Optional[Dict[Tuple[int, int, int, int],
+                             Set[Tuple[int, int]]]] = (
         {} if resume else None
     )
     rounds = 0
@@ -99,7 +105,6 @@ def adaptive_join(
             result = block_join(
                 r1, r2, j, client, b1, b2,
                 completed=completed if resume else None,
-                parallel=parallel,
                 ledger=ledger,
             )
             result.meta.update({

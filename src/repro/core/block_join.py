@@ -2,18 +2,32 @@
 
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.accounting import Ledger
 from repro.core.join_types import JoinResult, Overflow, Timer
-from repro.core.llm_client import LLMClient, LLMResponse
+from repro.core.llm_client import LLMClient, LLMResponse, cancel_unfinished
 from repro.core.prompts import FINISHED, block_prompt, parse_index_pairs
 
 
 def _batches(n: int, b: int) -> List[Tuple[int, int]]:
     """Split ``range(n)`` into ``ceil(n/b)`` contiguous [lo, hi) slices."""
     return [(lo, min(lo + b, n)) for lo in range(0, n, b)]
+
+
+#: Resume-memo key: one solved block as a *global tuple-index rectangle*
+#: ``(lo1, hi1, lo2, hi2)``.  Rectangles stay meaningful when the adaptive
+#: join retries with different batch sizes — block *indices* would not.
+Rect = Tuple[int, int, int, int]
+
+
+def _covered(rect: Rect, completed: Dict[Rect, Set[Tuple[int, int]]]) -> bool:
+    """True iff ``rect`` lies inside a single already-solved rectangle."""
+    lo1, hi1, lo2, hi2 = rect
+    return any(
+        c1 <= lo1 and hi1 <= d1 and c2 <= lo2 and hi2 <= d2
+        for (c1, d1, c2, d2) in completed
+    )
 
 
 def _is_complete(resp: LLMResponse) -> bool:
@@ -37,8 +51,7 @@ def block_join(
     b1: int,
     b2: int,
     *,
-    completed: Optional[Dict[Tuple[int, int], Set[Tuple[int, int]]]] = None,
-    parallel: int = 1,
+    completed: Optional[Dict[Rect, Set[Tuple[int, int]]]] = None,
     ledger: Optional[Ledger] = None,
 ) -> JoinResult:
     """Paper Algorithm 2.
@@ -46,15 +59,25 @@ def block_join(
     Raises :class:`Overflow` as soon as any batch's answer is incomplete
     (the ``<Overflow>`` return in the pseudo-code).
 
-    Beyond-paper extensions (both default-off so the faithful baseline is
-    exactly the paper's):
+    All block prompts are enqueued up front through the client's
+    submission surface and completions are consumed *as they arrive*
+    (completion order, not submission order).  Against the serving engine
+    this is request-level slot-refill continuous batching — the paper's
+    §7.3 future work ("different blocks of input tuples could be processed
+    in parallel as well"); against sequential clients the handles resolve
+    lazily one at a time, which is exactly the paper's sequential loop.
+    On the first incomplete answer every block not yet completed is
+    cancelled: still-queued prompts are never paid for, making the
+    adaptive join's overflow restarts cheap.
 
-    * ``completed`` — memo of already-solved (batch1, batch2) index pairs;
-      the adaptive join's ``resume=True`` mode passes this so an overflow
-      retry does not re-pay for batches that already succeeded.
-    * ``parallel`` — number of block prompts submitted per
-      :meth:`LLMClient.invoke_many` wave (continuous batching through the
-      serving engine; the paper processes blocks sequentially).
+    ``completed`` (beyond-paper, default-off) is a memo of already-solved
+    blocks keyed by global tuple-index rectangle ``(lo1, hi1, lo2, hi2)``;
+    the adaptive join's ``resume=True`` mode passes this so an overflow
+    retry does not re-pay for blocks that already succeeded.  Keying by
+    rectangle (with containment checks) keeps the memo sound when retry
+    rounds use different batch sizes and when completions arrive out of
+    order through the executor: a block is skipped only if a solved
+    rectangle fully contains it.
     """
     if b1 < 1 or b2 < 1:
         raise ValueError(f"batch sizes must be >= 1, got {b1=} {b2=}")
@@ -70,49 +93,72 @@ def block_join(
         (i, k)
         for i in range(len(slices1))
         for k in range(len(slices2))
-        if (i, k) not in completed
+        if not _covered(slices1[i] + slices2[k], completed)
     ]
 
     with Timer() as timer:
-        for wave_start in range(0, len(work), max(1, parallel)):
-            wave = work[wave_start : wave_start + max(1, parallel)]
-            prompts = []
-            for (i, k) in wave:
-                lo1, hi1 = slices1[i]
-                lo2, hi2 = slices2[k]
-                prompts.append(block_prompt(r1[lo1:hi1], r2[lo2:hi2], j))
+        prompts: List[Tuple[Tuple[int, int], str, int]] = []
+        for (i, k) in work:
+            lo1, hi1 = slices1[i]
+            lo2, hi2 = slices2[k]
+            prompt = block_prompt(r1[lo1:hi1], r2[lo2:hi2], j)
             # Remaining budget for generation: the model's hard context
             # limit minus this prompt's tokens (Definition 2.2).
-            max_toks = min(client.max_completion_tokens(p) for p in prompts)
+            max_toks = client.max_completion_tokens(prompt)
             if max_toks <= 0:
                 raise Overflow(ledger)  # prompt alone exceeds the window
-            responses = client.invoke_many(prompts, max_tokens=max_toks, stop=FINISHED)
-            overflowed = False
-            for (i, k), resp in zip(wave, responses):
+            prompts.append(((i, k), prompt, max_toks))
+
+        handles = []
+        block_of = {}
+        try:
+            for key, prompt, max_toks in prompts:
+                h = client.submit(prompt, max_tokens=max_toks, stop=FINISHED)
+                handles.append(h)
+                block_of[id(h)] = key
+        except Exception:
+            cancel_unfinished(client, handles)
+            raise
+        overflowed = False
+        try:
+            for h in client.as_completed(list(handles)):
+                resp = h.result()
+                i, k = block_of[id(h)]
                 complete = _is_complete(resp)
                 ledger.record(resp.usage, overflow=not complete)
                 if not complete:
-                    overflowed = True
+                    if not overflowed:
+                        overflowed = True
+                        # Drop blocks nothing has been paid for yet;
+                        # blocks already in flight keep running — their
+                        # tokens are real cost the ledger must see, and
+                        # completing them feeds the resume memo, so the
+                        # loop consumes them before raising.
+                        for other in handles:
+                            if not other.done() and not other.started():
+                                client.cancel(other)
                     continue
-                lo1, _ = slices1[i]
-                lo2, _ = slices2[k]
-                n1 = slices1[i][1] - lo1
-                n2 = slices2[k][1] - lo2
+                lo1, hi1 = slices1[i]
+                lo2, hi2 = slices2[k]
+                n1, n2 = hi1 - lo1, hi2 - lo2
                 local, _ = parse_index_pairs(resp.text)
                 found = {
                     (lo1 + x - 1, lo2 + y - 1)
                     for x, y in local
                     if 1 <= x <= n1 and 1 <= y <= n2
                 }
-                completed[(i, k)] = found
+                completed[(lo1, hi1, lo2, hi2)] = found
                 pairs |= found
-            if overflowed:
-                raise Overflow(ledger, partial=pairs)
+        except Exception:
+            cancel_unfinished(client, handles)
+            raise
+        if overflowed:
+            raise Overflow(ledger, partial=pairs)
 
     return JoinResult(
         pairs=pairs,
         ledger=ledger,
         wall_time_s=timer.elapsed,
         meta={"operator": "block", "b1": b1, "b2": b2,
-              "calls": ledger.calls, "parallel": parallel},
+              "calls": ledger.calls},
     )

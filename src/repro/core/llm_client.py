@@ -14,13 +14,30 @@ Three implementations ship with the framework:
 
 The join algorithms are written against this interface only, so the paper's
 contribution (block/adaptive batching) is model- and backend-agnostic.
+
+Two invocation surfaces exist:
+
+* **Synchronous** — :meth:`LLMClient.invoke` / :meth:`LLMClient.invoke_many`.
+* **Submission** — :meth:`LLMClient.submit` returns an :class:`LLMHandle`
+  future; :meth:`LLMClient.as_completed` yields handles as their responses
+  arrive.  This is the surface the join operators use: enqueue every block
+  prompt up front, consume completions in *completion* order, and
+  :meth:`LLMClient.cancel` still-queued work on the first overflow (the
+  paper's §7.3 future work — "different blocks of input tuples could be
+  processed in parallel as well" — realized by the serving executor's
+  slot-refill continuous batching, DESIGN.md §8).
+
+The base-class implementation resolves handles lazily and sequentially, so
+any synchronous client gets correct submit semantics for free: a handle
+cancelled before its :meth:`~LLMHandle.result` is never invoked — and never
+paid for.
 """
 
 from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Iterable, Iterator, List, Optional, Sequence
 
 from repro.core.accounting import TokenCounter, Usage, count_tokens
 
@@ -37,6 +54,66 @@ class LLMResponse:
     text: str
     usage: Usage
     finish_reason: str  # "stop" | "length"
+
+
+class LLMHandle:
+    """Future for one submitted invocation.
+
+    The default implementation is *lazy*: the underlying ``invoke`` runs
+    the first time :meth:`result` is called, so cancelled handles cost
+    nothing.  Engine-backed clients override with true in-flight futures.
+    """
+
+    def __init__(self, client: "LLMClient", prompt: str, max_tokens: int,
+                 stop: Optional[str]):
+        self.prompt = prompt
+        self.max_tokens = max_tokens
+        self.stop = stop
+        self._client = client
+        self._response: Optional[LLMResponse] = None
+        self._cancelled = False
+
+    def done(self) -> bool:
+        return self._response is not None
+
+    def started(self) -> bool:
+        """True once the backend has begun (or finished) paying for this
+        invocation.  Lazy handles only start when resolved; engine-backed
+        handles start when their prompt is prefilled into a slot."""
+        return self._response is not None
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> bool:
+        """Cancel if not yet resolved; returns True on success."""
+        if self._response is not None:
+            return False
+        self._cancelled = True
+        return True
+
+    def result(self) -> LLMResponse:
+        if self._cancelled:
+            raise RuntimeError("cancelled invocation has no result")
+        if self._response is None:
+            self._response = self._client.invoke(
+                self.prompt, max_tokens=self.max_tokens, stop=self.stop)
+        return self._response
+
+
+def cancel_unfinished(client, handles) -> None:
+    """Best-effort cancel of every handle not yet resolved.
+
+    The standard exception-cleanup for the submission surface: a failure
+    while submitting or consuming must not orphan queued work on a shared
+    executor (later callers would silently pay for it).  Works for any
+    object pairing ``cancel(handle)`` with ``handle.done()`` — LLM clients
+    and the serving executor alike.
+    """
+    for h in handles:
+        if not h.done():
+            client.cancel(h)
 
 
 class LLMClient(abc.ABC):
@@ -66,6 +143,34 @@ class LLMClient(abc.ABC):
             :mod:`repro.core.block_join`.
         """
 
+    # -- submission surface ------------------------------------------------
+    def submit(
+        self,
+        prompt: str,
+        *,
+        max_tokens: int,
+        stop: Optional[str] = None,
+    ) -> LLMHandle:
+        """Enqueue one invocation; returns a future-like handle."""
+        return LLMHandle(self, prompt, max_tokens, stop)
+
+    def as_completed(self, handles: Iterable[LLMHandle]) -> Iterator[LLMHandle]:
+        """Yield handles as their responses complete.
+
+        Sequential clients resolve lazily in submission order; the
+        engine-backed client yields in true completion order (slot-refill
+        continuous batching).  Cancelled handles are skipped.
+        """
+        for h in handles:
+            if h.cancelled:
+                continue
+            h.result()
+            yield h
+
+    def cancel(self, handle: LLMHandle) -> bool:
+        """Cancel a submitted invocation that has not completed."""
+        return handle.cancel()
+
     def invoke_many(
         self,
         prompts: Sequence[str],
@@ -73,14 +178,15 @@ class LLMClient(abc.ABC):
         max_tokens: int,
         stop: Optional[str] = None,
     ) -> List[LLMResponse]:
-        """Batched entry point.
-
-        The default implementation is sequential; the serving-engine client
-        overrides this with true continuous batching (the paper's noted
-        future work: "different blocks of input tuples could be processed in
-        parallel as well", §7.3).
-        """
-        return [self.invoke(p, max_tokens=max_tokens, stop=stop) for p in prompts]
+        """Batched entry point, built on the submission surface: all
+        prompts are enqueued up front, and engine-backed clients decode
+        them with request-level continuous batching."""
+        handles = [
+            self.submit(p, max_tokens=max_tokens, stop=stop) for p in prompts
+        ]
+        for _ in self.as_completed(list(handles)):
+            pass
+        return [h.result() for h in handles]
 
     def count_tokens(self, text: str) -> int:
         return count_tokens(text)

@@ -2,11 +2,12 @@
 
 from __future__ import annotations
 
+import itertools
 from typing import Sequence
 
 from repro.core.accounting import Ledger
 from repro.core.join_types import JoinResult, Timer
-from repro.core.llm_client import LLMClient
+from repro.core.llm_client import LLMClient, cancel_unfinished
 from repro.core.prompts import parse_yes_no, tuple_prompt
 
 
@@ -17,22 +18,52 @@ def tuple_join(
     client: LLMClient,
     *,
     max_answer_tokens: int = 1,
+    window: int = 256,
 ) -> JoinResult:
-    """Iterate over all tuple pairs, one LLM call each (paper Algorithm 1).
+    """Evaluate all tuple pairs, one LLM call each (paper Algorithm 1).
+
+    Every pair prompt is enqueued through the client's submission surface
+    and answers are consumed as they complete — against the serving engine
+    the per-pair calls stream through slot-refill continuous batching;
+    against sequential clients the lazy handles reproduce the paper's
+    one-call-at-a-time loop exactly.
 
     ``max_answer_tokens=1`` reproduces the paper's InvokeLLM configuration:
     "the implementation of InvokeLLM configures the language model to
     generate at most one single output token".
+
+    ``window`` bounds how many pair prompts are enqueued at once: the
+    cross product is |r1|·|r2| invocations, so materializing every handle
+    up front would cost quadratic memory for no throughput gain — the
+    engine only keeps ``slots`` requests decoding anyway.
     """
     ledger = Ledger()
     pairs = set()
+    index = ((i, k) for i in range(len(r1)) for k in range(len(r2)))
     with Timer() as timer:
-        for i, t1 in enumerate(r1):
-            for k, t2 in enumerate(r2):
-                prompt = tuple_prompt(t1, t2, j)
-                resp = client.invoke(prompt, max_tokens=max_answer_tokens)
-                ledger.record(resp.usage)
-                if parse_yes_no(resp.text):
-                    pairs.add((i, k))
+        while True:
+            chunk = list(itertools.islice(index, window))
+            if not chunk:
+                break
+            handles = []
+            pair_of = {}
+            try:
+                for i, k in chunk:
+                    h = client.submit(tuple_prompt(r1[i], r2[k], j),
+                                      max_tokens=max_answer_tokens)
+                    handles.append(h)
+                    pair_of[id(h)] = (i, k)
+            except Exception:
+                cancel_unfinished(client, handles)
+                raise
+            try:
+                for h in client.as_completed(handles):
+                    resp = h.result()
+                    ledger.record(resp.usage)
+                    if parse_yes_no(resp.text):
+                        pairs.add(pair_of[id(h)])
+            except Exception:
+                cancel_unfinished(client, handles)
+                raise
     return JoinResult(pairs=pairs, ledger=ledger, wall_time_s=timer.elapsed,
                       meta={"operator": "tuple"})

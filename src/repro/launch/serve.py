@@ -4,8 +4,10 @@
       --scenario ads --operator adaptive
 
 Production notes: on a TPU slice the engine compiles per prefill bucket
-once at startup; the scheduler's token-budget admission (paper Eq. 1)
-bounds per-wave HBM; engine failures re-queue idempotent block prompts.
+once at startup; the executor's token-budget admission (paper Eq. 1)
+bounds in-flight HBM while freed cache slots are refilled mid-decode
+(slot-refill continuous batching, DESIGN.md §8); engine failures re-queue
+idempotent block prompts.
 """
 
 from __future__ import annotations
@@ -48,11 +50,10 @@ def main() -> None:
     if args.operator == "tuple":
         res = tuple_join(sc.r1, sc.r2, sc.condition, client)
     elif args.operator == "block":
-        res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4,
-                         parallel=args.slots)
+        res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4)
     else:
         res = adaptive_join(sc.r1, sc.r2, sc.condition, client,
-                            initial_estimate=1e-3, parallel=args.slots)
+                            initial_estimate=1e-3)
 
     q = res.quality(sc.truth)
     print(f"{args.operator} join on {sc.name} via {cfg.name}: "

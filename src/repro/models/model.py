@@ -381,7 +381,8 @@ def _mamba_final_state(cfg: ModelConfig, p, x, seq_valid=None):
 
 
 def decode_step(
-    cfg: ModelConfig, params, cache: Dict[str, jax.Array], tokens: jax.Array
+    cfg: ModelConfig, params, cache: Dict[str, jax.Array], tokens: jax.Array,
+    active: Optional[jax.Array] = None,
 ) -> Tuple[Dict[str, jax.Array], jax.Array]:
     """One greedy-decode step.  tokens: (B, 1) int32 → (cache', logits).
 
@@ -390,6 +391,12 @@ def decode_step(
     in place inside the while loop on the donated buffer, so decode holds
     exactly ONE copy of the KV cache (a scan ``ys`` output would
     double-buffer it: +12 GiB/device for mistral-large decode_32k).
+
+    ``active`` (B,) bool supports slot-refill continuous batching
+    (DESIGN.md §8): rows whose request has finished (or whose slot is
+    empty, awaiting refill) keep a frozen ``len`` — their dummy-token
+    writes land on one fixed cache position and the whole row is
+    overwritten when a new request is prefilled into the slot.
     """
     fam = cfg.family
     x = L.embed(tokens, params["embed"])
@@ -468,5 +475,6 @@ def decode_step(
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = L.unembed(x, table)[:, 0]
-    new_caches["len"] = cache_len + 1
+    new_caches["len"] = cache_len + (
+        1 if active is None else active.astype(jnp.int32))
     return new_caches, logits

@@ -1,5 +1,22 @@
-from repro.serve.engine import Engine, GenResult
-from repro.serve.client import EngineClient
+from repro.serve.engine import DecodeState, Engine, GenResult, StopMatcher
+from repro.serve.executor import (
+    ContinuousBatchingExecutor,
+    ExecutorStats,
+    ServeHandle,
+)
+from repro.serve.client import EngineClient, EngineHandle
 from repro.serve.scheduler import Scheduler, Request
 
-__all__ = ["Engine", "GenResult", "EngineClient", "Scheduler", "Request"]
+__all__ = [
+    "ContinuousBatchingExecutor",
+    "DecodeState",
+    "Engine",
+    "EngineClient",
+    "EngineHandle",
+    "ExecutorStats",
+    "GenResult",
+    "Request",
+    "Scheduler",
+    "ServeHandle",
+    "StopMatcher",
+]

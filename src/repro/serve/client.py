@@ -5,6 +5,13 @@ against a model *hosted by this framework* instead of the OpenAI API.  The
 token budget ``t`` of the cost model is the engine's ``max_seq``; overflow
 is a real ``finish_reason == "length"`` from the decode loop.
 
+The client implements the :class:`~repro.core.llm_client.LLMClient`
+submission surface with true in-flight futures: ``submit`` enqueues the
+prompt on a :class:`~repro.serve.executor.ContinuousBatchingExecutor`,
+``as_completed`` yields responses in completion order while the executor
+refills freed cache slots mid-decode, and ``cancel`` drops still-queued
+prompts before they are ever prefilled (the block join's overflow path).
+
 ``oracle_answers=True`` (demo default) teacher-forces the rule-oracle's
 answer through the engine so every prompt still exercises real prefill /
 decode / cache / stop-string machinery with honest token accounting —
@@ -13,12 +20,49 @@ random demo weights can't answer semantic questions, pretrained ones would.
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Iterable, Iterator, List, Optional
 
 from repro.core.accounting import Usage
-from repro.core.llm_client import LLMClient, LLMResponse
+from repro.core.llm_client import LLMClient, LLMHandle, LLMResponse
 from repro.core.oracle import OracleLLM
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, GenResult
+from repro.serve.executor import ContinuousBatchingExecutor, ServeHandle
+
+
+def _to_response(r: GenResult) -> LLMResponse:
+    return LLMResponse(
+        text=r.text,
+        usage=Usage(r.prompt_tokens, r.completion_tokens),
+        finish_reason="stop" if r.finish_reason in ("stop", "eos") else "length",
+    )
+
+
+class EngineHandle(LLMHandle):
+    """LLMHandle wrapping a live executor request."""
+
+    def __init__(self, client: "EngineClient", serve_handle: ServeHandle):
+        super().__init__(client, serve_handle.prompt,
+                         serve_handle.max_tokens, serve_handle.stop)
+        self._serve = serve_handle
+
+    def done(self) -> bool:
+        return self._serve.status == "finished"
+
+    def started(self) -> bool:
+        return self._serve.status in ("active", "finished")
+
+    @property
+    def cancelled(self) -> bool:
+        return self._serve.status == "cancelled"
+
+    def cancel(self) -> bool:
+        return self._client.executor.cancel(self._serve)
+
+    def result(self) -> LLMResponse:
+        if self._response is None:
+            self._response = _to_response(
+                self._client.executor.result(self._serve))
+        return self._response
 
 
 class EngineClient(LLMClient):
@@ -30,40 +74,44 @@ class EngineClient(LLMClient):
     ):
         self.engine = engine
         self.oracle = oracle
+        self.executor = ContinuousBatchingExecutor(engine)
         self.context_limit = engine.max_seq
 
     def count_tokens(self, text: str) -> int:
         return self.engine.count_tokens(text)
 
-    def _expected(self, prompts: Sequence[str], max_tokens: int,
-                  stop: Optional[str]) -> Optional[List[str]]:
+    def _expected(self, prompt: str, max_tokens: int,
+                  stop: Optional[str]) -> Optional[str]:
         if self.oracle is None:
             return None
-        return [
-            self.oracle._invoke_impl(p, max_tokens=max_tokens, stop=stop).text
-            for p in prompts
-        ]
+        return self.oracle._invoke_impl(
+            prompt, max_tokens=max_tokens, stop=stop).text
 
-    def invoke(self, prompt: str, *, max_tokens: int,
-               stop: Optional[str] = None) -> LLMResponse:
-        return self.invoke_many([prompt], max_tokens=max_tokens, stop=stop)[0]
-
-    def invoke_many(
+    # -- submission surface (true continuous batching) ---------------------
+    def submit(
         self,
-        prompts: Sequence[str],
+        prompt: str,
         *,
         max_tokens: int,
         stop: Optional[str] = None,
-    ) -> List[LLMResponse]:
-        expected = self._expected(prompts, max_tokens, stop)
-        results = self.engine.generate(
-            prompts, max_tokens=max_tokens, stop=stop, expected=expected
+    ) -> EngineHandle:
+        serve = self.executor.submit(
+            prompt, max_tokens=max_tokens, stop=stop,
+            expected=self._expected(prompt, max_tokens, stop),
         )
-        return [
-            LLMResponse(
-                text=r.text,
-                usage=Usage(r.prompt_tokens, r.completion_tokens),
-                finish_reason="stop" if r.finish_reason in ("stop", "eos") else "length",
-            )
-            for r in results
-        ]
+        return EngineHandle(self, serve)
+
+    def as_completed(
+        self, handles: Iterable[LLMHandle]
+    ) -> Iterator[EngineHandle]:
+        wrapped = {h._serve.request_id: h for h in handles}
+        for serve in self.executor.as_completed(
+                [h._serve for h in wrapped.values()]):
+            h = wrapped[serve.request_id]
+            h._response = _to_response(serve.result)
+            yield h
+
+    # -- synchronous surface ----------------------------------------------
+    def invoke(self, prompt: str, *, max_tokens: int,
+               stop: Optional[str] = None) -> LLMResponse:
+        return self.submit(prompt, max_tokens=max_tokens, stop=stop).result()

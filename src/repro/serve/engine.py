@@ -1,14 +1,22 @@
-"""The serving engine: batched prefill + greedy decode with KV caches.
+"""The serving engine: batched prefill + an incremental slot API for
+continuous batching with KV caches.
 
 The paper's block-join prompts run through *this* (via
 :class:`repro.serve.client.EngineClient`) when an architecture is hosted:
 
 * **Ragged batched prefill** — prompts right-padded to a bucket length;
   causality + per-row ``valid_len`` make padding exact (see model.prefill).
-* **Continuous batching** — waves of up to ``slots`` requests decode
-  together; greedy sampling; per-row stop-string / EOS / max_tokens
-  termination — stop strings are the ``Finished`` sentinel mechanism of
-  Algorithm 2.
+* **Slot-refill continuous batching** — the engine exposes an incremental
+  slot API (:meth:`init_state` / :meth:`prefill_rows` / :meth:`insert_row`
+  / :meth:`decode_active`) driven by
+  :class:`repro.serve.executor.ContinuousBatchingExecutor`: each of the
+  ``slots`` cache rows hosts one request; the moment a row finishes it is
+  retired and a queued prompt is prefilled into the freed slot mid-decode —
+  no barrier between "waves" (DESIGN.md §8).
+* **Per-row termination** — greedy sampling; per-row stop-string / EOS /
+  ``max_tokens`` termination with O(1) incremental stop-string suffix
+  matching (:class:`StopMatcher`) — stop strings are the ``Finished``
+  sentinel mechanism of Algorithm 2.
 * **Token accounting** — real tokenizer counts, the same interface the
   cost model prices (prompt vs completion tokens).
 * **Teacher-forcing mode** — ``expected`` answers can be fed so the full
@@ -20,14 +28,17 @@ The paper's block-join prompts run through *this* (via
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.llm_client import cancel_unfinished
 from repro.models import decode_step, prefill
+from repro.models.model import cache_specs
+from repro.models.params import Spec, is_spec
 
 
 @dataclasses.dataclass
@@ -36,6 +47,56 @@ class GenResult:
     prompt_tokens: int
     completion_tokens: int
     finish_reason: str  # "stop" | "length" | "eos"
+
+
+class StopMatcher:
+    """Incremental ``text.rstrip().endswith(stop)`` in O(1) per token.
+
+    The old decode loop re-decoded the *entire* completion every step to
+    test the stop condition — O(n²) over a generation of n tokens.  This
+    matcher keeps only the last ``len(stop)`` characters of the
+    right-stripped text plus any still-trailing whitespace run, so each
+    :meth:`push` costs O(|piece| + |stop|) regardless of how much text has
+    been generated.
+
+    Pieces are per-token decodes; both shipped tokenizers decode
+    concatenatively, so the incremental stream equals the full decode
+    (stop strings are ASCII — the ``Finished`` sentinel convention of
+    DESIGN.md §8).
+    """
+
+    def __init__(self, stop: Optional[str]):
+        self.stop = stop
+        self._tail = ""     # last len(stop) chars of the rstripped text
+        self._pending = ""  # trailing whitespace, not yet made interior
+
+    def push(self, piece: str) -> bool:
+        """Append one decoded token; return True iff the stop now matches."""
+        if not self.stop:
+            return False
+        buf = self._tail + self._pending + piece
+        stripped = buf.rstrip()
+        # Only the last len(stop) chars of the whitespace run can ever be
+        # reached by a future suffix window — truncating keeps push() O(1)
+        # even through degenerate all-whitespace generations.
+        self._pending = buf[len(stripped):][-len(self.stop):]
+        self._tail = stripped[-len(self.stop):]
+        return self._tail == self.stop
+
+
+@dataclasses.dataclass
+class DecodeState:
+    """Device-side state of the ``slots``-wide continuous batch.
+
+    ``cache``  — batched KV/SSM cache tree (batch dim = engine.slots),
+    allocated once at ``max_seq`` capacity; rows are overwritten in place
+    as requests retire and new prompts are prefilled into freed slots.
+    ``logits`` — (slots, vocab) next-token logits per row (from prefill for
+    freshly inserted rows, from the last decode step otherwise).
+    """
+
+    cache: Any
+    logits: jax.Array
 
 
 def _bucket(n: int, buckets: Sequence[int]) -> int:
@@ -68,11 +129,110 @@ class Engine:
                 cfg, p, {"tokens": toks}, max_seq=self.max_seq, valid_len=vlen
             )
         )
-        self._decode = jax.jit(lambda p, cache, toks: decode_step(cfg, p, cache, toks))
+        self._decode = jax.jit(
+            lambda p, cache, toks, act: decode_step(cfg, p, cache, toks, active=act)
+        )
+        # Per-leaf batch axis of the cache tree, derived from the logical
+        # axis names in cache_specs — k/v carry batch at axis 1, the hybrid
+        # conv/ssm states at axis 2, "len" at axis 0.
+        self._batch_axes = jax.tree.map(
+            lambda s: s.axes.index("batch") if "batch" in s.axes else 0,
+            cache_specs(cfg, slots, max_seq),
+            is_leaf=is_spec,
+        )
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0, 1))
+        self._default_executor = None  # lazy, for the generate() facade
 
     # ------------------------------------------------------------------
     def count_tokens(self, text: str) -> int:
         return len(self.tokenizer.encode(text))
+
+    # ------------------------------------------------------------------
+    # Incremental slot API (driven by the executor — DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def init_state(self) -> DecodeState:
+        """Allocate the ``slots``-wide cache by prefilling placeholder rows.
+
+        Running the real (jitted) prefill on an all-pad batch yields a cache
+        with exactly the dtypes/shapes later row inserts will scatter into,
+        and shares its compilation with every future refill prefill.
+        """
+        B, L = self.slots, self.prefill_buckets[0]
+        toks = jnp.zeros((B, L), jnp.int32)
+        vlen = jnp.ones((B,), jnp.int32)
+        cache, logits = self._prefill(self.params, toks, vlen)
+        return DecodeState(cache=cache, logits=logits)
+
+    def prefill_rows(
+        self, prompts: Sequence[str]
+    ) -> Tuple[Any, jax.Array, List[int]]:
+        """Prefill up to ``slots`` prompts as one ragged batch.
+
+        The batch is padded to exactly ``slots`` rows so there is a single
+        compiled prefill per bucket length regardless of how many slots are
+        being refilled.  Returns ``(cache, logits, prompt_lens)``; row ``r``
+        of the cache/logits belongs to ``prompts[r]`` and is meant to be
+        scattered into a free slot with :meth:`insert_row`.
+        """
+        if not 0 < len(prompts) <= self.slots:
+            raise ValueError(f"prefill_rows takes 1..{self.slots} prompts")
+        ids = [self.tokenizer.encode(p) for p in prompts]
+        lens = [len(seq) for seq in ids]
+        if max(lens) > self.max_seq - 1:
+            raise ValueError(
+                f"prompt of {max(lens)} tokens exceeds engine max_seq {self.max_seq}"
+            )
+        L = _bucket(max(lens), self.prefill_buckets)
+        toks = np.zeros((self.slots, L), np.int32)
+        vlen = np.ones((self.slots,), np.int32)  # pad rows: 1 dummy token
+        for r, seq in enumerate(ids):
+            toks[r, : len(seq)] = seq
+            vlen[r] = len(seq)
+        cache, logits = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(vlen)
+        )
+        return cache, logits, lens
+
+    def insert_row(
+        self, state: DecodeState, cache: Any, logits: jax.Array,
+        row: int, slot: int,
+    ) -> None:
+        """Scatter row ``row`` of a prefilled cache into ``slot`` in place."""
+        state.cache, state.logits = self._insert(
+            state.cache, state.logits, cache, logits,
+            jnp.int32(row), jnp.int32(slot),
+        )
+
+    def _insert_impl(self, dst_cache, dst_logits, src_cache, src_logits,
+                     row, slot):
+        def put(dst, src, axis):
+            piece = jax.lax.dynamic_index_in_dim(src, row, axis, keepdims=True)
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, piece.astype(dst.dtype), slot, axis)
+
+        new_cache = jax.tree.map(put, dst_cache, src_cache, self._batch_axes)
+        new_logits = put(dst_logits, src_logits, 0)
+        return new_cache, new_logits
+
+    def decode_active(
+        self, state: DecodeState, tokens: np.ndarray, active: np.ndarray
+    ) -> None:
+        """One decode step over the batch; inactive rows keep a frozen
+        ``len`` (their writes are overwritten on the next refill)."""
+        state.cache, state.logits = self._decode(
+            self.params, state.cache,
+            jnp.asarray(tokens, jnp.int32)[:, None],
+            jnp.asarray(active, bool),
+        )
+
+    # ------------------------------------------------------------------
+    # Convenience facade
+    # ------------------------------------------------------------------
+    def executor(self, **kwargs):
+        """A fresh :class:`ContinuousBatchingExecutor` over this engine."""
+        from repro.serve.executor import ContinuousBatchingExecutor
+
+        return ContinuousBatchingExecutor(self, **kwargs)
 
     def generate(
         self,
@@ -82,78 +242,25 @@ class Engine:
         stop: Optional[str] = None,
         expected: Optional[Sequence[str]] = None,
     ) -> List[GenResult]:
-        results: List[GenResult] = []
-        for lo in range(0, len(prompts), self.slots):
-            wave = prompts[lo : lo + self.slots]
-            exp = expected[lo : lo + self.slots] if expected is not None else None
-            results.extend(self._run_wave(wave, max_tokens, stop, exp))
-        return results
-
-    # ------------------------------------------------------------------
-    def _run_wave(
-        self,
-        prompts: Sequence[str],
-        max_tokens: int,
-        stop: Optional[str],
-        expected: Optional[Sequence[str]],
-    ) -> List[GenResult]:
-        B = len(prompts)
-        ids = [self.tokenizer.encode(p) for p in prompts]
-        lens = np.array([len(i) for i in ids], np.int32)
-        if int(lens.max()) > self.max_seq - 1:
-            raise ValueError(
-                f"prompt of {lens.max()} tokens exceeds engine max_seq {self.max_seq}"
-            )
-        L = _bucket(int(lens.max()), self.prefill_buckets)
-        toks = np.zeros((B, L), np.int32)
-        for r, seq in enumerate(ids):
-            toks[r, : len(seq)] = seq
-        cache, logits = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(lens)
-        )
-
-        # teacher-forcing targets (demo mode): pre-encode the expected text
-        forced: Optional[List[List[int]]] = None
-        if expected is not None:
-            forced = [self.tokenizer.encode(e, bos=False) + [self.tokenizer.eos_id]
-                      for e in expected]
-
-        out_ids: List[List[int]] = [[] for _ in range(B)]
-        finish = ["length"] * B
-        alive = np.ones(B, bool)
-        budget = min(max_tokens, self.max_seq - int(lens.max()) - 1)
-
-        for step in range(max(budget, 0)):
-            if forced is not None:
-                nxt = np.array(
-                    [f[step] if step < len(f) else self.tokenizer.eos_id
-                     for f in forced], np.int32)
-            else:
-                nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-            for r in range(B):
-                if not alive[r]:
-                    continue
-                tok = int(nxt[r])
-                if tok == self.tokenizer.eos_id:
-                    alive[r] = False
-                    finish[r] = "stop"
-                    continue
-                out_ids[r].append(tok)
-                if stop is not None:
-                    text = self.tokenizer.decode(out_ids[r])
-                    if text.rstrip().endswith(stop):
-                        alive[r] = False
-                        finish[r] = "stop"
-            if not alive.any():
-                break
-            cache, logits = self._decode(self.params, cache, jnp.asarray(nxt)[:, None])
-
-        return [
-            GenResult(
-                text=self.tokenizer.decode(out_ids[r]),
-                prompt_tokens=int(lens[r]),
-                completion_tokens=len(out_ids[r]),
-                finish_reason=finish[r],
-            )
-            for r in range(B)
-        ]
+        """Synchronous batch API, now a facade over the executor: all
+        prompts are enqueued at once and decode with slot refill instead of
+        barrier waves (a request's budget/stop handling is per-row either
+        way)."""
+        if self._default_executor is None:
+            self._default_executor = self.executor()
+        ex = self._default_executor
+        handles = []
+        try:
+            for i, p in enumerate(prompts):
+                handles.append(ex.submit(
+                    p, max_tokens=max_tokens, stop=stop,
+                    expected=expected[i] if expected is not None else None,
+                ))
+        except Exception:
+            cancel_unfinished(ex, handles)
+            raise
+        try:
+            return [ex.result(h) for h in handles]
+        except Exception:
+            cancel_unfinished(ex, handles)
+            raise

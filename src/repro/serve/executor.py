@@ -1,0 +1,343 @@
+"""Request-level slot-refill continuous batching (DESIGN.md §8).
+
+This is the execution subsystem that unifies the paper's two batching
+levels: the block join's operator-level batching (how many tuples per
+prompt — Eq. (1)) and the serving engine's request-level batching (how many
+prompts decode together).  Callers :meth:`~ContinuousBatchingExecutor.submit`
+individual prompts — each with its *own* ``max_tokens`` and ``stop`` — and
+receive future-like handles; the executor:
+
+* **admits** queued requests under the paper's Eq. (1) token budget
+  (``slots × max_seq`` reserved prompt+completion tokens across the
+  active slots),
+* **prefills** admitted prompts into free cache slots *mid-decode* — the
+  moment a sequence finishes its row is retired and the next queued prompt
+  takes the slot; no barrier, so a slow request never stalls the others
+  (the §7.3 future-work parallelism, done the vLLM/SEMA way),
+* enforces ``max_tokens`` / stop strings / EOS **per row** with O(1)
+  incremental stop matching (:class:`repro.serve.engine.StopMatcher`),
+* **re-queues** in-flight requests on engine failure (block-join prompts
+  are idempotent — the paper's overflow path) up to ``max_retries``.
+
+The synchronous drive model: every call to :meth:`step` performs one
+refill+decode round; :meth:`as_completed` / :meth:`drain` / :meth:`result`
+loop over :meth:`step` until the requests a caller cares about resolve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, Iterable, Iterator, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import DecodeState, Engine, GenResult, StopMatcher
+
+QUEUED, ACTIVE, FINISHED, CANCELLED = "queued", "active", "finished", "cancelled"
+
+
+@dataclasses.dataclass(eq=False)
+class ServeHandle:
+    """Future-like handle for one submitted request (identity equality —
+    handles are unique live objects, never value-compared)."""
+
+    request_id: int
+    prompt: str
+    max_tokens: int
+    stop: Optional[str]
+    expected: Optional[str]
+    prompt_tokens: int
+    status: str = QUEUED
+    result: Optional[GenResult] = None
+    retries: int = 0
+    #: the executor that owns this handle (set by submit)
+    _owner: Optional[object] = dataclasses.field(default=None, repr=False)
+    # decode-time bookkeeping (populated on admission)
+    _slot: int = -1
+    _budget: int = 0
+    _emitted: int = 0
+    _out_ids: List[int] = dataclasses.field(default_factory=list)
+    _matcher: Optional[StopMatcher] = None
+    _forced: Optional[List[int]] = None
+
+    def done(self) -> bool:
+        return self.status in (FINISHED, CANCELLED)
+
+
+@dataclasses.dataclass
+class ExecutorStats:
+    """Throughput counters (the continuous-batching benchmark reads these)."""
+
+    decode_steps: int = 0
+    prefill_batches: int = 0
+    refills: int = 0
+    generated_tokens: int = 0
+
+
+class ContinuousBatchingExecutor:
+    def __init__(self, engine: Engine, *, max_retries: int = 2):
+        self.engine = engine
+        self.max_retries = max_retries
+        self.stats = ExecutorStats()
+        self._queue: Deque[ServeHandle] = deque()
+        self._slots: List[Optional[ServeHandle]] = [None] * engine.slots
+        self._state: Optional[DecodeState] = None
+        self._used = 0  # Eq. (1): prompt+reserved-completion tokens in flight
+        self._next_id = 0
+
+    # ------------------------------------------------------------------
+    # Submission side
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt: str,
+        *,
+        max_tokens: int,
+        stop: Optional[str] = None,
+        expected: Optional[str] = None,
+    ) -> ServeHandle:
+        """Enqueue one request; returns immediately with a handle."""
+        ntok = self.engine.count_tokens(prompt)
+        if ntok > self.engine.max_seq - 1:
+            raise ValueError(
+                f"prompt of {ntok} tokens exceeds engine max_seq "
+                f"{self.engine.max_seq}"
+            )
+        handle = ServeHandle(
+            request_id=self._next_id, prompt=prompt, max_tokens=max_tokens,
+            stop=stop, expected=expected, prompt_tokens=ntok, _owner=self,
+        )
+        self._next_id += 1
+        self._queue.append(handle)
+        return handle
+
+    def _check_owned(self, handle: ServeHandle) -> None:
+        if handle._owner is not self:
+            raise ValueError(
+                f"request {handle.request_id} belongs to a different "
+                "executor — waiting on it here would never resolve"
+            )
+
+    def cancel(self, handle: ServeHandle) -> bool:
+        """Cancel a queued (free) or active (abort decode) request.
+
+        Queued cancels cost nothing — this is what makes the block join's
+        overflow path cheap: blocks enqueued behind the first incomplete
+        answer are dropped before any prefill happens.
+        """
+        self._check_owned(handle)
+        if handle.status == QUEUED:
+            self._queue.remove(handle)
+            handle.status = CANCELLED
+            return True
+        if handle.status == ACTIVE:
+            self._free_slot(handle)
+            # its tokens never reach a result — keep throughput stats exact
+            self.stats.generated_tokens -= handle._emitted
+            handle.status = CANCELLED
+            return True
+        return False
+
+    @property
+    def pending(self) -> bool:
+        return bool(self._queue) or any(h is not None for h in self._slots)
+
+    # ------------------------------------------------------------------
+    # Drive side
+    # ------------------------------------------------------------------
+    def step(self) -> List[ServeHandle]:
+        """One refill + decode round; returns handles finished during it.
+
+        Engine failures re-queue the in-flight requests (idempotent
+        prompts) and count a retry against each; the failure is swallowed —
+        the next :meth:`step` starts them over on a fresh state — unless a
+        request has exhausted ``max_retries``.
+        """
+        try:
+            finished = self._step_inner()
+        except Exception:
+            exhausted = self._requeue_in_flight()
+            if exhausted:
+                raise
+            return []
+        if self._state is not None and not self.pending:
+            # fully idle: release the slots × max_seq cache (GiB-scale at
+            # real configs) — init_state rebuilds it on the next admission
+            self._state = None
+        return finished
+
+    def _step_inner(self) -> List[ServeHandle]:
+        finished: List[ServeHandle] = []
+        self._refill(finished)
+        occupied = [(s, h) for s, h in enumerate(self._slots) if h is not None]
+        if not occupied or self._state is None:
+            return finished
+        # argmax + device→host sync only when some row actually samples
+        # (teacher-forced rows know their next token without the logits)
+        nxt = None
+        if any(h._forced is None for _, h in occupied):
+            nxt = np.asarray(jnp.argmax(self._state.logits, axis=-1), np.int32)
+        tokens = np.zeros(self.engine.slots, np.int32)
+        active = np.zeros(self.engine.slots, bool)
+        eos = self.engine.tokenizer.eos_id
+        for slot, h in occupied:
+            if h._forced is not None:
+                tok = (h._forced[h._emitted] if h._emitted < len(h._forced)
+                       else eos)
+            else:
+                tok = int(nxt[slot])
+            if tok == eos:
+                self._retire(h, "stop", finished)
+                continue
+            h._out_ids.append(tok)
+            h._emitted += 1
+            self.stats.generated_tokens += 1
+            piece = self.engine.tokenizer.decode([tok])
+            if h._matcher.push(piece):
+                self._retire(h, "stop", finished)
+                continue
+            if h._emitted >= h._budget:
+                self._retire(h, "length", finished)
+                continue
+            tokens[slot] = tok
+            active[slot] = True
+        if active.any():
+            self.engine.decode_active(self._state, tokens, active)
+            self.stats.decode_steps += 1
+        return finished
+
+    def as_completed(
+        self, handles: Optional[Iterable[ServeHandle]] = None
+    ) -> Iterator[ServeHandle]:
+        """Yield handles in *completion* order, driving the engine as
+        needed.  With ``handles=None``, yields every request currently
+        pending in the executor."""
+        if handles is None:
+            waiting = [h for h in self._all_pending()]
+        else:
+            waiting = list(handles)
+            for h in waiting:
+                self._check_owned(h)
+        remaining: Dict[int, ServeHandle] = {}
+        for h in waiting:
+            if h.status == FINISHED:
+                yield h
+            elif h.status != CANCELLED:
+                remaining[h.request_id] = h
+        while remaining:
+            for h in self.step():
+                if h.request_id in remaining:
+                    del remaining[h.request_id]
+                    yield h
+            # resolved outside this loop (another consumer's step, or
+            # cancelled by an overflow consumer) — settle or drop
+            for rid, h in [(r, h) for r, h in remaining.items() if h.done()]:
+                del remaining[rid]
+                if h.status == FINISHED:
+                    yield h
+
+    def result(self, handle: ServeHandle) -> GenResult:
+        """Block (synchronously drive) until ``handle`` resolves."""
+        self._check_owned(handle)
+        while not handle.done():
+            self.step()
+        if handle.status == CANCELLED:
+            raise RuntimeError(f"request {handle.request_id} was cancelled")
+        return handle.result
+
+    def drain(self) -> None:
+        """Run until no request is queued or active."""
+        while self.pending:
+            self.step()
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+    def _all_pending(self) -> List[ServeHandle]:
+        active = [h for h in self._slots if h is not None]
+        return sorted(active + list(self._queue), key=lambda h: h.request_id)
+
+    def _need(self, h: ServeHandle) -> int:
+        return h.prompt_tokens + h.max_tokens
+
+    def _free_slot(self, h: ServeHandle) -> None:
+        self._slots[h._slot] = None
+        self._used -= self._need(h)
+
+    def _retire(self, h: ServeHandle, reason: str,
+                finished: List[ServeHandle]) -> None:
+        h.result = GenResult(
+            text=self.engine.tokenizer.decode(h._out_ids),
+            prompt_tokens=h.prompt_tokens,
+            completion_tokens=len(h._out_ids),
+            finish_reason=reason,
+        )
+        h.status = FINISHED
+        self._free_slot(h)
+        finished.append(h)
+
+    def _refill(self, finished: List[ServeHandle]) -> None:
+        """Admit queued requests into free slots under Eq. (1), then
+        prefill them as one ragged batch and scatter the rows in."""
+        budget = self.engine.slots * self.engine.max_seq
+        admitted: List[ServeHandle] = []
+        free = [s for s, h in enumerate(self._slots) if h is None]
+        while free and self._queue:
+            h = self._queue[0]
+            occupied = any(s is not None for s in self._slots) or admitted
+            if occupied and self._used + self._need(h) > budget:
+                break  # Eq. (1) exhausted; FIFO order preserved
+            self._queue.popleft()
+            h.status = ACTIVE
+            h._slot = free.pop(0)
+            self._used += self._need(h)
+            self._slots[h._slot] = h
+            admitted.append(h)
+        if not admitted:
+            return
+        if self._state is None:
+            self._state = self.engine.init_state()
+        cache, logits, lens = self.engine.prefill_rows(
+            [h.prompt for h in admitted])
+        self.stats.prefill_batches += 1
+        self.stats.refills += len(admitted)
+        tok = self.engine.tokenizer
+        for row, h in enumerate(admitted):
+            self.engine.insert_row(self._state, cache, logits, row, h._slot)
+            h._budget = min(h.max_tokens,
+                            self.engine.max_seq - h.prompt_tokens - 1)
+            h._emitted = 0
+            h._out_ids = []
+            h._matcher = StopMatcher(h.stop)
+            h._forced = (
+                tok.encode(h.expected, bos=False) + [tok.eos_id]
+                if h.expected is not None else None
+            )
+            if h._budget <= 0:  # prompt alone fills the context window
+                self._retire(h, "length", finished)
+
+    def _requeue_in_flight(self) -> bool:
+        """Engine failure: reset in-flight requests back onto the queue.
+
+        Returns True when some request has exhausted its retries (the
+        caller re-raises in that case).
+        """
+        in_flight = [h for h in self._slots if h is not None]
+        exhausted = False
+        for h in reversed(in_flight):
+            self._free_slot(h)
+            h.status = QUEUED
+            h._slot = -1
+            # tokens from the aborted attempt will be re-generated — back
+            # them out so throughput stats never double-count
+            self.stats.generated_tokens -= h._emitted
+            h._out_ids = []
+            h._emitted = 0
+            h.retries += 1
+            if h.retries > self.max_retries:
+                exhausted = True
+            self._queue.appendleft(h)
+        self._state = None  # decode state may be poisoned — rebuild
+        return exhausted

@@ -1,22 +1,23 @@
-"""Request scheduler with token-budget admission control.
+"""Synchronous scheduling facade over the continuous-batching executor.
 
-The admission condition is literally the paper's Eq. (1): a wave of
-requests is admitted while the sum of prompt tokens plus reserved output
-tokens stays within the engine's per-wave budget
-(``slots × max_seq``) — the block join's batch-size optimizer and this
-scheduler are two views of the same constraint, one at the operator level,
-one at the serving level.
-
-Re-queue on failure: an engine exception re-queues in-flight requests
-(block-join prompts are idempotent — the paper's overflow path).
+Historically this module *was* the batcher: it carved the queue into
+barrier waves under the paper's Eq. (1) token budget and ran each wave
+through ``Engine.generate`` — widening every request's ``max_tokens`` to
+the wave max and dropping stop strings whenever a wave mixed them.  Both
+the admission condition and the retry-on-failure policy now live in
+:class:`repro.serve.executor.ContinuousBatchingExecutor` (request-level
+slot refill, per-request budgets/stops enforced exactly); what remains
+here is the blocking ``run(requests) → {id: result}`` convenience API.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
+from repro.core.llm_client import cancel_unfinished
 from repro.serve.engine import Engine, GenResult
+from repro.serve.executor import ContinuousBatchingExecutor
 
 
 @dataclasses.dataclass
@@ -32,50 +33,27 @@ class Request:
 class Scheduler:
     def __init__(self, engine: Engine, *, max_retries: int = 2):
         self.engine = engine
-        self.max_retries = max_retries
+        self.executor = ContinuousBatchingExecutor(
+            engine, max_retries=max_retries)
         self.completed: Dict[int, GenResult] = {}
 
-    def _wave_budget(self) -> int:
-        return self.engine.slots * self.engine.max_seq
-
-    def _admit(self, queue: List[Request]) -> List[Request]:
-        wave: List[Request] = []
-        budget = self._wave_budget()
-        used = 0
-        while queue and len(wave) < self.engine.slots:
-            req = queue[0]
-            need = self.engine.count_tokens(req.prompt) + req.max_tokens
-            if wave and used + need > budget:
-                break
-            used += need
-            wave.append(queue.pop(0))
-        return wave
-
     def run(self, requests: Sequence[Request]) -> Dict[int, GenResult]:
-        queue = list(requests)
-        retries: Dict[int, int] = {}
-        while queue:
-            wave = self._admit(queue)
-            stops = {r.stop for r in wave}
-            maxt = max(r.max_tokens for r in wave)
-            stop = stops.pop() if len(stops) == 1 else None
-            expected = None
-            if all(r.expected is not None for r in wave):
-                expected = [r.expected for r in wave]
-            try:
-                results = self.engine.generate(
-                    [r.prompt for r in wave], max_tokens=maxt, stop=stop,
-                    expected=expected,
-                )
-            except Exception:
-                # engine failure: re-queue the in-flight wave (idempotent)
-                for r in wave:
-                    retries[r.request_id] = retries.get(r.request_id, 0) + 1
-                    if retries[r.request_id] > self.max_retries:
-                        raise
-                queue = wave + queue
-                continue
-            for req, res in zip(wave, results):
-                req.result = res
-                self.completed[req.request_id] = res
+        """Submit every request and block until all complete."""
+        submitted = []
+        by_id = {}
+        for req in requests:
+            h = self.executor.submit(
+                req.prompt, max_tokens=req.max_tokens, stop=req.stop,
+                expected=req.expected,
+            )
+            submitted.append(h)
+            by_id[h.request_id] = req
+        try:
+            for h in self.executor.as_completed(submitted):
+                req = by_id[h.request_id]
+                req.result = h.result
+                self.completed[req.request_id] = h.result
+        except Exception:
+            cancel_unfinished(self.executor, submitted)
+            raise
         return self.completed

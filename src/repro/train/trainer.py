@@ -92,6 +92,11 @@ class Trainer:
         start = int(state.step)
         for step in range(start, self.tcfg.total_steps):
             if self.tcfg.fail_at_step is not None and step == self.tcfg.fail_at_step:
+                # the injected failure models the *compute* node crashing;
+                # checkpoints already handed to the writer are a separate
+                # durability domain, so settle them first — otherwise the
+                # resume point depends on a race with the background thread
+                self.ckpt.wait()
                 raise SimulatedNodeFailure(f"injected failure at step {step}")
             batch = jax.tree.map(jnp.asarray, self.batch_fn(step))
             t0 = time.perf_counter()

@@ -1,6 +1,7 @@
 """Accounting/ledger invariants + adaptive-join monotonicity properties."""
 
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -7,6 +7,7 @@ space, not just the paper's worked examples.
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.batch_opt import (

@@ -3,6 +3,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -6,6 +6,7 @@ import sys
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
