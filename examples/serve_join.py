@@ -6,9 +6,14 @@ sentinel, token accounting) and executes Algorithm 2/3 against it through
 :class:`EngineClient`.  Block prompts are enqueued on the slot-refill
 continuous-batching executor and consumed as they complete — the moment a
 block's answer finishes, its cache slot is reused for the next queued
-block (no barrier waves; DESIGN.md §8).  Demo weights are random, so the
-oracle teacher-forces the answers — every forward pass, cache write and
-decode step still runs for real, with honest token accounting.
+block (no barrier waves; DESIGN.md §8).  Consecutive block prompts share
+their header + left-block bytes, so the engine's radix-tree KV prefix
+cache (DESIGN.md §9; disable with ``REPRO_PREFIX_CACHE=0``) serves the
+shared prefix from its paged pool and chunked-prefills only each
+prompt's right-block suffix — watch the ``cached_prompt_tokens`` split
+in the output below.  Demo weights are random, so the oracle
+teacher-forces the answers — every forward pass, cache write and decode
+step still runs for real, with honest token accounting.
 
     PYTHONPATH=src python examples/serve_join.py
 """
@@ -38,15 +43,22 @@ def main() -> None:
     res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4)
     stats = client.executor.stats
     print(f"calls={res.ledger.calls} prompt_toks={res.ledger.prompt_tokens} "
+          f"(cached={res.ledger.cached_prompt_tokens}) "
           f"completion_toks={res.ledger.completion_tokens} "
           f"f1={res.f1(sc.truth):.2f} wall={res.wall_time_s:.1f}s "
           f"decode_steps={stats.decode_steps} refills={stats.refills}")
+    cache = engine.prefix_cache_stats()
+    if cache is not None:
+        print(f"prefix cache: hit_rate={cache['hit_rate']:.2f} "
+              f"computed={stats.prefill_tokens_computed} "
+              f"cached={stats.prefill_tokens_cached} prefill tokens")
 
     print("\n=== adaptive join (Alg. 3) through the engine ===")
     res = adaptive_join(sc.r1, sc.r2, sc.condition, client,
                         initial_estimate=1e-3)
     print(f"rounds={res.meta['rounds']} calls={res.ledger.calls} "
-          f"f1={res.f1(sc.truth):.2f}")
+          f"f1={res.f1(sc.truth):.2f} "
+          f"prefix_cached_plan={res.meta['prefix_cached']}")
 
     print("\n=== raw executor API: futures + Eq. (1) admission control ===")
     ex = engine.executor()

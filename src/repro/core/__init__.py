@@ -27,10 +27,13 @@ from repro.core.block_join import block_join
 from repro.core.cost_model import (
     JoinStats,
     ModelParams,
+    block_join_computed_cost,
     block_join_cost,
     budget_lhs,
     b2_on_boundary,
     c_star,
+    cached_tokens_per_call,
+    computed_cost_per_call,
     cost_per_call,
     num_calls,
     tokens_per_call,
@@ -49,8 +52,10 @@ __all__ = [
     "simple_tokenize", "adaptive_join", "generate_statistics", "BatchPlan",
     "InfeasibleBudget", "optimal_b1_continuous", "optimal_b2_continuous",
     "optimal_batch_sizes", "plan", "block_join", "JoinStats", "ModelParams",
-    "block_join_cost", "budget_lhs", "b2_on_boundary", "c_star",
-    "cost_per_call", "num_calls", "tokens_per_call", "tuple_join_cost",
+    "block_join_computed_cost", "block_join_cost", "budget_lhs",
+    "b2_on_boundary", "c_star", "cached_tokens_per_call",
+    "computed_cost_per_call", "cost_per_call", "num_calls",
+    "tokens_per_call", "tuple_join_cost",
     "HashEmbedder", "embedding_join", "JoinResult", "Overflow", "Embedder",
     "LLMClient", "LLMResponse", "lotus_join", "OracleLLM", "SimParams",
     "SimulatedLLM", "synthetic_table", "tuple_join",

@@ -52,19 +52,32 @@ TokenCounter = Callable[[str], int]
 
 @dataclasses.dataclass(frozen=True)
 class Usage:
-    """Tokens read (prompt) and generated (completion) by one invocation."""
+    """Tokens read (prompt) and generated (completion) by one invocation.
+
+    ``cached_prompt_tokens`` (<= ``prompt_tokens``) is the prefix-cache
+    split: prompt tokens *served* from a KV prefix cache instead of being
+    recomputed (DESIGN.md §9).  They still occupy context (Definition 2.2
+    bounds prompt+completion regardless of caching) but cost no prefill
+    compute — and under cached-read pricing, less money.
+    """
 
     prompt_tokens: int
     completion_tokens: int
+    cached_prompt_tokens: int = 0
 
     @property
     def total_tokens(self) -> int:
         return self.prompt_tokens + self.completion_tokens
 
+    @property
+    def computed_prompt_tokens(self) -> int:
+        return self.prompt_tokens - self.cached_prompt_tokens
+
     def __add__(self, other: "Usage") -> "Usage":
         return Usage(
             self.prompt_tokens + other.prompt_tokens,
             self.completion_tokens + other.completion_tokens,
+            self.cached_prompt_tokens + other.cached_prompt_tokens,
         )
 
 
@@ -76,20 +89,29 @@ class Pricing:
     """Dollar cost per token read / generated.
 
     ``g = write_per_token / read_per_token`` is the paper's relative output
-    cost factor.
+    cost factor.  ``cached_read_per_token`` (None → same as
+    ``read_per_token``, preserving pre-cache numbers) prices prefix-cached
+    prompt tokens — API prompt caching bills them at a discount; a
+    self-hosted roofline prices them near zero (no prefill FLOPs, only
+    page copies).
     """
 
     read_per_token: float
     write_per_token: float
     name: str = "custom"
+    cached_read_per_token: Optional[float] = None
 
     @property
     def g(self) -> float:
         return self.write_per_token / self.read_per_token
 
     def cost(self, usage: Usage) -> float:
+        cached_rate = (self.read_per_token
+                       if self.cached_read_per_token is None
+                       else self.cached_read_per_token)
         return (
-            usage.prompt_tokens * self.read_per_token
+            usage.computed_prompt_tokens * self.read_per_token
+            + usage.cached_prompt_tokens * cached_rate
             + usage.completion_tokens * self.write_per_token
         )
 
@@ -105,6 +127,7 @@ class Ledger:
     calls: int = 0
     prompt_tokens: int = 0
     completion_tokens: int = 0
+    cached_prompt_tokens: int = 0  # prompt tokens served by the prefix cache
     overflows: int = 0
     wasted_prompt_tokens: int = 0  # prompt tokens of calls discarded by overflow
 
@@ -112,6 +135,7 @@ class Ledger:
         self.calls += 1
         self.prompt_tokens += usage.prompt_tokens
         self.completion_tokens += usage.completion_tokens
+        self.cached_prompt_tokens += usage.cached_prompt_tokens
         if overflow:
             self.overflows += 1
             self.wasted_prompt_tokens += usage.prompt_tokens
@@ -120,12 +144,14 @@ class Ledger:
         self.calls += other.calls
         self.prompt_tokens += other.prompt_tokens
         self.completion_tokens += other.completion_tokens
+        self.cached_prompt_tokens += other.cached_prompt_tokens
         self.overflows += other.overflows
         self.wasted_prompt_tokens += other.wasted_prompt_tokens
 
     @property
     def usage(self) -> Usage:
-        return Usage(self.prompt_tokens, self.completion_tokens)
+        return Usage(self.prompt_tokens, self.completion_tokens,
+                     self.cached_prompt_tokens)
 
     def cost(self, pricing: Pricing = GPT4_PRICING) -> float:
         return pricing.cost(self.usage)
@@ -135,6 +161,8 @@ class Ledger:
             "calls": self.calls,
             "prompt_tokens": self.prompt_tokens,
             "completion_tokens": self.completion_tokens,
+            "cached_prompt_tokens": self.cached_prompt_tokens,
+            "computed_prompt_tokens": self.prompt_tokens - self.cached_prompt_tokens,
             "total_tokens": self.prompt_tokens + self.completion_tokens,
             "overflows": self.overflows,
             "wasted_prompt_tokens": self.wasted_prompt_tokens,

@@ -61,6 +61,7 @@ def adaptive_join(
     resume: bool = False,
     max_rounds: int = 64,
     stats: Optional[JoinStats] = None,
+    prefix_cached: Optional[bool] = None,
 ) -> JoinResult:
     """Paper Algorithm 3.
 
@@ -77,9 +78,20 @@ def adaptive_join(
 
     ``stats`` overrides GenerateStatistics — used by the §7.2 simulator,
     whose token accounting is formula-based rather than text-based.
+
+    ``prefix_cached`` switches the batch-size objective to the
+    prefix-cache-aware computed-cost form (DESIGN.md §9): the shared
+    ``p + b1·s1`` prompt prefix is priced once per left block instead of
+    once per call.  ``None`` (default) auto-detects from the client —
+    :class:`repro.serve.client.EngineClient` advertises
+    ``prefix_cached=True`` when its engine runs the radix prefix cache.
+    The Eq. (1) *feasibility* window is unchanged either way (cached
+    tokens still occupy context), so overflow behaviour is identical.
     """
     stats = (stats if stats is not None
              else generate_statistics(r1, r2, j, counter=client.count_tokens))
+    if prefix_cached is None:
+        prefix_cached = bool(getattr(client, "prefix_cached", False))
     t = client.context_limit - stats.p
     ledger = Ledger()
     e = max(initial_estimate, 1e-9)
@@ -99,7 +111,8 @@ def adaptive_join(
                 f"adaptive join did not converge after {max_rounds} rounds"
             )
         eff_e = min(e, 1.0)  # selectivity can never exceed 1
-        b1, b2 = optimal_batch_sizes(stats, eff_e, t, headroom=stats.s3 + 1)
+        b1, b2 = optimal_batch_sizes(stats, eff_e, t, headroom=stats.s3 + 1,
+                                     prefix_cached=prefix_cached)
         schedule.append({"round": rounds, "estimate": eff_e, "b1": b1, "b2": b2})
         try:
             result = block_join(
@@ -113,6 +126,7 @@ def adaptive_join(
                 "final_estimate": eff_e,
                 "schedule": schedule,
                 "resume": resume,
+                "prefix_cached": prefix_cached,
             })
             return result
         except Overflow:

@@ -19,6 +19,8 @@ from repro.core.cost_model import (
     JoinStats,
     block_join_cost,
     budget_lhs,
+    cached_tokens_per_call,
+    computed_cost_per_call,
     cost_per_call,
 )
 
@@ -61,6 +63,7 @@ def optimal_batch_sizes(
     t: float,
     g: float = 1.0,
     headroom: float = 0.0,
+    prefix_cached: bool = False,
 ) -> Tuple[int, int]:
     """Integer optimal batch sizes under budget ``t`` for selectivity ``sigma``.
 
@@ -77,6 +80,16 @@ def optimal_batch_sizes(
     * ``headroom`` reserves extra output tokens beyond the expectation
       (executable operators pass ``s3 + 1`` so the terminating sentinel and
       one above-expectation pair always fit; analytic callers pass 0).
+
+    ``prefix_cached=True`` re-derives Eq. (1) for a serving stack with the
+    radix KV prefix cache (DESIGN.md §9): the *feasibility* constraint is
+    untouched — cached tokens still occupy the physical context window —
+    but the minimized objective counts only uncached input tokens
+    (:func:`repro.core.cost_model.block_join_computed_cost`): the shared
+    ``p + b1·s1`` prefix is paid once per left block instead of once per
+    call.  Amortizing the prefix this way shifts the optimum toward larger
+    left blocks (the budget the optimizer would have spent re-reading the
+    prefix is free to grow b1).
     """
     t = t - headroom
     s1, s2, s3 = stats.s1, stats.s2, stats.s3
@@ -98,7 +111,11 @@ def optimal_batch_sizes(
         return math.ceil(r2 / math.ceil(r2 / b2i))
 
     def _true_cost(b1i: int, b2i: int) -> float:
-        calls = math.ceil(r1 / b1i) * math.ceil(r2 / b2i)
+        outer = math.ceil(r1 / b1i)
+        calls = outer * math.ceil(r2 / b2i)
+        if prefix_cached:
+            return (outer * cached_tokens_per_call(b1i, b2i, stats)
+                    + calls * computed_cost_per_call(b1i, b2i, stats, sigma, g))
         return calls * cost_per_call(b1i, b2i, stats, sigma, g)
 
     b1c = optimal_b1_continuous(s1, s2, s3, sigma, t)
@@ -136,16 +153,30 @@ def optimal_batch_sizes(
     return best
 
 
-def plan(stats: JoinStats, sigma: float, t: float, g: float = 1.0) -> BatchPlan:
-    """Full plan with expected tokens/calls/cost for logging + benchmarks."""
-    b1, b2 = optimal_batch_sizes(stats, sigma, t, g)
-    calls = math.ceil(stats.r1 / b1) * math.ceil(stats.r2 / b2)
+def plan(stats: JoinStats, sigma: float, t: float, g: float = 1.0,
+         prefix_cached: bool = False) -> BatchPlan:
+    """Full plan with expected tokens/calls/cost for logging + benchmarks.
+
+    With ``prefix_cached=True`` the reported ``expected_cost`` is the
+    *computed*-token cost (the objective the optimizer minimized — the
+    shared prefix priced once per left block), so cached vs uncached
+    plans stay comparable on the axis each one optimizes.
+    """
+    b1, b2 = optimal_batch_sizes(stats, sigma, t, g,
+                                 prefix_cached=prefix_cached)
+    outer = math.ceil(stats.r1 / b1)
+    calls = outer * math.ceil(stats.r2 / b2)
     from repro.core.cost_model import cost_per_call, tokens_per_call
 
+    if prefix_cached:
+        cost = (outer * cached_tokens_per_call(b1, b2, stats)
+                + calls * computed_cost_per_call(b1, b2, stats, sigma, g))
+    else:
+        cost = calls * cost_per_call(b1, b2, stats, sigma, g)
     return BatchPlan(
         b1=b1,
         b2=b2,
         expected_tokens_per_call=tokens_per_call(b1, b2, stats, sigma),
         expected_calls=calls,
-        expected_cost=calls * cost_per_call(b1, b2, stats, sigma, g),
+        expected_cost=cost,
     )

@@ -22,7 +22,22 @@ Rect = Tuple[int, int, int, int]
 
 
 def _covered(rect: Rect, completed: Dict[Rect, Set[Tuple[int, int]]]) -> bool:
-    """True iff ``rect`` lies inside a single already-solved rectangle."""
+    """True iff ``rect`` lies inside a **single** already-solved rectangle.
+
+    Deliberately conservative: a rect covered only by the *union* of
+    several solved rectangles (e.g. two half-width blocks from a
+    smaller-batched earlier round tiling a later full-width block) is NOT
+    skipped, even though every tuple pair inside it has been decided.
+    Single-rectangle containment is a per-call guarantee — the block's
+    answer was complete under one invocation's token budget.  A union of
+    fragments carries no such guarantee for the combined block: each
+    fragment's completeness bounded only its own output, so treating the
+    union as solved would skip re-checking a block whose own answer might
+    have overflowed.  Re-paying the occasional union-covered block keeps
+    the memo sound under Algorithm 2's overflow semantics
+    (``tests/test_executor.py::test_covered_requires_single_rectangle``
+    pins this choice).
+    """
     lo1, hi1, lo2, hi2 = rect
     return any(
         c1 <= lo1 and hi1 <= d1 and c2 <= lo2 and hi2 <= d2
@@ -89,6 +104,11 @@ def block_join(
 
     slices1 = _batches(len(r1), b1)
     slices2 = _batches(len(r2), b2)
+    # Prefix-aware enqueue order (DESIGN.md §9): left-block-major, so the
+    # engine sees every right block of one left block back to back —
+    # their prompts share block_prompt_shared_prefix(r1[lo1:hi1], j)
+    # byte-for-byte, and the serving stack's radix prefix cache computes
+    # that prefix once per left block instead of once per call.
     work: List[Tuple[int, int]] = [
         (i, k)
         for i in range(len(slices1))

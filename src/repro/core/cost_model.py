@@ -104,6 +104,52 @@ def block_join_cost(
 
 
 # ---------------------------------------------------------------------------
+# Beyond-paper: prefix-cached cost split (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# With a KV prefix cache and the canonical prompt layout (header + left
+# block first), all ``r2/b2`` calls of one outer-loop iteration share the
+# ``p + b1·s1`` prefix: it is *computed* once per left block and *served*
+# from cache thereafter.  Cached tokens still occupy context (Definition
+# 2.2 — Eq. (1) is a physical window, caching does not widen it), so the
+# feasible region is unchanged; only the objective changes.
+
+
+def cached_tokens_per_call(b1: float, b2: float, stats: JoinStats) -> float:
+    """Expected prompt tokens served from cache per *warm* call: the
+    shared prefix ``p + b1·s1``."""
+    del b2  # the right block is never cached (it ends the prompt)
+    return stats.p + b1 * stats.s1
+
+
+def computed_cost_per_call(b1: float, b2: float, stats: JoinStats,
+                           sigma: float, g: float) -> float:
+    """Lemma 4.2 restricted to *computed* tokens of a warm call: the
+    uncached right block plus the (always computed) output."""
+    return b2 * stats.s2 + b1 * b2 * sigma * stats.s3 * g
+
+
+def block_join_computed_cost(
+    b1: float, b2: float, stats: JoinStats, sigma: float, g: float
+) -> float:
+    """Total computed cost under prefix caching (continuous).
+
+    Each of the ``r1/b1`` left blocks computes its shared prefix once
+    (cold call), then its ``r2/b2`` right blocks pay only the suffix:
+
+    ``(r1/b1)·(p + b1·s1) + (r1/b1)(r2/b2)·(b2·s2 + b1·b2·σ·s3·g)``
+
+    This is the Eq. (1) objective counting only uncached input tokens —
+    the budget *constraint* stays :func:`budget_lhs` (physical window).
+    """
+    outer = stats.r1 / b1
+    return outer * cached_tokens_per_call(b1, b2, stats) + (
+        num_calls(b1, b2, stats)
+        * computed_cost_per_call(b1, b2, stats, sigma, g)
+    )
+
+
+# ---------------------------------------------------------------------------
 # §5.1 — cost restricted to the token-budget boundary
 # ---------------------------------------------------------------------------
 

@@ -65,20 +65,44 @@ BLOCK_HEADER = (
 )
 
 
-def block_prompt(batch1: Sequence[str], batch2: Sequence[str], j: str) -> str:
-    """Function BlockPrompt in Algorithm 2 (paper Figure 2).
+def block_prompt_shared_prefix(batch1: Sequence[str], j: str) -> str:
+    """The **canonical prefix** of a block prompt: instruction header +
+    left-table block, byte-identical across every right block paired with
+    the same ``batch1``.
 
-    Entries are 1-indexed, matching the paper's template.
+    This is the unit of KV prefix reuse (DESIGN.md §9): ``block_prompt``
+    is *defined* as ``shared_prefix + variable_suffix``, and the golden
+    tests pin the byte split — any layout drift that moves right-block
+    content before left-block content silently zeroes the serving stack's
+    prefix-cache hit rate.
     """
-    lines = [BLOCK_HEADER.format(j=j)]
-    lines.append("Text Collection 1:")
+    lines = [BLOCK_HEADER.format(j=j), "Text Collection 1:"]
     for i, t in enumerate(batch1, start=1):
         lines.append(f"{i}. {t}")
-    lines.append("Text Collection 2:")
+    return "\n".join(lines) + "\n"
+
+
+def block_prompt_variable_suffix(batch2: Sequence[str]) -> str:
+    """The per-call remainder of a block prompt: right-table block +
+    answer cue.  Always rendered *after* the shared prefix."""
+    lines = ["Text Collection 2:"]
     for i, t in enumerate(batch2, start=1):
         lines.append(f"{i}. {t}")
     lines.append("Index pairs:")
     return "\n".join(lines)
+
+
+def block_prompt(batch1: Sequence[str], batch2: Sequence[str], j: str) -> str:
+    """Function BlockPrompt in Algorithm 2 (paper Figure 2).
+
+    Entries are 1-indexed, matching the paper's template.  The layout is
+    prefix-canonical: tuple-independent header first, then the left block
+    (constant across an outer-loop iteration), then the right block —
+    consecutive prompts over the same left block share
+    ``block_prompt_shared_prefix`` byte-for-byte.
+    """
+    return (block_prompt_shared_prefix(batch1, j)
+            + block_prompt_variable_suffix(batch2))
 
 
 _COLLECTION_RE = re.compile(

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import chunked_prefill as _cp
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rmsnorm as _rn
@@ -28,6 +29,15 @@ def _interpret() -> bool:
 def flash_attention(q, k, v, *, chunk: int = 512):
     return _fa.flash_attention(
         q, k, v, block_q=chunk, block_k=chunk, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunked_prefill_attention(q, k_suffix, v_suffix, k_prefix, v_prefix,
+                              prefix_len, *, chunk: int = 512):
+    return _cp.chunked_prefill_attention(
+        q, k_suffix, v_suffix, k_prefix, v_prefix, prefix_len,
+        block_q=chunk, block_k=chunk, interpret=_interpret(),
     )
 
 

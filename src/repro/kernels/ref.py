@@ -25,6 +25,36 @@ def flash_attention_ref(q, k, v):
     return o.reshape(B, S, H, hd).astype(q.dtype)
 
 
+def chunked_prefill_attention_ref(q, k_suffix, v_suffix, k_prefix, v_prefix,
+                                  prefix_len):
+    """Suffix queries over cached-prefix + causal-suffix keys.
+
+    q: (B,S,H,hd); k/v_suffix: (B,S,KV,hd); k/v_prefix: (B,P,KV,hd);
+    prefix_len: (B,) valid cached tokens (cols >= prefix_len are masked).
+    One softmax over the concatenated (P+S) context per query.
+    """
+    B, S, H, hd = q.shape
+    KV = k_suffix.shape[2]
+    P = k_prefix.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+    sp = jnp.einsum("bqkgd,bpkd->bkgqp", qg, k_prefix,
+                    preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(P)[None, None, None, None] < prefix_len[:, None, None, None, None]
+    sp = jnp.where(valid, sp, -jnp.inf)
+    ss = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_suffix,
+                    preferred_element_type=jnp.float32) * scale
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    ss = jnp.where(causal[None, None, None], ss, -jnp.inf)
+    s = jnp.concatenate([sp, ss], axis=-1)           # (B,KV,G,S,P+S)
+    p = jax.nn.softmax(s, axis=-1)
+    vall = jnp.concatenate([v_prefix, v_suffix], axis=1)  # (B,P+S,KV,hd)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vall.dtype), vall,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
 def decode_attention_ref(q, k_cache, v_cache, cache_len):
     """q: (B,1,H,hd); caches: (B,Skv,KV,hd); cache_len: (B,)."""
     B, Skv, KV, hd = k_cache.shape

@@ -1,5 +1,6 @@
 from repro.models.model import (
     cache_specs,
+    chunked_prefill,
     decode_step,
     forward,
     model_specs,
@@ -16,7 +17,7 @@ from repro.models.params import (
 )
 
 __all__ = [
-    "cache_specs", "decode_step", "forward", "model_specs", "n_stacks",
-    "prefill", "Spec", "abstract_params", "init_params", "param_count",
-    "param_shardings", "stack_specs",
+    "cache_specs", "chunked_prefill", "decode_step", "forward",
+    "model_specs", "n_stacks", "prefill", "Spec", "abstract_params",
+    "init_params", "param_count", "param_shardings", "stack_specs",
 ]

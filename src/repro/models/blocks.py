@@ -84,6 +84,40 @@ def attn_apply(
     return out
 
 
+def attn_apply_chunked(
+    cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
+    k_prefix: jax.Array, v_prefix: jax.Array, prefix_len: jax.Array,
+):
+    """Chunked prefill: suffix tokens attend to cached prefix K/V too.
+
+    ``x``: (B, S, D) suffix activations at absolute positions
+    ``prefix_len + i`` (RoPE applied accordingly by the caller-provided
+    ``positions``); ``k_prefix``/``v_prefix``: (B, P, KV, hd) cached
+    pages, already roped at their original positions when first computed.
+    Returns ``(out, (k, v))`` with k/v the *suffix* keys/values only —
+    the cached prefix is already materialized in the pool/slot cache.
+    """
+    q, k, v = _qkv(cfg, p, x, positions)
+    kp = k_prefix.astype(k.dtype)
+    vp = v_prefix.astype(v.dtype)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        o = kops.chunked_prefill_attention(q, k, v, kp, vp, prefix_len,
+                                           chunk=cfg.attn_chunk)
+    else:
+        H = cfg.padded_heads
+        o = L.chunked_prefill_attention(
+            q, _repeat_kv(k, H), _repeat_kv(v, H),
+            _repeat_kv(kp, H), _repeat_kv(vp, H), prefix_len,
+        )
+    mask = _head_mask(cfg, o.dtype)
+    if mask is not None:
+        o = o * mask[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, deq(p["wo"], o.dtype))
+    return shard(out, "batch", "seq", "embed"), (k, v)
+
+
 def attn_decode(
     cfg: ModelConfig, p, x: jax.Array,
     k_cache: jax.Array, v_cache: jax.Array, cache_len: jax.Array,

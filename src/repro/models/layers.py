@@ -187,6 +187,42 @@ def full_causal_attention(q, k, v):
     return o.astype(q.dtype)
 
 
+def chunked_prefill_attention(
+    q: jax.Array,         # (B, S, H, hd) — suffix queries
+    k_suffix: jax.Array,  # (B, S, H, hd) — suffix keys (heads repeated)
+    v_suffix: jax.Array,  # (B, S, H, hd)
+    k_prefix: jax.Array,  # (B, P, H, hd) — cached-prefix keys (repeated)
+    v_prefix: jax.Array,  # (B, P, H, hd)
+    prefix_len: jax.Array,  # (B,) int32 — valid cached tokens per row
+) -> jax.Array:
+    """Suffix attention over cached prefix + own causal window (XLA path).
+
+    The prefix-cache prefill (DESIGN.md §9): queries sit at absolute
+    positions ``prefix_len + i``, attend to every valid cached position
+    (``col < prefix_len``) and causally within the suffix.  One softmax
+    over the concatenated context.  Materializes (S, P+S) scores — P and
+    S are prefill-bucket bounded; the Pallas kernel
+    (``kernels/chunked_prefill.py``) streams instead.
+    """
+    B, S, H, hd = q.shape
+    P = k_prefix.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    sp = jnp.einsum("bqhd,bphd->bhqp", q, k_prefix,
+                    preferred_element_type=jnp.float32) * scale
+    pvalid = jnp.arange(P)[None, None, None, :] < prefix_len[:, None, None, None]
+    sp = jnp.where(pvalid, sp, _NEG_INF)
+    ss = jnp.einsum("bqhd,bkhd->bhqk", q, k_suffix,
+                    preferred_element_type=jnp.float32) * scale
+    causal = jnp.tril(jnp.ones((S, S), bool))[None, None]
+    ss = jnp.where(causal, ss, _NEG_INF)
+    s = jnp.concatenate([sp, ss], axis=-1)        # (B,H,S,P+S)
+    p = jax.nn.softmax(s, axis=-1)
+    vall = jnp.concatenate([v_prefix, v_suffix], axis=1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vall.dtype), vall,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
 def decode_attention(
     q: jax.Array,       # (B, 1, H, hd) — current token's queries
     k_cache: jax.Array, # (B, Skv, KVH, hd)

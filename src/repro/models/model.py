@@ -325,6 +325,98 @@ def prefill(
     return caches, logits
 
 
+#: Families whose per-request state is a pure KV cache — the only ones a
+#: page-granular prefix cache can serve.  SSM/hybrid conv/SSM states
+#: summarize the whole prefix into a fixed-size vector that cannot be
+#: re-anchored mid-sequence.  The serving engine gates on this same
+#: constant (single source of truth for the prefix-cache support check).
+KV_ONLY_FAMILIES = ("dense", "audio", "vlm", "moe")
+
+
+def chunked_prefill(
+    cfg: ModelConfig, params, batch: Dict[str, jax.Array], max_seq: int,
+    valid_len: jax.Array, prefix_k: jax.Array, prefix_v: jax.Array,
+    prefix_len: jax.Array,
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Prefill only the *uncached suffix* of each prompt over an existing
+    prefix cache (DESIGN.md §9).
+
+    ``batch["tokens"]`` (B, S) holds suffix tokens; ``prefix_k``/
+    ``prefix_v`` (layers, B, P, KV, hd) hold the cached-prefix K/V pages
+    gathered from the paged pool (rows ragged — ``prefix_len`` (B,) masks
+    the padding); ``valid_len`` (B,) is the ragged suffix length.  Suffix
+    tokens sit at absolute positions ``prefix_len + i`` (RoPE), attend to
+    the valid prefix and causally within the suffix, and the returned
+    cache has the same contiguous-slot layout as :func:`prefill`: prefix
+    pages at ``[0, prefix_len)``, suffix K/V at
+    ``[prefix_len, prefix_len + valid_len)``, ``len = prefix_len +
+    valid_len`` — decode needs no changes whatsoever.
+
+    Only KV-cache-only families support this: SSM/hybrid states summarize
+    the whole prefix into a fixed-size state that cannot be re-anchored
+    mid-sequence, so the engine gates the prefix cache off for them.
+    """
+    if cfg.family not in KV_ONLY_FAMILIES:
+        raise ValueError(
+            f"chunked prefill needs a KV-only cache; family {cfg.family!r} "
+            "carries SSM state (prefix cache must be disabled)"
+        )
+    x = _embed_inputs(cfg, params, batch)
+    Bsz, S = x.shape[0], x.shape[1]
+    P = prefix_k.shape[2]
+    positions = (prefix_len[:, None]
+                 + jnp.arange(S, dtype=jnp.int32)[None]).astype(jnp.int32)
+    cache_dtype = (x.dtype if cfg.kv_cache_dtype == "auto"
+                   else jnp.dtype(cfg.kv_cache_dtype))
+
+    def place_kv(suffix, prefix):  # (B,S,KV,hd), (B,P,KV,hd) → (B,max_seq,…)
+        """Contiguous slot row: prefix pages at [0, P), suffix scattered at
+        the per-row prefix_len (overwriting padded-prefix garbage).  The
+        scratch is max_seq + S long so a near-full row's scatter never
+        clamps; positions past ``len`` are masked by decode."""
+        KVh, hd = suffix.shape[2], suffix.shape[3]
+        buf = jnp.zeros((Bsz, max_seq + S, KVh, hd), cache_dtype)
+        buf = buf.at[:, :P].set(prefix.astype(cache_dtype))
+        buf = jax.vmap(
+            lambda row, sfx, start: jax.lax.dynamic_update_slice_in_dim(
+                row, sfx, start, axis=0)
+        )(buf, suffix.astype(cache_dtype), prefix_len)
+        return shard(buf[:, :max_seq], "batch", "kv_seq", "kv_heads",
+                     "head_dim")
+
+    def body(x, layer_inputs):
+        layer_params, kp, vp = layer_inputs
+        x = shard(x, "batch", "act_seq", "embed")
+        out, (k, v) = B.attn_apply_chunked(
+            cfg, layer_params["attn"], x, positions, kp, vp, prefix_len)
+        x = x + out
+        ys = {"k": place_kv(k, kp), "v": place_kv(v, vp)}
+        if cfg.family == "moe":
+            out, _ = B.moe_apply(cfg, layer_params["moe"], x)
+            x = x + out
+        else:
+            x = x + B.mlp_apply(cfg, layer_params["mlp"], x)
+        return x, ys
+
+    if cfg.unroll:  # dry-run cost probes
+        ys_list = []
+        for i in range(n_stacks(cfg)):
+            x, ys = body(x, (_take(params["blocks"], i),
+                             prefix_k[i], prefix_v[i]))
+            ys_list.append(ys)
+        caches = jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+    else:
+        x, caches = jax.lax.scan(
+            body, x, (params["blocks"], prefix_k, prefix_v))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    idx = jnp.clip(valid_len - 1, 0, S - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x_last, table)[:, 0]
+    caches["len"] = (prefix_len + valid_len).astype(jnp.int32)
+    return caches, logits
+
+
 def _mamba_prefill(cfg: ModelConfig, p, x, seq_valid=None):
     """Run the mamba mixer over the full sequence AND produce final states.
 

@@ -5,6 +5,11 @@ from repro.serve.executor import (
     ServeHandle,
 )
 from repro.serve.client import EngineClient, EngineHandle
+from repro.serve.prefix_cache import (
+    PagedKVPool,
+    PrefixCacheStats,
+    RadixPrefixCache,
+)
 from repro.serve.scheduler import Scheduler, Request
 
 __all__ = [
@@ -15,6 +20,9 @@ __all__ = [
     "EngineHandle",
     "ExecutorStats",
     "GenResult",
+    "PagedKVPool",
+    "PrefixCacheStats",
+    "RadixPrefixCache",
     "Request",
     "Scheduler",
     "ServeHandle",

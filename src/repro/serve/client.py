@@ -32,7 +32,8 @@ from repro.serve.executor import ContinuousBatchingExecutor, ServeHandle
 def _to_response(r: GenResult) -> LLMResponse:
     return LLMResponse(
         text=r.text,
-        usage=Usage(r.prompt_tokens, r.completion_tokens),
+        usage=Usage(r.prompt_tokens, r.completion_tokens,
+                    r.cached_prompt_tokens),
         finish_reason="stop" if r.finish_reason in ("stop", "eos") else "length",
     )
 
@@ -76,6 +77,10 @@ class EngineClient(LLMClient):
         self.oracle = oracle
         self.executor = ContinuousBatchingExecutor(engine)
         self.context_limit = engine.max_seq
+        #: advertised to the batch-size optimizer: with the radix prefix
+        #: cache on, consecutive block prompts sharing their left block
+        #: only *compute* the right-block suffix (adaptive_join reads this)
+        self.prefix_cached = engine.prefix_cache is not None
 
     def count_tokens(self, text: str) -> int:
         return self.engine.count_tokens(text)

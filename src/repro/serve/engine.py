@@ -17,8 +17,15 @@ The paper's block-join prompts run through *this* (via
   ``max_tokens`` termination with O(1) incremental stop-string suffix
   matching (:class:`StopMatcher`) — stop strings are the ``Finished``
   sentinel mechanism of Algorithm 2.
+* **Radix-tree KV prefix cache** — prompt token-ID prefixes are interned
+  page-granular in :class:`repro.serve.prefix_cache.RadixPrefixCache`;
+  ``prefill_rows`` looks up the longest cached prefix, copies its pages
+  into the slot row, and **chunked-prefills only the uncached suffix**
+  (:func:`repro.models.chunked_prefill`) — block-join prompts sharing
+  their header + left block skip recomputing it (DESIGN.md §9).
 * **Token accounting** — real tokenizer counts, the same interface the
-  cost model prices (prompt vs completion tokens).
+  cost model prices (prompt vs completion tokens, now split into cached
+  vs computed prompt tokens).
 * **Teacher-forcing mode** — ``expected`` answers can be fed so the full
   serving stack (prefill, cache writes, decode steps, stop handling, token
   accounting) is exercised end-to-end even with untrained demo weights; the
@@ -28,6 +35,7 @@ The paper's block-join prompts run through *this* (via
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -36,9 +44,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.llm_client import cancel_unfinished
-from repro.models import decode_step, prefill
-from repro.models.model import cache_specs
+from repro.models import chunked_prefill, decode_step, prefill
+from repro.models.model import KV_ONLY_FAMILIES, cache_specs
 from repro.models.params import Spec, is_spec
+from repro.serve.prefix_cache import RadixPrefixCache
 
 
 @dataclasses.dataclass
@@ -47,6 +56,9 @@ class GenResult:
     prompt_tokens: int
     completion_tokens: int
     finish_reason: str  # "stop" | "length" | "eos"
+    #: prompt tokens served from the radix prefix cache (never recomputed);
+    #: always <= prompt_tokens, 0 when the cache is off or missed
+    cached_prompt_tokens: int = 0
 
 
 class StopMatcher:
@@ -116,6 +128,9 @@ class Engine:
         max_seq: int = 1024,
         slots: int = 8,
         prefill_buckets: Sequence[int] = (128, 256, 512, 1024),
+        prefix_cache: Optional[bool] = None,
+        prefix_page_size: int = 16,
+        prefix_pool_pages: Optional[int] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -124,9 +139,34 @@ class Engine:
         self.slots = slots
         self.prefill_buckets = [b for b in prefill_buckets if b <= max_seq] or [max_seq]
 
+        # Radix-tree KV prefix cache (DESIGN.md §9): default-on for KV-only
+        # families, overridable per engine or via REPRO_PREFIX_CACHE=0/1
+        # (the CI matrix runs both).  SSM/hybrid families are gated off.
+        if prefix_cache is None:
+            prefix_cache = os.environ.get("REPRO_PREFIX_CACHE", "1") != "0"
+        self.prefix_cache: Optional[RadixPrefixCache] = None
+        # SSM/hybrid states cannot be re-anchored mid-sequence, so the
+        # prefix cache is force-disabled for them (DESIGN.md §9)
+        if prefix_cache and cfg.family in KV_ONLY_FAMILIES:
+            n_pages = (prefix_pool_pages if prefix_pool_pages is not None
+                       else 2 * slots * max_seq // prefix_page_size)
+            self.prefix_cache = RadixPrefixCache(n_pages, prefix_page_size)
+        # page-aligned buckets for the gathered-prefix length
+        self._prefix_buckets = sorted({
+            b for b in [4 * prefix_page_size, *self.prefill_buckets,
+                        max_seq // prefix_page_size * prefix_page_size]
+            if 0 < b <= max_seq and b % prefix_page_size == 0
+        }) or [max_seq]
+
         self._prefill = jax.jit(
             lambda p, toks, vlen: prefill(
                 cfg, p, {"tokens": toks}, max_seq=self.max_seq, valid_len=vlen
+            )
+        )
+        self._chunked_prefill = jax.jit(
+            lambda p, toks, vlen, kp, vp, plen: chunked_prefill(
+                cfg, p, {"tokens": toks}, max_seq=self.max_seq,
+                valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
             )
         )
         self._decode = jax.jit(
@@ -147,6 +187,12 @@ class Engine:
     def count_tokens(self, text: str) -> int:
         return len(self.tokenizer.encode(text))
 
+    def prefix_cache_stats(self) -> Optional[dict]:
+        """Hit/miss/eviction counters of the radix prefix cache (or None)."""
+        if self.prefix_cache is None:
+            return None
+        return self.prefix_cache.stats.summary()
+
     # ------------------------------------------------------------------
     # Incremental slot API (driven by the executor — DESIGN.md §8)
     # ------------------------------------------------------------------
@@ -165,14 +211,25 @@ class Engine:
 
     def prefill_rows(
         self, prompts: Sequence[str]
-    ) -> Tuple[Any, jax.Array, List[int]]:
+    ) -> Tuple[Any, jax.Array, List[int], List[int]]:
         """Prefill up to ``slots`` prompts as one ragged batch.
 
         The batch is padded to exactly ``slots`` rows so there is a single
         compiled prefill per bucket length regardless of how many slots are
-        being refilled.  Returns ``(cache, logits, prompt_lens)``; row ``r``
-        of the cache/logits belongs to ``prompts[r]`` and is meant to be
-        scattered into a free slot with :meth:`insert_row`.
+        being refilled.  Returns ``(cache, logits, prompt_lens,
+        cached_lens)``; row ``r`` of the cache/logits belongs to
+        ``prompts[r]`` and is meant to be scattered into a free slot with
+        :meth:`insert_row`; ``cached_lens[r]`` prompt tokens were served
+        from the prefix cache instead of being computed.
+
+        With the prefix cache on, each prompt's token IDs are looked up in
+        the radix tree first; the longest page-aligned cached prefix
+        (capped at ``len - 1`` so at least one token is computed — its
+        logits seed decoding) is *gathered* from the paged pool into the
+        batch's prefix buffer, and only the uncached suffix runs through
+        :func:`repro.models.chunked_prefill`.  Afterwards every full page
+        of every prompt is interned back into the tree (copy-out, see
+        DESIGN.md §9), so the next prompt sharing the prefix skips it.
         """
         if not 0 < len(prompts) <= self.slots:
             raise ValueError(f"prefill_rows takes 1..{self.slots} prompts")
@@ -182,16 +239,66 @@ class Engine:
             raise ValueError(
                 f"prompt of {max(lens)} tokens exceeds engine max_seq {self.max_seq}"
             )
-        L = _bucket(max(lens), self.prefill_buckets)
+        pc = self.prefix_cache
+        matches = []
+        cached = [0] * len(prompts)
+        if pc is not None and pc.pool.bound:
+            # cap at len-1: at least one token must be computed — its
+            # logits seed the decode loop
+            matches = [pc.match(seq, limit=len(seq) - 1) for seq in ids]
+            cached = [m.length for m in matches]
+
+        try:
+            if any(cached):
+                cache, logits = self._prefill_over_cache(ids, matches)
+            else:
+                L = _bucket(max(lens), self.prefill_buckets)
+                toks = np.zeros((self.slots, L), np.int32)
+                vlen = np.ones((self.slots,), np.int32)  # pad rows: 1 dummy
+                for r, seq in enumerate(ids):
+                    toks[r, : len(seq)] = seq
+                    vlen[r] = len(seq)
+                cache, logits = self._prefill(
+                    self.params, jnp.asarray(toks), jnp.asarray(vlen)
+                )
+            if pc is not None:
+                if not pc.pool.bound:
+                    pc.pool.bind(cache["k"], cache["v"])
+                for r, seq in enumerate(ids):
+                    pc.insert(
+                        seq,
+                        lambda start, stop, r=r: cache["k"][:, r, start:stop],
+                        lambda start, stop, r=r: cache["v"][:, r, start:stop],
+                    )
+        finally:
+            # locks held through gather AND insert: insert's eviction
+            # pressure must never free the pages a match is using
+            for m in matches:
+                m.release()
+        return cache, logits, lens, cached
+
+    def _prefill_over_cache(self, ids: List[List[int]], matches: List[Any]):
+        """Gather cached pages + chunked-prefill the uncached suffixes."""
+        pc = self.prefix_cache
+        page = pc.page_size
+        suffix_lens = [len(s) - m.length for s, m in zip(ids, matches)]
+        L = _bucket(max(suffix_lens), self.prefill_buckets)
+        P = _bucket(max(m.length for m in matches), self._prefix_buckets)
+        page_ids = np.zeros((self.slots, P // page), np.int32)
         toks = np.zeros((self.slots, L), np.int32)
-        vlen = np.ones((self.slots,), np.int32)  # pad rows: 1 dummy token
-        for r, seq in enumerate(ids):
-            toks[r, : len(seq)] = seq
-            vlen[r] = len(seq)
-        cache, logits = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(vlen)
+        vlen = np.ones((self.slots,), np.int32)
+        plen = np.zeros((self.slots,), np.int32)
+        for r, (seq, m) in enumerate(zip(ids, matches)):
+            suffix = seq[m.length:]
+            toks[r, : len(suffix)] = suffix
+            vlen[r] = len(suffix)
+            plen[r] = m.length
+            page_ids[r, : len(m.pages)] = m.pages
+        kp, vp = pc.pool.gather(page_ids)
+        return self._chunked_prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(vlen),
+            kp, vp, jnp.asarray(plen),
         )
-        return cache, logits, lens
 
     def insert_row(
         self, state: DecodeState, cache: Any, logits: jax.Array,

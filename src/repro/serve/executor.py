@@ -58,6 +58,11 @@ class ServeHandle:
     _slot: int = -1
     _budget: int = 0
     _emitted: int = 0
+    _cached_prompt: int = 0  # prompt tokens served from the prefix cache
+    #: True once this attempt's prefill reached the stats counters — the
+    #: failure/cancel backout must only subtract what was actually added
+    #: (prefill_rows itself can raise after the handle went ACTIVE)
+    _prefill_counted: bool = False
     _out_ids: List[int] = dataclasses.field(default_factory=list)
     _matcher: Optional[StopMatcher] = None
     _forced: Optional[List[int]] = None
@@ -74,6 +79,10 @@ class ExecutorStats:
     prefill_batches: int = 0
     refills: int = 0
     generated_tokens: int = 0
+    #: prompt tokens actually run through prefill vs served from the
+    #: radix prefix cache (the prefix-cache benchmark reads these)
+    prefill_tokens_computed: int = 0
+    prefill_tokens_cached: int = 0
 
 
 class ContinuousBatchingExecutor:
@@ -136,6 +145,11 @@ class ContinuousBatchingExecutor:
             self._free_slot(handle)
             # its tokens never reach a result — keep throughput stats exact
             self.stats.generated_tokens -= handle._emitted
+            if handle._prefill_counted:
+                self.stats.prefill_tokens_computed -= (
+                    handle.prompt_tokens - handle._cached_prompt)
+                self.stats.prefill_tokens_cached -= handle._cached_prompt
+                handle._prefill_counted = False
             handle.status = CANCELLED
             return True
         return False
@@ -273,6 +287,7 @@ class ContinuousBatchingExecutor:
             prompt_tokens=h.prompt_tokens,
             completion_tokens=len(h._out_ids),
             finish_reason=reason,
+            cached_prompt_tokens=h._cached_prompt,
         )
         h.status = FINISHED
         self._free_slot(h)
@@ -299,12 +314,16 @@ class ContinuousBatchingExecutor:
             return
         if self._state is None:
             self._state = self.engine.init_state()
-        cache, logits, lens = self.engine.prefill_rows(
+        cache, logits, lens, cached_lens = self.engine.prefill_rows(
             [h.prompt for h in admitted])
         self.stats.prefill_batches += 1
         self.stats.refills += len(admitted)
         tok = self.engine.tokenizer
         for row, h in enumerate(admitted):
+            h._cached_prompt = cached_lens[row]
+            self.stats.prefill_tokens_computed += lens[row] - cached_lens[row]
+            self.stats.prefill_tokens_cached += cached_lens[row]
+            h._prefill_counted = True
             self.engine.insert_row(self._state, cache, logits, row, h._slot)
             h._budget = min(h.max_tokens,
                             self.engine.max_seq - h.prompt_tokens - 1)
@@ -333,8 +352,14 @@ class ContinuousBatchingExecutor:
             # tokens from the aborted attempt will be re-generated — back
             # them out so throughput stats never double-count
             self.stats.generated_tokens -= h._emitted
+            if h._prefill_counted:
+                self.stats.prefill_tokens_computed -= (
+                    h.prompt_tokens - h._cached_prompt)
+                self.stats.prefill_tokens_cached -= h._cached_prompt
+                h._prefill_counted = False
             h._out_ids = []
             h._emitted = 0
+            h._cached_prompt = 0
             h.retries += 1
             if h.retries > self.max_retries:
                 exhausted = True

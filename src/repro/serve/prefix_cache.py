@@ -1,0 +1,338 @@
+"""Radix-tree KV prefix cache over a paged KV pool (DESIGN.md §9).
+
+Algorithm 2's block prompts are dominated by *repeated* content: the
+instruction header and the left-table block are byte-identical across
+every right-table block paired with the same left block
+(``core.prompts.block_prompt_shared_prefix``), yet a cache-less engine
+re-prefills each prompt from token zero.  This module interns token-ID
+prefixes so the engine can skip the shared part:
+
+* :class:`PagedKVPool` — a block-granular (``page_size`` tokens) pool of
+  K/V pages, one pair of device arrays shaped
+  ``(layers, n_pages, page_size, kv_heads, head_dim)``; pages are
+  *copies* of slot-cache rows (never aliases — see DESIGN.md §9 for why
+  copy-out beats aliasing on a contiguous-slot engine).
+* :class:`RadixPrefixCache` — a radix tree whose edges are page-aligned
+  token-ID runs; each node owns the pages of its edge.  ``match`` walks
+  the longest cached prefix (whole pages only) and *locks* the deepest
+  node touched (ref count) so eviction cannot free pages between lookup
+  and the prefill that reads them; ``insert`` interns the newly computed
+  pages, splitting edges at the divergence page.  Eviction is LRU over
+  *unreferenced leaves* — interior nodes are prefixes of live leaves and
+  only become evictable once their subtree is gone.
+
+The cache stores token IDs, not text: two prompts share cached work iff
+their token sequences share page-aligned prefixes, which is exactly the
+property the canonical block-prompt layout guarantees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagedKVPool:
+    """Fixed-capacity pool of KV pages with a free list.
+
+    Shapes are bound lazily from the first prefilled cache the engine
+    hands over (``bind``), so the pool needs no config introspection —
+    it inherits layer count, head layout, and cache dtype from the real
+    thing.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError(f"need n_pages, page_size >= 1, got {n_pages}, {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.k: Optional[jax.Array] = None  # (layers, n_pages, page, KV, hd)
+        self.v: Optional[jax.Array] = None
+        self._free: List[int] = list(range(n_pages))
+        self._gather = jax.jit(lambda pool, ids: pool[:, ids])
+        # dst pages is a traced operand so one compile serves every write
+        # of the same page count; the pool buffer is donated so XLA
+        # scatters in place instead of copying the whole (GiB-scale at
+        # real configs) pool per insert
+        self._scatter = jax.jit(
+            lambda pool, ids, pages: pool.at[:, ids].set(pages),
+            donate_argnums=(0,),
+        )
+
+    @property
+    def bound(self) -> bool:
+        return self.k is not None
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def bind(self, k_template: jax.Array, v_template: jax.Array) -> None:
+        """Allocate storage matching a prefilled cache leaf
+        ``(layers, batch, max_seq, KV, hd)``."""
+        if self.bound:
+            return
+        layers, _, _, kv, hd = k_template.shape
+        shape = (layers, self.n_pages, self.page_size, kv, hd)
+        self.k = jnp.zeros(shape, k_template.dtype)
+        self.v = jnp.zeros(shape, v_template.dtype)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` pages off the free list, or None if unavailable."""
+        if n > len(self._free):
+            return None
+        taken, self._free = self._free[:n], self._free[n:]
+        return taken
+
+    def free(self, pages: Sequence[int]) -> None:
+        self._free.extend(pages)
+
+    def write(self, page_ids: Sequence[int], k_pages: jax.Array,
+              v_pages: jax.Array) -> None:
+        """Copy ``(layers, n, page, KV, hd)`` blocks into ``page_ids``."""
+        ids = jnp.asarray(list(page_ids), jnp.int32)
+        self.k = self._scatter(self.k, ids, k_pages.astype(self.k.dtype))
+        self.v = self._scatter(self.v, ids, v_pages.astype(self.v.dtype))
+
+    def gather(self, page_ids: np.ndarray) -> Tuple[jax.Array, jax.Array]:
+        """``page_ids`` (B, n) int32 → K/V ``(layers, B, n·page, KV, hd)``.
+
+        Rows with fewer valid pages are padded with page 0; the caller
+        masks them via ``prefix_len``.
+        """
+        ids = jnp.asarray(page_ids, jnp.int32)
+        k = self._gather(self.k, ids)  # (layers, B, n, page, KV, hd)
+        v = self._gather(self.v, ids)
+        L, B, n, p, KV, hd = k.shape
+        return (k.reshape(L, B, n * p, KV, hd), v.reshape(L, B, n * p, KV, hd))
+
+
+@dataclasses.dataclass(eq=False)
+class _Node:
+    """One radix edge: a page-aligned token run and the pages backing it."""
+
+    key: Tuple[int, ...]                      # edge label ((len % page) == 0)
+    pages: List[int]                          # len(key) // page page ids
+    parent: Optional["_Node"]
+    children: Dict[Tuple[int, ...], "_Node"] = dataclasses.field(
+        default_factory=dict)                 # keyed by the child's first page
+    refs: int = 0                             # live match locks on this node
+    tick: int = 0                             # LRU stamp
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of a longest-prefix lookup.  ``release`` MUST be called once
+    the pages have been consumed (gathered into a slot cache)."""
+
+    pages: List[int]
+    length: int               # matched tokens (multiple of page_size)
+    _locked: Optional[_Node]
+    _cache: "RadixPrefixCache"
+
+    def release(self) -> None:
+        if self._locked is not None:
+            self._locked.refs -= 1
+            self._locked = None
+
+
+@dataclasses.dataclass
+class PrefixCacheStats:
+    lookups: int = 0
+    hit_tokens: int = 0        # tokens served from cache
+    miss_tokens: int = 0       # looked-up tokens that had to be computed
+    inserted_pages: int = 0
+    evicted_pages: int = 0
+
+    def summary(self) -> dict:
+        total = self.hit_tokens + self.miss_tokens
+        return {
+            "lookups": self.lookups,
+            "hit_tokens": self.hit_tokens,
+            "miss_tokens": self.miss_tokens,
+            "hit_rate": self.hit_tokens / total if total else 0.0,
+            "inserted_pages": self.inserted_pages,
+            "evicted_pages": self.evicted_pages,
+        }
+
+
+class RadixPrefixCache:
+    """Block-granular radix tree of cached prompt prefixes.
+
+    All tree state lives on the host; only page payloads live on device
+    (in the :class:`PagedKVPool`).  Locking protocol: ``match`` bumps the
+    ref count of the deepest node it used; the engine releases after the
+    chunked prefill has *copied* those pages into the slot cache.  Because
+    slot rows are copies, an eviction after release can never corrupt an
+    active request — the pool page is the only thing reclaimed.
+    """
+
+    def __init__(self, n_pages: int, page_size: int = 16):
+        self.page_size = page_size
+        self.pool = PagedKVPool(n_pages, page_size)
+        self.root = _Node(key=(), pages=[], parent=None)
+        self.stats = PrefixCacheStats()
+        self._tick = 0
+
+    # ------------------------------------------------------------------
+    def _next_tick(self) -> int:
+        self._tick += 1
+        return self._tick
+
+    def _aligned(self, n: int) -> int:
+        return (n // self.page_size) * self.page_size
+
+    def _common_pages(self, a: Sequence[int], b: Sequence[int]) -> int:
+        """Length (in tokens, page-aligned) of the common prefix of two
+        page-aligned runs."""
+        p = self.page_size
+        n = min(len(a), len(b))
+        match = 0
+        for lo in range(0, self._aligned(n), p):
+            if tuple(a[lo:lo + p]) != tuple(b[lo:lo + p]):
+                break
+            match = lo + p
+        return match
+
+    # ------------------------------------------------------------------
+    def match(self, ids: Sequence[int], limit: Optional[int] = None) -> PrefixMatch:
+        """Longest cached page-aligned prefix of ``ids[:limit]``.
+
+        Returns a locked :class:`PrefixMatch`; the lock pins the deepest
+        node (and, transitively, every ancestor — interior nodes are never
+        leaves while they have descendants) against eviction until
+        :meth:`PrefixMatch.release`.
+        """
+        n = self._aligned(len(ids) if limit is None else min(len(ids), limit))
+        self.stats.lookups += 1
+        tick = self._next_tick()
+        node, matched, pages = self.root, 0, []
+        while matched < n:
+            first = tuple(ids[matched:matched + self.page_size])
+            child = node.children.get(first)
+            if child is None:
+                break
+            want = ids[matched:matched + min(len(child.key), n - matched)]
+            common = self._common_pages(child.key, want)
+            if common == 0:
+                break
+            child.tick = tick
+            pages += child.pages[: common // self.page_size]
+            matched += common
+            node = child
+            if common < len(child.key):
+                break  # stopped mid-edge: the edge's node still owns the pages
+        locked = None
+        if node is not self.root:
+            node.refs += 1
+            locked = node
+        self.stats.hit_tokens += matched
+        self.stats.miss_tokens += max(n - matched, 0)
+        return PrefixMatch(pages=pages, length=matched, _locked=locked,
+                           _cache=self)
+
+    # ------------------------------------------------------------------
+    def insert(self, ids: Sequence[int], k_source, v_source) -> int:
+        """Intern every full page of ``ids``; returns pages newly cached.
+
+        ``k_source(start, stop)`` / ``v_source(start, stop)`` return the
+        ``(layers, stop-start, KV, hd)`` cache block for token positions
+        ``[start, stop)`` — the engine passes slot-cache slices, so the
+        pool stores *copies* and never aliases live decode state.
+        """
+        n = self._aligned(len(ids))
+        node, matched = self.root, 0
+        tick = self._next_tick()
+        while matched < n:
+            first = tuple(ids[matched:matched + self.page_size])
+            child = node.children.get(first)
+            if child is None:
+                return self._attach(node, ids, matched, n, k_source, v_source)
+            want = ids[matched:matched + min(len(child.key), n - matched)]
+            common = self._common_pages(child.key, want)
+            child.tick = tick
+            if common < len(child.key):
+                if matched + common >= n:
+                    return 0  # fully covered by the edge's own prefix
+                # diverged (or ran out) mid-edge: split at the common page
+                child = self._split(node, child, common)
+                matched += common
+                node = child
+                return self._attach(node, ids, matched, n, k_source, v_source)
+            matched += common
+            node = child
+        return 0  # already fully interned
+
+    def _split(self, parent: _Node, child: _Node, at: int) -> _Node:
+        """Split ``child``'s edge after ``at`` tokens; returns the new
+        interior node owning the first ``at`` tokens."""
+        p = self.page_size
+        head = _Node(key=tuple(child.key[:at]), pages=child.pages[: at // p],
+                     parent=parent, tick=child.tick)
+        child.key = tuple(child.key[at:])
+        child.pages = child.pages[at // p:]
+        child.parent = head
+        head.children[tuple(child.key[:p])] = child
+        parent.children[tuple(head.key[:p])] = head
+        return head
+
+    def _attach(self, node: _Node, ids: Sequence[int], start: int, stop: int,
+                k_source, v_source) -> int:
+        n_pages = (stop - start) // self.page_size
+        if n_pages <= 0:
+            return 0
+        pages = self._alloc_evicting(n_pages)
+        if pages is None:
+            return 0  # pool exhausted by locked/live prefixes — skip caching
+        self.pool.write(pages,
+                        self._paged(k_source(start, stop), n_pages),
+                        self._paged(v_source(start, stop), n_pages))
+        leaf = _Node(key=tuple(ids[start:stop]), pages=pages, parent=node,
+                     tick=self._next_tick())
+        node.children[tuple(leaf.key[: self.page_size])] = leaf
+        self.stats.inserted_pages += n_pages
+        return n_pages
+
+    def _paged(self, block: jax.Array, n_pages: int) -> jax.Array:
+        """(layers, n·page, KV, hd) → (layers, n, page, KV, hd)."""
+        L, _, KV, hd = block.shape
+        return block.reshape(L, n_pages, self.page_size, KV, hd)
+
+    # ------------------------------------------------------------------
+    def _alloc_evicting(self, n: int) -> Optional[List[int]]:
+        while self.pool.free_pages < n:
+            if not self._evict_one():
+                return None
+        return self.pool.alloc(n)
+
+    def _evict_one(self) -> bool:
+        """Free the least-recently-used unreferenced leaf; False if none."""
+        victim: Optional[_Node] = None
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if (node is not self.root and not node.children and node.refs == 0
+                    and (victim is None or node.tick < victim.tick)):
+                victim = node
+        if victim is None:
+            return False
+        self.pool.free(victim.pages)
+        self.stats.evicted_pages += len(victim.pages)
+        assert victim.parent is not None
+        del victim.parent.children[tuple(victim.key[: self.page_size])]
+        return True
+
+    # ------------------------------------------------------------------
+    def cached_tokens(self) -> int:
+        """Total tokens currently interned (for tests / introspection)."""
+        total, stack = 0, [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            total += len(node.key)
+        return total

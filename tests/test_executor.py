@@ -143,6 +143,50 @@ def test_block_join_completed_blocks_not_repaid():
     assert replay_ledger.calls == full_ledger.calls - len(memo) // 2
 
 
+def test_covered_requires_single_rectangle():
+    """Pin the resume memo's conservative containment rule: a rect covered
+    only by the UNION of solved rectangles is re-executed.
+
+    Each memo entry certifies one *complete* block answer under one call's
+    token budget; two half-rect answers certify nothing about the combined
+    block's own answer fitting, so `_covered` deliberately refuses union
+    coverage (see its docstring).  This test fails loudly if someone
+    "optimizes" it into a union check.
+    """
+    from repro.core.block_join import _covered
+
+    completed = {(0, 2, 0, 2): set(), (2, 4, 0, 2): set()}
+    # union of the two solved rects tiles (0,4,0,2) exactly — still no
+    assert not _covered((0, 4, 0, 2), completed)
+    # single-rectangle containment (equal or strictly inside) is accepted
+    assert _covered((0, 2, 0, 2), completed)
+    assert _covered((2, 3, 0, 1), completed)
+    # overlap without containment is rejected
+    assert not _covered((1, 3, 0, 2), completed)
+    assert not _covered((0, 2, 0, 3), completed)
+
+
+def test_block_join_repays_union_covered_blocks():
+    """Behavioral pin of the conservative `_covered`: a memo holding two
+    half-blocks that tile a full block does NOT suppress the full block's
+    call."""
+    from repro.core.accounting import Ledger
+
+    r1 = [f"item {i}" for i in range(4)]
+    r2 = ["item 0", "item 1"]
+    pred = lambda a, b: a == b
+    # memo from a b1=2 run: two rects tiling r1 × r2
+    memo = {}
+    block_join(r1, r2, "equal", OracleLLM(pred), 2, 2, completed=memo)
+    assert set(memo) == {(0, 2, 0, 2), (2, 4, 0, 2)}
+    # a b1=4 retry re-pays its single (union-covered) block
+    ledger = Ledger()
+    res = block_join(r1, r2, "equal", OracleLLM(pred), 4, 2,
+                     completed=dict(memo), ledger=ledger)
+    assert ledger.calls == 1
+    assert res.pairs == {(0, 0), (1, 1)}
+
+
 def test_tuple_join_on_submission_surface():
     r1, r2 = ["a", "b"], ["b", "a"]
     res = tuple_join(r1, r2, "equal", OracleLLM(lambda a, b: a == b))

@@ -38,6 +38,75 @@ def test_flash_attention(B, S, H, KV, hd, chunk, dtype):
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
+    "B,S,P,H,KV,hd,chunk",
+    [
+        (2, 32, 64, 4, 2, 16, 16),    # GQA 2:1, prefix longer than suffix
+        (1, 48, 32, 6, 3, 8, 16),     # odd head count
+        (2, 1, 16, 4, 1, 32, 512),    # 1-token uncached suffix (full hit)
+        (3, 16, 128, 4, 2, 16, 8),    # long ragged prefix
+    ],
+)
+def test_chunked_prefill_attention(B, S, P, H, KV, hd, chunk, dtype):
+    """Chunked-prefill kernel vs oracle on ragged cached-prefix lengths."""
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    kp = jax.random.normal(ks[3], (B, P, KV, hd), dtype)
+    vp = jax.random.normal(ks[4], (B, P, KV, hd), dtype)
+    ragged = jax.random.randint(jax.random.PRNGKey(B * S), (B,), 0, P + 1)
+    for plen in (
+        jnp.zeros((B,), jnp.int32),            # no cache hit at all
+        jnp.full((B,), P, jnp.int32),          # prefix buffer exactly full
+        jnp.full((B,), min(chunk, P), jnp.int32),  # exactly on a block edge
+        ragged.astype(jnp.int32),              # ragged, page-unaligned
+    ):
+        out = ops.chunked_prefill_attention(q, k, v, kp, vp, plen, chunk=chunk)
+        gold = ref.chunked_prefill_attention_ref(q, k, v, kp, vp, plen)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(gold, np.float32), **_tol(dtype))
+
+
+def test_chunked_prefill_with_zero_prefix_equals_flash():
+    """With prefix_len=0 everywhere the kernel must reduce to plain causal
+    attention over the suffix (the cold-cache path)."""
+    B, S, P, H, KV, hd = 2, 64, 32, 4, 2, 16
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    kp = jax.random.normal(ks[3], (B, P, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[4], (B, P, KV, hd), jnp.float32)
+    plen = jnp.zeros((B,), jnp.int32)
+    out = ops.chunked_prefill_attention(q, k, v, kp, vp, plen, chunk=16)
+    gold = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_prefill_matches_xla_fallback():
+    """The engine's CPU path (layers.chunked_prefill_attention) and the
+    Pallas kernel must agree — the kernel parity contract of ops.py."""
+    from repro.models import layers as L
+
+    B, S, P, H, KV, hd = 2, 32, 48, 4, 2, 16
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    kp = jax.random.normal(ks[3], (B, P, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[4], (B, P, KV, hd), jnp.float32)
+    plen = jnp.asarray([16, 37], jnp.int32)
+    G = H // KV
+    rep = lambda a: jnp.repeat(a, G, axis=2)
+    xla = L.chunked_prefill_attention(q, rep(k), rep(v), rep(kp), rep(vp), plen)
+    pall = ops.chunked_prefill_attention(q, k, v, kp, vp, plen, chunk=16)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pall),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
     "B,Skv,H,KV,hd",
     [(1, 32, 2, 2, 16), (2, 64, 4, 2, 32), (3, 48, 8, 2, 16), (2, 128, 4, 1, 64)],
 )

@@ -1,0 +1,372 @@
+"""Radix-tree KV prefix cache: tree/pool unit tests, canonical prompt
+layout goldens, and the engine cache-parity suite (DESIGN.md §9).
+
+The headline property: the engine's outputs, finish reasons, and token
+accounting are *identical* with the prefix cache on vs off — including
+mid-decode slot refill and eviction pressure (pool smaller than the
+working set).  Caching may only change *where* prompt tokens come from
+(cached vs computed), never what is generated or billed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.prompts import (
+    block_prompt,
+    block_prompt_shared_prefix,
+    block_prompt_variable_suffix,
+)
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import Engine, RadixPrefixCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; see requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(7)
+PAGE = 4  # small page for the pure-tree tests
+
+
+# ---------------------------------------------------------------------------
+# Radix tree + paged pool (no model involved)
+# ---------------------------------------------------------------------------
+
+
+def _make_cache(n_pages: int) -> RadixPrefixCache:
+    """Cache whose pool stores position-coded values: page payload for
+    token position ``i`` is the constant ``i`` — content checks become
+    integer comparisons."""
+    cache = RadixPrefixCache(n_pages, PAGE)
+    k_template = jnp.zeros((1, 1, 64, 1, 2), jnp.float32)
+    cache.pool.bind(k_template, k_template)
+    return cache
+
+
+def _sources(n_tokens: int):
+    """k/v sources encoding absolute position in the payload."""
+    base = jnp.arange(n_tokens, dtype=jnp.float32)[None, :, None, None]
+    data = jnp.broadcast_to(base, (1, n_tokens, 1, 2))
+    return (lambda s, e: data[:, s:e]), (lambda s, e: data[:, s:e])
+
+
+def _page_positions(cache: RadixPrefixCache, pages):
+    """First payload scalar of each cached page → the position it stores."""
+    ids = np.asarray(pages, np.int32).reshape(1, -1)
+    k, _ = cache.pool.gather(ids)
+    return np.asarray(k)[0, 0, ::PAGE, 0, 0].astype(int).tolist()
+
+
+def test_match_and_insert_roundtrip():
+    cache = _make_cache(16)
+    seq = list(range(100, 111))  # 11 tokens → 2 full pages
+    ks, vs = _sources(len(seq))
+    assert cache.insert(seq, ks, vs) == 2
+    m = cache.match(seq)
+    assert m.length == 8
+    assert _page_positions(cache, m.pages) == [0, 4]
+    m.release()
+    # a shorter shared prefix matches one page
+    m2 = cache.match(seq[:7])
+    assert m2.length == 4
+    m2.release()
+    # the limit cap (engine: at least one token must be computed)
+    m3 = cache.match(seq, limit=len(seq) - 1)
+    assert m3.length == 8  # floor(10 / 4) * 4
+    m3.release()
+
+
+def test_divergent_insert_splits_edge():
+    cache = _make_cache(16)
+    a = list(range(12))               # 3 pages
+    b = list(range(8)) + [99, 98, 97, 96]  # shares 2 pages, diverges on 3rd
+    ka, va = _sources(len(a))
+    assert cache.insert(a, ka, va) == 3
+    kb, vb = _sources(len(b))
+    assert cache.insert(b, kb, vb) == 1  # only the divergent page is new
+    ma = cache.match(a)
+    mb = cache.match(b)
+    assert ma.length == 12 and mb.length == 12
+    assert ma.pages[:2] == mb.pages[:2]      # shared pages interned once
+    assert ma.pages[2] != mb.pages[2]
+    ma.release(), mb.release()
+
+
+def test_lru_eviction_of_unreferenced_leaves():
+    cache = _make_cache(4)  # room for exactly 4 pages
+    seqs = [[tag * 16 + i for i in range(8)] for tag in (1, 2)]  # 2×2 pages
+    for seq in seqs:
+        ks, vs = _sources(len(seq))
+        cache.insert(seq, ks, vs)
+    assert cache.pool.free_pages == 0
+    # touch seq 0 → seq 1 becomes LRU
+    cache.match(seqs[0]).release()
+    ks, vs = _sources(8)
+    cache.insert([3 * 16 + i for i in range(8)], ks, vs)
+    assert cache.stats.evicted_pages == 2
+    m1 = cache.match(seqs[1])
+    assert m1.length == 0  # the LRU victim is gone
+    m1.release()
+    m0 = cache.match(seqs[0])
+    assert m0.length == 8  # the recently-used entry survived
+    m0.release()
+
+
+def test_locked_nodes_survive_eviction_pressure():
+    cache = _make_cache(2)
+    seq = list(range(8))
+    ks, vs = _sources(len(seq))
+    cache.insert(seq, ks, vs)
+    held = cache.match(seq)     # lock the only entry
+    assert held.length == 8
+    other = [50 + i for i in range(8)]
+    ko, vo = _sources(len(other))
+    # pool is full and everything is locked → insert must skip, not evict
+    assert cache.insert(other, ko, vo) == 0
+    assert cache.stats.evicted_pages == 0
+    assert _page_positions(cache, held.pages) == [0, 4]  # payload intact
+    held.release()
+    # unlocked now → the same insert evicts and succeeds
+    assert cache.insert(other, ko, vo) == 2
+    assert cache.stats.evicted_pages == 2
+
+
+def test_partial_page_never_cached():
+    cache = _make_cache(8)
+    seq = list(range(PAGE - 1))  # below one page
+    ks, vs = _sources(len(seq))
+    assert cache.insert(seq, ks, vs) == 0
+    m = cache.match(seq)
+    assert m.length == 0 and m.pages == []
+    m.release()
+
+
+# ---------------------------------------------------------------------------
+# Canonical prompt layout goldens (prefix-sharing byte stability)
+# ---------------------------------------------------------------------------
+
+GOLDEN_BLOCK_PROMPT = (
+    'Find indexes x,y where x is the number of an entry in collection 1 '
+    'and y the number of an entry in collection 2 such that theme matches '
+    '(make sure to catch all pairs!)!\n'
+    'Separate index pairs by semicolons.\n'
+    'Write "Finished" after the last pair!\n'
+    '\n'
+    'Text Collection 1:\n'
+    '1. red car\n'
+    '2. blue boat\n'
+    'Text Collection 2:\n'
+    '1. want red\n'
+    'Index pairs:'
+)
+
+
+def test_block_prompt_golden_bytes():
+    """A layout drift silently zeroes the serving stack's prefix-cache hit
+    rate — the exact rendered bytes are pinned."""
+    got = block_prompt(["red car", "blue boat"], ["want red"],
+                       "theme matches")
+    assert got == GOLDEN_BLOCK_PROMPT
+
+
+def test_block_prompt_is_prefix_plus_suffix():
+    b1, j = ["red car", "blue boat"], "theme matches"
+    prefix = block_prompt_shared_prefix(b1, j)
+    assert GOLDEN_BLOCK_PROMPT.startswith(prefix)
+    for b2 in (["want red"], ["x"], ["a", "b", "c"]):
+        assert (block_prompt(b1, b2, j)
+                == prefix + block_prompt_variable_suffix(b2))
+
+
+def test_same_left_block_shares_prefix_bytes():
+    """Consecutive block prompts of one outer-loop iteration must share
+    the full header+left-block prefix byte-for-byte (the unit of KV
+    reuse)."""
+    b1, j = [f"left {i}" for i in range(4)], "cond"
+    prompts = [block_prompt(b1, [f"right {k}"], j) for k in range(3)]
+    prefix = block_prompt_shared_prefix(b1, j)
+    assert all(p.startswith(prefix) for p in prompts)
+    # and the shared prefix is the maximal common prefix up to the
+    # right-block divergence
+    tails = [p[len(prefix):] for p in prompts]
+    assert all(t.startswith("Text Collection 2:\n") for t in tails)
+
+
+# ---------------------------------------------------------------------------
+# Engine cache parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_smoke_config("granite-3-2b")
+    return init_params(model_specs(cfg), KEY, jnp.float32)
+
+
+def _engine(params, **kw):
+    cfg = get_smoke_config("granite-3-2b")
+    kw.setdefault("max_seq", 256)
+    kw.setdefault("slots", 3)
+    kw.setdefault("prefill_buckets", (64, 128, 256))
+    return Engine(cfg, params, ByteTokenizer(cfg.vocab_size), **kw)
+
+
+@pytest.fixture(scope="module")
+def cached_engine(params):
+    return _engine(params, prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def plain_engine(params):
+    return _engine(params, prefix_cache=False)
+
+
+@pytest.fixture(scope="module")
+def evicting_engine(params):
+    # pool of 16 pages = 256 tokens, far below the test working sets
+    return _engine(params, prefix_cache=True, prefix_pool_pages=16)
+
+
+def _run(engine, requests):
+    """requests: [(prompt, max_tokens, stop, expected)] → (executor, results)."""
+    ex = engine.executor()
+    handles = [ex.submit(p, max_tokens=mt, stop=stop, expected=exp)
+               for (p, mt, stop, exp) in requests]
+    ex.drain()
+    return ex, [h.result for h in handles]
+
+
+def _assert_parity(on, off, results_on, results_off):
+    for a, b in zip(results_on, results_off):
+        assert a.text == b.text
+        assert a.finish_reason == b.finish_reason
+        assert a.prompt_tokens == b.prompt_tokens
+        assert a.completion_tokens == b.completion_tokens
+        assert b.cached_prompt_tokens == 0
+        assert 0 <= a.cached_prompt_tokens < a.prompt_tokens
+    assert on.stats.generated_tokens == off.stats.generated_tokens
+    # cached + computed must account for every prompt token, exactly
+    assert (on.stats.prefill_tokens_computed + on.stats.prefill_tokens_cached
+            == off.stats.prefill_tokens_computed)
+    assert off.stats.prefill_tokens_cached == 0
+
+
+def test_greedy_parity_with_shared_prefixes(cached_engine, plain_engine):
+    """Greedy decode (no teacher forcing): the cache must not change a
+    single sampled token."""
+    shared = "Shared instruction header, quite long so pages align: " * 2
+    reqs = [(shared + f"variable tail number {i}", 8, None, None)
+            for i in range(7)]
+    ex_on, res_on = _run(cached_engine, reqs)
+    ex_off, res_off = _run(plain_engine, reqs)
+    _assert_parity(ex_on, ex_off, res_on, res_off)
+    assert ex_on.stats.prefill_tokens_cached > 0  # the cache actually hit
+
+
+def test_repeat_prompt_full_hit_still_computes_one_token(cached_engine):
+    """A byte-identical re-submission caps the cached prefix at len-1
+    (page-aligned): the last token is always computed to seed decode."""
+    prompt = "Exactly repeated prompt body for the full-hit cap test."
+    page = cached_engine.prefix_cache.page_size
+    n = cached_engine.count_tokens(prompt)
+    _, first = _run(cached_engine, [(prompt, 4, None, "ok")])
+    ex, second = _run(cached_engine, [(prompt, 4, None, "ok")])
+    assert second[0].text == first[0].text
+    expect_cached = (n - 1) // page * page
+    assert second[0].cached_prompt_tokens == expect_cached
+    assert ex.stats.prefill_tokens_computed == n - expect_cached > 0
+
+
+def test_parity_under_eviction_pressure(evicting_engine, plain_engine):
+    """Pool far smaller than the working set: entries are evicted and
+    re-interned continuously; outputs and accounting stay identical."""
+    groups = [
+        ("Alpha group preamble text that is long enough to span pages: " * 2, 4),
+        ("Beta group preamble, equally long and page-spanning padding: " * 2, 4),
+        ("Gamma group preamble with its own long shared page content: " * 2, 4),
+    ]
+    reqs = []
+    for g, (shared, n) in enumerate(groups):
+        for i in range(n):
+            reqs.append((shared + f"tail {g}.{i}", 6, None, f"ans {g}.{i}"))
+    ex_on, res_on = _run(evicting_engine, reqs)
+    ex_off, res_off = _run(plain_engine, reqs)
+    _assert_parity(ex_on, ex_off, res_on, res_off)
+    assert evicting_engine.prefix_cache.stats.evicted_pages > 0
+
+
+def test_stop_strings_and_budgets_with_cache(cached_engine, plain_engine):
+    """Per-request stop strings and max_tokens keep exact semantics when
+    their prompts are served partly from cache."""
+    shared = "Stop-string parity preamble shared across the batch here: " * 2
+    reqs = [
+        (shared + "q1", 32, "DONE", "xy DONE zz"),
+        (shared + "q2", 3, None, "abcdefghij"),   # truncated by budget
+        (shared + "q3", 32, "END", "pq END rr"),
+        (shared + "q4", 32, None, "short"),       # EOS after forced text
+    ]
+    ex_on, res_on = _run(cached_engine, reqs)
+    ex_off, res_off = _run(plain_engine, reqs)
+    _assert_parity(ex_on, ex_off, res_on, res_off)
+    assert res_on[0].finish_reason == "stop"
+    assert res_on[1].finish_reason == "length"
+    assert res_on[1].completion_tokens == 3
+
+
+def test_ssm_family_gates_prefix_cache_off(params):
+    """SSM state summarizes the whole prefix — no page-level reuse is
+    possible, so the engine must refuse to build the cache."""
+    del params
+    cfg = get_smoke_config("mamba2-130m")
+    p = init_params(model_specs(cfg), KEY, jnp.float32)
+    eng = Engine(cfg, p, ByteTokenizer(cfg.vocab_size), max_seq=128,
+                 slots=2, prefix_cache=True)
+    assert eng.prefix_cache is None
+    assert eng.prefix_cache_stats() is None
+
+
+def test_env_var_gates_prefix_cache(params, monkeypatch):
+    monkeypatch.setenv("REPRO_PREFIX_CACHE", "0")
+    assert _engine(params).prefix_cache is None
+    monkeypatch.setenv("REPRO_PREFIX_CACHE", "1")
+    assert _engine(params).prefix_cache is not None
+    # explicit arg wins over env
+    assert _engine(params, prefix_cache=False).prefix_cache is None
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _workloads(draw):
+        """Prompt sets with shared prefixes + forced answers, sized to
+        exceed the slot count (mid-decode refill) and the small pool
+        (eviction pressure)."""
+        n_groups = draw(st.integers(1, 3))
+        reqs = []
+        for g in range(n_groups):
+            shared_len = draw(st.integers(40, 140))
+            shared = f"group {g} " + "x" * shared_len + " "
+            for i in range(draw(st.integers(2, 4))):
+                tail = draw(st.text(
+                    alphabet="abcdefgh ", min_size=1, max_size=30))
+                ans_len = draw(st.integers(0, 10))
+                max_toks = draw(st.integers(1, 12))
+                stop = draw(st.sampled_from([None, "DONE"]))
+                answer = "a" * ans_len + (" DONE tail" if stop else "")
+                reqs.append((shared + f"t{i} " + tail, max_toks, stop, answer))
+        return reqs
+
+    @given(_workloads())
+    @settings(max_examples=5, deadline=None)
+    def test_cache_parity_property(evicting_engine, plain_engine, reqs):
+        """THE acceptance property: outputs, finish reasons, and token
+        accounting identical with the cache on vs off, across slot
+        refill, heterogeneous stops/budgets, and pool eviction."""
+        ex_on, res_on = _run(evicting_engine, reqs)
+        ex_off, res_off = _run(plain_engine, reqs)
+        _assert_parity(ex_on, ex_off, res_on, res_off)

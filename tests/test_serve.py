@@ -180,6 +180,31 @@ def test_executor_requeues_on_engine_failure(engine, monkeypatch):
     assert h.status == "queued" and h.retries > 1
 
 
+def test_prefill_failure_keeps_prefill_stats_exact(engine, monkeypatch):
+    """Regression: a prefill_rows failure after handles went ACTIVE must
+    not back out prefill-token stats that were never added (the counters
+    fed the benchmark's computed-prefill ratio — a retry used to zero or
+    negate them)."""
+    ex = engine.executor(max_retries=2)
+    handles = [ex.submit(f"stat rq {i}:", max_tokens=3, expected="ok")
+               for i in range(2)]
+    real = engine.prefill_rows
+    failures = iter([True])
+
+    def flaky(prompts):
+        if next(failures, False):
+            raise RuntimeError("injected prefill failure")
+        return real(prompts)
+
+    monkeypatch.setattr(engine, "prefill_rows", flaky)
+    ex.drain()
+    assert all(h.result is not None for h in handles)
+    total = sum(h.prompt_tokens for h in handles)
+    assert (ex.stats.prefill_tokens_computed
+            + ex.stats.prefill_tokens_cached == total)
+    assert ex.stats.prefill_tokens_computed > 0
+
+
 def test_block_join_resume_out_of_order(engine):
     """block_join(completed=...) must not re-pay finished blocks even when
     completions arrive out of order through the executor (skewed per-block
