@@ -6,12 +6,15 @@ sentinel, token accounting) and executes Algorithm 2/3 against it through
 :class:`EngineClient`.  Block prompts are enqueued on the slot-refill
 continuous-batching executor and consumed as they complete — the moment a
 block's answer finishes, its cache slot is reused for the next queued
-block (no barrier waves; DESIGN.md §8).  Consecutive block prompts share
+block (no barrier waves; DESIGN.md §8).  KV lives page-granular in one
+refcounted pool with page-table decode attention (DESIGN.md §10;
+disable with ``REPRO_PAGED_KV=0``).  Consecutive block prompts share
 their header + left-block bytes, so the engine's radix-tree KV prefix
-cache (DESIGN.md §9; disable with ``REPRO_PREFIX_CACHE=0``) serves the
-shared prefix from its paged pool and chunked-prefills only each
-prompt's right-block suffix — watch the ``cached_prompt_tokens`` split
-in the output below.  Demo weights are random, so the oracle
+cache (DESIGN.md §9; disable with ``REPRO_PREFIX_CACHE=0``) shares the
+cached prefix pages zero-copy into each new row's page table and
+chunked-prefills only each prompt's right-block suffix — watch the
+``cached_prompt_tokens`` split in the output below.  Demo weights are
+random, so the oracle
 teacher-forces the answers — every forward pass, cache write and decode
 step still runs for real, with honest token accounting.
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import chunked_prefill as _cp
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_decode_attention as _pda
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import topk_sim as _tk
@@ -45,6 +46,13 @@ def chunked_prefill_attention(q, k_suffix, v_suffix, k_prefix, v_prefix,
 def decode_attention(q, k_cache, v_cache, cache_len):
     return _da.decode_attention(
         q, k_cache, v_cache, cache_len, interpret=_interpret()
+    )
+
+
+@jax.jit
+def paged_decode_attention(q, k_pool, v_pool, page_table, cache_len):
+    return _pda.paged_decode_attention(
+        q, k_pool, v_pool, page_table, cache_len, interpret=_interpret()
     )
 
 

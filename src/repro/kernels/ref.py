@@ -72,6 +72,21 @@ def decode_attention_ref(q, k_cache, v_cache, cache_len):
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, cache_len):
+    """Decode attention through a page table — the paged-KV oracle.
+
+    q: (B,1,H,hd); k/v_pool: (n_pages, page, KV, hd);
+    page_table: (B, n_slots) int32; cache_len: (B,).  Table slot ``i`` of
+    row ``b`` holds context positions ``[i·page, (i+1)·page)`` in pool
+    page ``page_table[b, i]``; positions >= cache_len are masked.
+    """
+    n_pages, page, KV, hd = k_pool.shape
+    B, n_slots = page_table.shape
+    k = k_pool[page_table].reshape(B, n_slots * page, KV, hd)
+    v = v_pool[page_table].reshape(B, n_slots * page, KV, hd)
+    return decode_attention_ref(q, k, v, cache_len)
+
+
 def ssd_scan_ref(x, dt, A, b, c):
     """Sequential (non-chunked) SSD recurrence — the gold reference.
 

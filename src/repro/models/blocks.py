@@ -150,6 +150,43 @@ def attn_decode(
     return shard(out, "batch", None, "embed"), k_cache, v_cache
 
 
+def attn_decode_paged(
+    cfg: ModelConfig, p, x: jax.Array,
+    k_pool: jax.Array, v_pool: jax.Array, page_table: jax.Array,
+    cache_len: jax.Array, write_page: jax.Array, write_off: jax.Array,
+):
+    """One-token attention through a per-row page table (DESIGN.md §10).
+
+    ``x``: (B, 1, D); ``k_pool``/``v_pool``: this layer's shard of the
+    shared page pool ``(n_pages, page, KV, hd)``; ``page_table``:
+    (B, n_slots) pool page per context slot; ``write_page``/``write_off``:
+    (B,) where the new token's K/V lands — the engine routes rows that
+    must not write (inactive slots) to its dump page, and shared
+    (refcount > 1) pages are never a write target (copy-on-write happens
+    host-side before the step).  Returns ``(out, new_k_pool,
+    new_v_pool)``; the pools are updated with a (B,)-point scatter —
+    appended in place, no row-granular cache copies.
+    """
+    positions = cache_len[:, None]  # (B,1) — position of the new token
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = shard(q, "batch", None, None, None)
+    k_pool = k_pool.at[write_page, write_off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[write_page, write_off].set(v[:, 0].astype(v_pool.dtype))
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        o = kops.paged_decode_attention(q, k_pool, v_pool, page_table,
+                                        cache_len + 1)
+    else:
+        o = L.paged_decode_attention(q, k_pool, v_pool, page_table,
+                                     cache_len + 1)
+    mask = _head_mask(cfg, o.dtype)
+    if mask is not None:
+        o = o * mask[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, deq(p["wo"], o.dtype))
+    return shard(out, "batch", None, "embed"), k_pool, v_pool
+
+
 # ---------------------------------------------------------------------------
 # Dense FFN block (pre-norm SwiGLU)
 # ---------------------------------------------------------------------------

@@ -257,6 +257,33 @@ def decode_attention(
     return o.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q: jax.Array,           # (B, 1, H, hd) — current token's queries
+    k_pool: jax.Array,      # (n_pages, page, KVH, hd) — shared page pool
+    v_pool: jax.Array,      # (n_pages, page, KVH, hd)
+    page_table: jax.Array,  # (B, n_slots) int32 — pool page per table slot
+    cache_len: jax.Array,   # (B,) valid context length per row
+) -> jax.Array:
+    """Single-token attention through a per-row page table (XLA path).
+
+    The CPU-CI fallback for the paged decode kernel
+    (``kernels/paged_decode_attention.py``): the row's pages are gathered
+    into a contiguous (B, n_slots·page) view and fed to the dense masked
+    decode attention.  Token positions are identical to a dense cache row
+    (table slot ``i`` holds positions ``[i·page, (i+1)·page)``) and
+    masked positions vanish exactly under the fp32 softmax, so outputs
+    are bit-identical to :func:`decode_attention` over the equivalent
+    contiguous row — the REPRO_PAGED_KV=0/1 parity contract rests on
+    this.  The gather is a transient activation (XLA fuses it into the
+    attention reads); the *stored* cache stays page-granular.
+    """
+    n_pages, page, KVH, hd = k_pool.shape
+    B, n_slots = page_table.shape
+    k = k_pool[page_table].reshape(B, n_slots * page, KVH, hd)
+    v = v_pool[page_table].reshape(B, n_slots * page, KVH, hd)
+    return decode_attention(q, k, v, cache_len)
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -185,11 +185,41 @@ def forward(
 # ---------------------------------------------------------------------------
 
 
-def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
-    """Abstract cache tree (Spec objects; materialize like params)."""
+def cache_specs(
+    cfg: ModelConfig, batch: int, max_seq: int,
+    *, page_size: Optional[int] = None, n_pages: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Abstract cache tree (Spec objects; materialize like params).
+
+    With ``page_size``/``n_pages`` set, KV families switch to the paged
+    layout (DESIGN.md §10): K/V live in one shared refcounted page pool
+    ``(layers, n_pages, page, KV, hd)`` — **not** per-row ``batch ×
+    max_seq`` rows — and each row carries a page table mapping its
+    context slots to pool pages.  Pool HBM is sized by ``n_pages``, i.e.
+    by the *actual* live tokens (plus sharing), not by ``batch ×
+    max_seq`` worst-case reservation.  SSM/hybrid state is not paged
+    (the serving engine gates those families to the dense layout).
+    """
     fam = cfg.family
     KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     nst = n_stacks(cfg)
+    if page_size is not None:
+        if fam not in KV_ONLY_FAMILIES:
+            raise ValueError(
+                f"paged KV cache needs a KV-only family, got {fam!r}")
+        if n_pages is None:
+            raise ValueError("paged cache_specs needs n_pages")
+        kv = Spec((nst, n_pages, page_size, KV, hd),
+                  ("layers", "pages", "page", "kv_heads", "head_dim"),
+                  init="zeros")
+        return {
+            "len": Spec((batch,), (None,), init="zeros"),
+            # ceil: a max_seq not divisible by the page size still needs
+            # a table slot for its final, partial page (engine._maxp)
+            "pages": Spec((batch, -(-max_seq // page_size)), (None, None),
+                          init="zeros"),
+            "k": kv, "v": kv,
+        }
     out: Dict[str, Any] = {"len": Spec((batch,), (None,), init="zeros")}
     if fam in ("dense", "audio", "vlm", "moe"):
         kv = Spec((nst, batch, max_seq, KV, hd),
@@ -336,7 +366,7 @@ KV_ONLY_FAMILIES = ("dense", "audio", "vlm", "moe")
 def chunked_prefill(
     cfg: ModelConfig, params, batch: Dict[str, jax.Array], max_seq: int,
     valid_len: jax.Array, prefix_k: jax.Array, prefix_v: jax.Array,
-    prefix_len: jax.Array,
+    prefix_len: jax.Array, paged: bool = False,
 ) -> Tuple[Dict[str, jax.Array], jax.Array]:
     """Prefill only the *uncached suffix* of each prompt over an existing
     prefix cache (DESIGN.md §9).
@@ -346,11 +376,17 @@ def chunked_prefill(
     gathered from the paged pool (rows ragged — ``prefix_len`` (B,) masks
     the padding); ``valid_len`` (B,) is the ragged suffix length.  Suffix
     tokens sit at absolute positions ``prefix_len + i`` (RoPE), attend to
-    the valid prefix and causally within the suffix, and the returned
-    cache has the same contiguous-slot layout as :func:`prefill`: prefix
-    pages at ``[0, prefix_len)``, suffix K/V at
-    ``[prefix_len, prefix_len + valid_len)``, ``len = prefix_len +
-    valid_len`` — decode needs no changes whatsoever.
+    the valid prefix and causally within the suffix.
+
+    With ``paged=False`` (dense engine) the returned cache has the same
+    contiguous-slot layout as :func:`prefill`: prefix pages at
+    ``[0, prefix_len)``, suffix K/V at ``[prefix_len, prefix_len +
+    valid_len)``, ``len = prefix_len + valid_len`` — decode needs no
+    changes whatsoever.  With ``paged=True`` (DESIGN.md §10) the cache
+    holds the **suffix K/V only**, shaped ``(layers, B, S, KV, hd)`` —
+    the engine scatters them straight into freshly allocated pool pages
+    (the matched prefix is already resident as shared pages and is never
+    re-materialized per row).
 
     Only KV-cache-only families support this: SSM/hybrid states summarize
     the whole prefix into a fixed-size state that cannot be re-anchored
@@ -384,13 +420,20 @@ def chunked_prefill(
         return shard(buf[:, :max_seq], "batch", "kv_seq", "kv_heads",
                      "head_dim")
 
+    def suffix_kv(k):  # (B,S,KV,hd) — paged: the engine page-scatters it
+        return shard(k.astype(cache_dtype), "batch", "kv_seq", "kv_heads",
+                     "head_dim")
+
     def body(x, layer_inputs):
         layer_params, kp, vp = layer_inputs
         x = shard(x, "batch", "act_seq", "embed")
         out, (k, v) = B.attn_apply_chunked(
             cfg, layer_params["attn"], x, positions, kp, vp, prefix_len)
         x = x + out
-        ys = {"k": place_kv(k, kp), "v": place_kv(v, vp)}
+        if paged:
+            ys = {"k": suffix_kv(k), "v": suffix_kv(v)}
+        else:
+            ys = {"k": place_kv(k, kp), "v": place_kv(v, vp)}
         if cfg.family == "moe":
             out, _ = B.moe_apply(cfg, layer_params["moe"], x)
             x = x + out
@@ -489,15 +532,50 @@ def decode_step(
     empty, awaiting refill) keep a frozen ``len`` — their dummy-token
     writes land on one fixed cache position and the whole row is
     overwritten when a new request is prefilled into the slot.
+
+    **Paged mode** (DESIGN.md §10): when the cache tree carries a
+    ``"pages"`` page table, K/V live in one shared refcounted page pool
+    ``(layers, n_pages, page, KV, hd)`` instead of per-row ``max_seq``
+    rows.  The new token's K/V is appended *in place* into the page
+    holding position ``len`` (one (B,)-point scatter per layer) and
+    attention reads through the page table
+    (:func:`repro.models.blocks.attn_decode_paged`).  Inactive rows are
+    routed by the engine to a dump page (their table rows point at it
+    with ``len = 0``) so a retired slot can never scribble on a page
+    that has been recycled to another request.  KV-only families only.
     """
     fam = cfg.family
     x = L.embed(tokens, params["embed"])
     x = shard(x, "batch", None, "embed")
     cache_len = cache["len"]
+    paged = "pages" in cache
+    if paged:
+        if fam not in KV_ONLY_FAMILIES:
+            raise ValueError(
+                f"paged decode needs a KV-only cache; family {fam!r} "
+                "carries SSM state")
+        page = cache["k"].shape[2]
+        page_table = cache["pages"]
+        slot_idx = jnp.clip(cache_len // page, 0, page_table.shape[1] - 1)
+        write_page = jnp.take_along_axis(page_table, slot_idx[:, None],
+                                         axis=1)[:, 0]
+        write_off = cache_len % page
 
     def _layer(x, layer_params, layer_cache):
         ys = {}
-        if fam in ("dense", "audio", "vlm", "moe"):
+        if paged:
+            out, k, v = B.attn_decode_paged(
+                cfg, layer_params["attn"], x,
+                layer_cache["k"], layer_cache["v"], page_table,
+                cache_len, write_page, write_off)
+            x = x + out
+            ys["k"], ys["v"] = k, v
+            if fam == "moe":
+                out, _ = B.moe_apply(cfg, layer_params["moe"], x)
+                x = x + out
+            else:
+                x = x + B.mlp_apply(cfg, layer_params["mlp"], x)
+        elif fam in ("dense", "audio", "vlm", "moe"):
             out, k, v = B.attn_decode(cfg, layer_params["attn"], x,
                                       layer_cache["k"], layer_cache["v"], cache_len)
             x = x + out
@@ -539,7 +617,9 @@ def decode_step(
             ys["ssm"] = jnp.stack(ssms)
         return x, ys
 
-    layer_caches = {k: v for k, v in cache.items() if k != "len"}
+    # "len" is batch-wide; "pages" (paged mode) is per-row, not per-layer
+    layer_caches = {k: v for k, v in cache.items()
+                    if k not in ("len", "pages")}
 
     def _update(caches, ys, i):
         return {
@@ -569,4 +649,6 @@ def decode_step(
     logits = L.unembed(x, table)[:, 0]
     new_caches["len"] = cache_len + (
         1 if active is None else active.astype(jnp.int32))
+    if paged:
+        new_caches["pages"] = page_table
     return new_caches, logits

@@ -1,4 +1,10 @@
-from repro.serve.engine import DecodeState, Engine, GenResult, StopMatcher
+from repro.serve.engine import (
+    DecodeState,
+    Engine,
+    GenResult,
+    PagedDecodeState,
+    StopMatcher,
+)
 from repro.serve.executor import (
     ContinuousBatchingExecutor,
     ExecutorStats,
@@ -20,6 +26,7 @@ __all__ = [
     "EngineHandle",
     "ExecutorStats",
     "GenResult",
+    "PagedDecodeState",
     "PagedKVPool",
     "PrefixCacheStats",
     "RadixPrefixCache",

@@ -10,21 +10,33 @@ The paper's block-join prompts run through *this* (via
   slot API (:meth:`init_state` / :meth:`prefill_rows` / :meth:`insert_row`
   / :meth:`decode_active`) driven by
   :class:`repro.serve.executor.ContinuousBatchingExecutor`: each of the
-  ``slots`` cache rows hosts one request; the moment a row finishes it is
+  ``slots`` decode rows hosts one request; the moment a row finishes it is
   retired and a queued prompt is prefilled into the freed slot mid-decode —
   no barrier between "waves" (DESIGN.md §8).
+* **Paged KV** (default for KV-only families, ``REPRO_PAGED_KV=0/1``) —
+  all KV lives page-granular in **one shared refcounted page pool**
+  (DESIGN.md §10): each slot owns a *page table* instead of a dense
+  ``max_seq`` cache row, decode attention reads through the table
+  (:mod:`repro.kernels.paged_decode_attention` / the XLA gather
+  fallback) and appends new tokens into pages in place, and prefix-cache
+  hits are **zero-copy** — the matched pages are refcount-shared into
+  the new row's table, read-only, with copy-on-write guarding the (never
+  shared in practice) partial tail page.  HBM is bounded by *live
+  tokens* (plus sharing), not ``slots × max_seq`` over-reservation.
 * **Per-row termination** — greedy sampling; per-row stop-string / EOS /
   ``max_tokens`` termination with O(1) incremental stop-string suffix
   matching (:class:`StopMatcher`) — stop strings are the ``Finished``
   sentinel mechanism of Algorithm 2.
 * **Radix-tree KV prefix cache** — prompt token-ID prefixes are interned
   page-granular in :class:`repro.serve.prefix_cache.RadixPrefixCache`;
-  ``prefill_rows`` looks up the longest cached prefix, copies its pages
-  into the slot row, and **chunked-prefills only the uncached suffix**
+  ``prefill_rows`` looks up the longest cached prefix and
+  **chunked-prefills only the uncached suffix**
   (:func:`repro.models.chunked_prefill`) — block-join prompts sharing
-  their header + left block skip recomputing it (DESIGN.md §9).
+  their header + left block skip recomputing it (DESIGN.md §9).  On the
+  dense path the hit is copied into the slot row; on the paged path it
+  is shared by reference (§10).
 * **Token accounting** — real tokenizer counts, the same interface the
-  cost model prices (prompt vs completion tokens, now split into cached
+  cost model prices (prompt vs completion tokens, split into cached
   vs computed prompt tokens).
 * **Teacher-forcing mode** — ``expected`` answers can be fed so the full
   serving stack (prefill, cache writes, decode steps, stop handling, token
@@ -47,7 +59,7 @@ from repro.core.llm_client import cancel_unfinished
 from repro.models import chunked_prefill, decode_step, prefill
 from repro.models.model import KV_ONLY_FAMILIES, cache_specs
 from repro.models.params import Spec, is_spec
-from repro.serve.prefix_cache import RadixPrefixCache
+from repro.serve.prefix_cache import PagedKVPool, RadixPrefixCache
 
 
 @dataclasses.dataclass
@@ -98,7 +110,8 @@ class StopMatcher:
 
 @dataclasses.dataclass
 class DecodeState:
-    """Device-side state of the ``slots``-wide continuous batch.
+    """Device-side state of the ``slots``-wide continuous batch (dense
+    KV layout).
 
     ``cache``  — batched KV/SSM cache tree (batch dim = engine.slots),
     allocated once at ``max_seq`` capacity; rows are overwritten in place
@@ -111,11 +124,33 @@ class DecodeState:
     logits: jax.Array
 
 
+@dataclasses.dataclass
+class PagedDecodeState:
+    """State of the ``slots``-wide continuous batch in paged-KV mode
+    (DESIGN.md §10).
+
+    There is **no per-slot cache row**: K/V live in the engine's shared
+    page pool, and each slot carries only its page table (host-side list
+    of pool page ids, in context order) and its valid length.  The
+    engine rebuilds the small device-side ``(slots, max_pages)`` table
+    argument each decode step.
+    """
+
+    logits: jax.Array          # (slots, vocab)
+    lens: np.ndarray           # (slots,) int32 — valid context length
+    tables: List[List[int]]    # per-slot pool page ids, context order
+
+
 def _bucket(n: int, buckets: Sequence[int]) -> int:
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    # never silently clamp: a clamped bucket would truncate the prompt
+    # downstream (the old behavior) — fail loudly instead
+    raise ValueError(
+        f"sequence of {n} tokens exceeds the largest prefill bucket "
+        f"{buckets[-1]} — prompt longer than max_seq?"
+    )
 
 
 class Engine:
@@ -129,38 +164,96 @@ class Engine:
         slots: int = 8,
         prefill_buckets: Sequence[int] = (128, 256, 512, 1024),
         prefix_cache: Optional[bool] = None,
-        prefix_page_size: int = 16,
+        prefix_page_size: Optional[int] = None,
         prefix_pool_pages: Optional[int] = None,
+        paged: Optional[bool] = None,
+        page_size: int = 16,
+        pool_pages: Optional[int] = None,
     ):
         self.cfg = cfg
         self.params = params
         self.tokenizer = tokenizer
         self.max_seq = max_seq
         self.slots = slots
-        self.prefill_buckets = [b for b in prefill_buckets if b <= max_seq] or [max_seq]
+
+        # Paged KV (DESIGN.md §10): default-on for KV-only families,
+        # overridable per engine or via REPRO_PAGED_KV=0/1 (the CI matrix
+        # runs both).  SSM/hybrid state is not page-granular — dense rows.
+        if paged is None:
+            paged = os.environ.get("REPRO_PAGED_KV", "1") != "0"
+        self.paged = bool(paged) and cfg.family in KV_ONLY_FAMILIES
+        # ONE page size everywhere: the paged pool and the prefix cache
+        # (dense engines may override the latter via prefix_page_size) —
+        # cached-token accounting is only comparable across engines that
+        # match at the same page granularity
+        if self.paged and prefix_page_size not in (None, page_size):
+            raise ValueError(
+                "a paged engine has ONE page granularity: the prefix cache "
+                f"shares the pool's page_size={page_size}; got "
+                f"prefix_page_size={prefix_page_size}")
+        self.page_size = (prefix_page_size if not self.paged
+                          and prefix_page_size is not None else page_size)
+        pg = self.page_size
+
+        buckets = sorted({b for b in prefill_buckets if b <= max_seq} | {max_seq})
+        if self.paged:
+            # page-scatter needs page-aligned buckets
+            buckets = sorted({min(-(-b // pg) * pg, -(-max_seq // pg) * pg)
+                              for b in buckets})
+        self.prefill_buckets = buckets
+        self._maxp = -(-max_seq // pg)  # page-table width per row
 
         # Radix-tree KV prefix cache (DESIGN.md §9): default-on for KV-only
         # families, overridable per engine or via REPRO_PREFIX_CACHE=0/1
-        # (the CI matrix runs both).  SSM/hybrid families are gated off.
+        # (the CI matrix runs both).  SSM/hybrid families are gated off:
+        # their states cannot be re-anchored mid-sequence.
         if prefix_cache is None:
             prefix_cache = os.environ.get("REPRO_PREFIX_CACHE", "1") != "0"
         self.prefix_cache: Optional[RadixPrefixCache] = None
-        # SSM/hybrid states cannot be re-anchored mid-sequence, so the
-        # prefix cache is force-disabled for them (DESIGN.md §9)
-        if prefix_cache and cfg.family in KV_ONLY_FAMILIES:
+        self.pool: Optional[PagedKVPool] = None
+        self._dump = -1  # scratch page for inactive rows' decode writes
+        #: high-water mark of *distinct* pages referenced by live decode
+        #: rows (shared prefix pages count once — the zero-copy win); the
+        #: required working set, as opposed to pool.peak_pages which also
+        #: counts elastic (evictable) prefix-cache retention
+        self._peak_live_pages = 0
+
+        if self.paged:
+            # ONE pool backs live decode state and the prefix cache; +1
+            # for the dump page.  Sized by pool_pages (benchmarks shrink
+            # it to show the footprint win) or the dense-equivalent
+            # capacity by default.
+            n_pages = (pool_pages if pool_pages is not None
+                       else prefix_pool_pages if prefix_pool_pages is not None
+                       else slots * self._maxp)
+            self.pool = PagedKVPool(n_pages + 1, pg)
+            self._dump = self.pool.alloc(1)[0]  # pinned forever
+            if prefix_cache and cfg.family in KV_ONLY_FAMILIES:
+                self.prefix_cache = RadixPrefixCache(
+                    self.pool.n_pages, pg, pool=self.pool)
+        elif prefix_cache and cfg.family in KV_ONLY_FAMILIES:
             n_pages = (prefix_pool_pages if prefix_pool_pages is not None
-                       else 2 * slots * max_seq // prefix_page_size)
-            self.prefix_cache = RadixPrefixCache(n_pages, prefix_page_size)
+                       else 2 * slots * max_seq // pg)
+            self.prefix_cache = RadixPrefixCache(n_pages, pg)
+
         # page-aligned buckets for the gathered-prefix length
         self._prefix_buckets = sorted({
-            b for b in [4 * prefix_page_size, *self.prefill_buckets,
-                        max_seq // prefix_page_size * prefix_page_size]
-            if 0 < b <= max_seq and b % prefix_page_size == 0
+            b for b in [4 * pg, *self.prefill_buckets,
+                        max_seq // pg * pg]
+            if 0 < b <= max_seq and b % pg == 0
         }) or [max_seq]
 
         self._prefill = jax.jit(
             lambda p, toks, vlen: prefill(
                 cfg, p, {"tokens": toks}, max_seq=self.max_seq, valid_len=vlen
+            )
+        )
+        # paged prefill: no max_seq padding — K/V come back bucket-length
+        # and are page-scattered into the pool (shape-specialized per
+        # bucket, exactly like the dense prefill)
+        self._prefill_bucket = jax.jit(
+            lambda p, toks, vlen: prefill(
+                cfg, p, {"tokens": toks}, max_seq=toks.shape[1], valid_len=vlen
             )
         )
         self._chunked_prefill = jax.jit(
@@ -169,8 +262,23 @@ class Engine:
                 valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
             )
         )
+        self._chunked_prefill_paged = jax.jit(
+            lambda p, toks, vlen, kp, vp, plen: chunked_prefill(
+                cfg, p, {"tokens": toks}, max_seq=self.max_seq,
+                valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
+                paged=True,
+            )
+        )
         self._decode = jax.jit(
             lambda p, cache, toks, act: decode_step(cfg, p, cache, toks, active=act)
+        )
+        # paged decode donates the cache tree: the page pool (GiB-scale
+        # at real configs) must be appended to in place, not copied per
+        # token — the engine rebinds pool.k/v from the outputs
+        self._decode_paged = jax.jit(
+            lambda p, cache, toks, act: decode_step(cfg, p, cache, toks,
+                                                    active=act),
+            donate_argnums=(1,),
         )
         # Per-leaf batch axis of the cache tree, derived from the logical
         # axis names in cache_specs — k/v carry batch at axis 1, the hybrid
@@ -181,6 +289,10 @@ class Engine:
             is_leaf=is_spec,
         )
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0, 1))
+        self._insert_logits = jax.jit(
+            lambda dst, src, row, slot: dst.at[slot].set(src[row]),
+            donate_argnums=(0,),
+        )
         self._default_executor = None  # lazy, for the generate() facade
 
     # ------------------------------------------------------------------
@@ -194,15 +306,107 @@ class Engine:
         return self.prefix_cache.stats.summary()
 
     # ------------------------------------------------------------------
+    # Paged-KV bookkeeping (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    @property
+    def total_kv_pages(self) -> int:
+        """Pages available to requests (excludes the pinned dump page)."""
+        return self.pool.n_pages - 1 if self.paged else 0
+
+    def request_pages(self, prompt_tokens: int, max_tokens: int) -> int:
+        """Worst-case page reservation of one request: every position the
+        request can ever occupy (prompt + clamped completion), rounded up
+        to whole pages.  Shared-prefix hits only reduce *actual*
+        allocation — the reservation stays conservative so a mid-decode
+        append can never find the pool empty (tree-only pages are always
+        evictable)."""
+        if not self.paged:
+            return 0
+        need = prompt_tokens + min(max_tokens, self.max_seq - prompt_tokens)
+        return -(-need // self.page_size)
+
+    def kv_stats(self) -> Optional[dict]:
+        """Page-pool occupancy counters (None on the dense engine)."""
+        if not self.paged:
+            return None
+        return {
+            "page_size": self.page_size,
+            "pool_pages": self.total_kv_pages,
+            "pages_in_use": self.pool.allocated_pages - 1,   # sans dump
+            "peak_pages": self.pool.peak_pages - 1,          # sans dump
+            "peak_tokens": (self.pool.peak_pages - 1) * self.page_size,
+            # the required working set: live rows only, sharing deduped
+            "peak_live_pages": self._peak_live_pages,
+            "peak_live_tokens": self._peak_live_pages * self.page_size,
+        }
+
+    def _note_live_pages(self, state: Any) -> None:
+        live = set()
+        for t in state.tables:
+            live.update(t)
+        self._peak_live_pages = max(self._peak_live_pages, len(live))
+
+    def _alloc_pages(self, n: int) -> List[int]:
+        """Allocate ``n`` exclusive pages, evicting unreferenced prefix
+        -cache leaves under pressure.  Raises when the pool genuinely
+        cannot serve (executor admission makes this unreachable)."""
+        if n == 0:
+            return []
+        pages = self.pool.alloc(n)
+        while pages is None:
+            if self.prefix_cache is None or not self.prefix_cache._evict_one():
+                raise RuntimeError(
+                    f"KV page pool exhausted: need {n} pages, "
+                    f"{self.pool.free_pages} free and nothing evictable"
+                )
+            pages = self.pool.alloc(n)
+        return pages
+
+    def _cow_page(self, page: int) -> int:
+        """Copy-on-write a shared page into a fresh exclusive one."""
+        new = self.pool.copy_page(page)
+        while new is None:
+            if self.prefix_cache is None or not self.prefix_cache._evict_one():
+                raise RuntimeError("KV page pool exhausted during copy-on-write")
+            new = self.pool.copy_page(page)
+        return new
+
+    def release_slot(self, state: Any, slot: int) -> None:
+        """Drop a retired slot's page references (paged mode; dense rows
+        are simply overwritten on the next refill)."""
+        if not self.paged or state is None:
+            return
+        if state.tables[slot]:
+            self.pool.decref(state.tables[slot])
+        state.tables[slot] = []
+        state.lens[slot] = 0
+
+    def release_state(self, state: Any) -> None:
+        """Release every slot of a decode state about to be dropped."""
+        if not self.paged or state is None:
+            return
+        for slot in range(self.slots):
+            self.release_slot(state, slot)
+
+    # ------------------------------------------------------------------
     # Incremental slot API (driven by the executor — DESIGN.md §8)
     # ------------------------------------------------------------------
-    def init_state(self) -> DecodeState:
-        """Allocate the ``slots``-wide cache by prefilling placeholder rows.
+    def init_state(self):
+        """Allocate the ``slots``-wide decode state.
 
-        Running the real (jitted) prefill on an all-pad batch yields a cache
-        with exactly the dtypes/shapes later row inserts will scatter into,
-        and shares its compilation with every future refill prefill.
+        Dense: run the real (jitted) prefill on an all-pad batch — a cache
+        with exactly the dtypes/shapes later row inserts will scatter
+        into, sharing its compilation with every future refill prefill.
+        Paged: no cache rows exist at all — just empty page tables and a
+        zero logits buffer (DESIGN.md §10).
         """
+        if self.paged:
+            return PagedDecodeState(
+                logits=jnp.zeros((self.slots, self.cfg.padded_vocab),
+                                 jnp.float32),
+                lens=np.zeros(self.slots, np.int32),
+                tables=[[] for _ in range(self.slots)],
+            )
         B, L = self.slots, self.prefill_buckets[0]
         toks = jnp.zeros((B, L), jnp.int32)
         vlen = jnp.ones((B,), jnp.int32)
@@ -225,11 +429,12 @@ class Engine:
         With the prefix cache on, each prompt's token IDs are looked up in
         the radix tree first; the longest page-aligned cached prefix
         (capped at ``len - 1`` so at least one token is computed — its
-        logits seed decoding) is *gathered* from the paged pool into the
-        batch's prefix buffer, and only the uncached suffix runs through
-        :func:`repro.models.chunked_prefill`.  Afterwards every full page
-        of every prompt is interned back into the tree (copy-out, see
-        DESIGN.md §9), so the next prompt sharing the prefix skips it.
+        logits seed decoding) skips the prefill compute and only the
+        uncached suffix runs through :func:`repro.models.chunked_prefill`.
+        Dense engines *gather* the matched pages into the slot row and
+        copy-intern new pages afterwards (§9); paged engines share the
+        matched pages by reference into the row's page table and intern
+        the row's own pages zero-copy (§10).
         """
         if not 0 < len(prompts) <= self.slots:
             raise ValueError(f"prefill_rows takes 1..{self.slots} prompts")
@@ -239,9 +444,15 @@ class Engine:
             raise ValueError(
                 f"prompt of {max(lens)} tokens exceeds engine max_seq {self.max_seq}"
             )
+        if self.paged:
+            return self._prefill_rows_paged(ids, lens)
+        return self._prefill_rows_dense(ids, lens)
+
+    # ---------------------------- dense path --------------------------
+    def _prefill_rows_dense(self, ids: List[List[int]], lens: List[int]):
         pc = self.prefix_cache
         matches = []
-        cached = [0] * len(prompts)
+        cached = [0] * len(ids)
         if pc is not None and pc.pool.bound:
             # cap at len-1: at least one token must be computed — its
             # logits seed the decode loop
@@ -278,7 +489,14 @@ class Engine:
         return cache, logits, lens, cached
 
     def _prefill_over_cache(self, ids: List[List[int]], matches: List[Any]):
-        """Gather cached pages + chunked-prefill the uncached suffixes."""
+        """Gather cached pages + chunked-prefill the uncached suffixes.
+
+        Shared by both engines; they differ only in what happens to the
+        result: dense keeps the returned contiguous slot rows (prefix
+        copied in), paged takes the suffix-only K/V and page-scatters it
+        (the gathered prefix is a transient activation input — the
+        suffix must attend to it — never per-row storage).
+        """
         pc = self.prefix_cache
         page = pc.page_size
         suffix_lens = [len(s) - m.length for s, m in zip(ids, matches)]
@@ -295,16 +513,169 @@ class Engine:
             plen[r] = m.length
             page_ids[r, : len(m.pages)] = m.pages
         kp, vp = pc.pool.gather(page_ids)
-        return self._chunked_prefill(
+        fn = self._chunked_prefill_paged if self.paged else self._chunked_prefill
+        return fn(
             self.params, jnp.asarray(toks), jnp.asarray(vlen),
             kp, vp, jnp.asarray(plen),
         )
 
+    # ---------------------------- paged path --------------------------
+    def _prefill_rows_paged(self, ids: List[List[int]], lens: List[int]):
+        """Prefill into freshly allocated pool pages; share matched
+        prefixes by reference (zero-copy, DESIGN.md §10).
+
+        Per row: the matched prefix (page-aligned, capped at ``len-1``)
+        is *referenced* into the row's page table (incref — the payload
+        never moves); the suffix is computed via chunked prefill and
+        page-scattered into newly allocated exclusive pages; finally the
+        row's own full pages are interned back into the radix tree by
+        reference, so the next prompt sharing the prefix pays nothing.
+
+        **In-batch dedup**: rows of one refill batch routinely share a
+        page-aligned prefix that is not in the tree yet (a cold left
+        block admitted across several slots at once).  Such rows map the
+        common full pages to the *same* freshly allocated pages — keyed
+        by the entire token prefix up to the page, since KV content
+        depends on all preceding tokens — and the duplicate rows'
+        scatter chunks are routed to the dump page.  Computation is
+        unchanged (each row still prefills its copy, exactly like the
+        dense engine — accounting parity); only the *storage* is
+        deduplicated, so a cold burst of one left block costs one copy
+        of the shared prefix, not ``slots`` copies.
+        """
+        pg = self.page_size
+        pc = self.prefix_cache
+        matches: List[Any] = [None] * len(ids)
+        cached = [0] * len(ids)
+        if pc is not None and self.pool.bound:
+            matches = [pc.match(seq, limit=len(seq) - 1) for seq in ids]
+            cached = [m.length for m in matches]
+
+        row_own: List[List[int]] = []     # pages this row allocated (writer)
+        row_reuse: List[List[int]] = []   # in-batch deduped pages, in order
+        chunks: List[List[Optional[int]]] = []  # scatter target per chunk
+        refs_taken: List[int] = []        # incref'd pages, for error backout
+        providers: dict = {}              # full-prefix tuple → page id
+        try:
+            for r, seq in enumerate(ids):
+                own, reuse, plan = [], [], []
+                # registered before filling: a mid-row allocation failure
+                # must still back these pages out in the except handler
+                row_own.append(own)
+                row_reuse.append(reuse)
+                chunks.append(plan)
+                # dedup keys chain incrementally: (previous page id,
+                # this page's tokens) identifies the full prefix — page
+                # content depends on all preceding tokens, and within
+                # one batch a page id maps to exactly one token prefix —
+                # at O(page) per key instead of O(L) full-prefix tuples
+                start = cached[r] // pg
+                parent = matches[r].pages[start - 1] if start else -1
+                for j in range(start, len(seq) // pg):
+                    key = (parent, tuple(seq[j * pg : (j + 1) * pg]))
+                    page = providers.get(key)
+                    if page is None:
+                        page = self._alloc_pages(1)[0]
+                        providers[key] = page
+                        own.append(page)
+                        plan.append(page)
+                    else:
+                        reuse.append(page)
+                        plan.append(None)  # duplicate chunk → dump
+                    parent = page
+                if len(seq) % pg:  # partial tail page: always exclusive
+                    page = self._alloc_pages(1)[0]
+                    own.append(page)
+                    plan.append(page)
+            if any(cached):
+                cache, logits = self._prefill_over_cache(ids, matches)
+            else:
+                L = _bucket(max(lens), self.prefill_buckets)
+                toks = np.zeros((self.slots, L), np.int32)
+                vlen = np.ones((self.slots,), np.int32)  # pad rows: 1 dummy
+                for r, seq in enumerate(ids):
+                    toks[r, : len(seq)] = seq
+                    vlen[r] = len(seq)
+                cache, logits = self._prefill_bucket(
+                    self.params, jnp.asarray(toks), jnp.asarray(vlen)
+                )
+            if not self.pool.bound:
+                self.pool.bind(cache["k"], cache["v"])
+            self._scatter_rows(cache, chunks)
+            # references are taken only after the single scatter write, so
+            # a page is never written while shared:
+            # (1) the rows' refs on in-batch deduped pages,
+            for reuse in row_reuse:
+                self.pool.incref(reuse)
+                refs_taken.extend(reuse)
+            # (2) the rows' refs on tree-matched pages — while the match
+            # lock still pins them against eviction
+            shared_taken: List[List[int]] = []
+            for r, m in enumerate(matches):
+                shared = list(m.pages[: cached[r] // pg]) if m else []
+                self.pool.incref(shared)
+                refs_taken.extend(shared)
+                shared_taken.append(shared)
+            tables = []
+            for r in range(len(ids)):
+                reuse_iter = iter(row_reuse[r])
+                body = [p if p is not None else next(reuse_iter)
+                        for p in chunks[r]]
+                tables.append(shared_taken[r] + body)
+            if pc is not None:
+                for r, seq in enumerate(ids):
+                    pc.insert_refs(seq, tables[r][: len(seq) // pg])
+        except Exception:
+            for pages in row_own:
+                self.pool.decref(pages)
+            self.pool.decref(refs_taken)
+            raise
+        finally:
+            for m in matches:
+                if m is not None:
+                    m.release()
+        return (tables, list(lens)), logits, lens, cached
+
+    def _scatter_rows(self, cache: Any,
+                      chunks: List[List[Optional[int]]]) -> None:
+        """Page-scatter prefilled K/V ``(layers, slots, L, KV, hd)`` into
+        each row's target pages.  ``chunks[r][c]`` is the pool page for
+        row ``r``'s ``c``-th computed page-chunk, or None for chunks
+        whose page is written by another row of this batch (in-batch
+        dedup); those — and pad rows — are routed to the dump page."""
+        k, v = cache["k"], cache["v"]
+        layers, B, L, KV, hd = k.shape
+        npg = L // self.page_size
+        ids = np.full(B * npg, self._dump, np.int32)
+        for r, plan in enumerate(chunks):
+            for c, page in enumerate(plan):
+                if page is not None:
+                    ids[r * npg + c] = page
+        self.pool.write(
+            ids,
+            k.reshape(layers, B * npg, self.page_size, KV, hd),
+            v.reshape(layers, B * npg, self.page_size, KV, hd),
+        )
+
+    # ------------------------------------------------------------------
     def insert_row(
-        self, state: DecodeState, cache: Any, logits: jax.Array,
+        self, state: Any, cache: Any, logits: jax.Array,
         row: int, slot: int,
     ) -> None:
-        """Scatter row ``row`` of a prefilled cache into ``slot`` in place."""
+        """Install row ``row`` of a prefill result into ``slot`` in place.
+
+        Dense: scatter the cache row + logits.  Paged: the slot takes
+        ownership of the row's page table (the pages were allocated /
+        refcounted by ``prefill_rows``); only logits move on device.
+        """
+        if self.paged:
+            tables, lens = cache
+            state.tables[slot] = tables[row]
+            state.lens[slot] = lens[row]
+            self._note_live_pages(state)
+            state.logits = self._insert_logits(
+                state.logits, logits, jnp.int32(row), jnp.int32(slot))
+            return
         state.cache, state.logits = self._insert(
             state.cache, state.logits, cache, logits,
             jnp.int32(row), jnp.int32(slot),
@@ -322,15 +693,55 @@ class Engine:
         return new_cache, new_logits
 
     def decode_active(
-        self, state: DecodeState, tokens: np.ndarray, active: np.ndarray
+        self, state: Any, tokens: np.ndarray, active: np.ndarray
     ) -> None:
-        """One decode step over the batch; inactive rows keep a frozen
-        ``len`` (their writes are overwritten on the next refill)."""
-        state.cache, state.logits = self._decode(
-            self.params, state.cache,
+        """One decode step over the batch; inactive rows are frozen.
+
+        Dense: inactive rows keep a frozen ``len`` (their writes are
+        overwritten on the next refill).  Paged: inactive rows' table is
+        pointed at the dump page with ``len = 0`` — a retired slot can
+        never scribble on a page already recycled to another request —
+        and a fresh page is allocated host-side whenever an active row's
+        next position crosses a page boundary (with a copy-on-write
+        guard should the tail page ever be shared)."""
+        if not self.paged:
+            state.cache, state.logits = self._decode(
+                self.params, state.cache,
+                jnp.asarray(tokens, jnp.int32)[:, None],
+                jnp.asarray(active, bool),
+            )
+            return
+        pg = self.page_size
+        table = np.full((self.slots, self._maxp), self._dump, np.int32)
+        lens = np.zeros(self.slots, np.int32)
+        for s in range(self.slots):
+            if not active[s]:
+                continue
+            pos = int(state.lens[s])
+            t = state.tables[s]
+            if pos % pg == 0:
+                # next position starts a fresh page
+                t.append(self._alloc_pages(1)[0])
+            elif not self.pool.writable(t[pos // pg]):
+                # shared partial tail (page-aligned matching never
+                # produces one, but the invariant is enforced, not
+                # assumed): copy-on-write before appending
+                t[pos // pg] = self._cow_page(t[pos // pg])
+            table[s, : len(t)] = t
+            lens[s] = pos
+        self._note_live_pages(state)
+        cache = {
+            "len": jnp.asarray(lens), "pages": jnp.asarray(table),
+            "k": self.pool.k, "v": self.pool.v,
+        }
+        new_cache, logits = self._decode_paged(
+            self.params, cache,
             jnp.asarray(tokens, jnp.int32)[:, None],
             jnp.asarray(active, bool),
         )
+        self.pool.k, self.pool.v = new_cache["k"], new_cache["v"]
+        state.logits = logits
+        state.lens[np.asarray(active, bool)] += 1
 
     # ------------------------------------------------------------------
     # Convenience facade

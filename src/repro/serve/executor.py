@@ -9,7 +9,11 @@ receive future-like handles; the executor:
 
 * **admits** queued requests under the paper's Eq. (1) token budget
   (``slots × max_seq`` reserved prompt+completion tokens across the
-  active slots),
+  active slots) — and, on a paged engine (DESIGN.md §10), under the
+  **free-page budget** of the shared KV pool: each request reserves the
+  worst-case pages its prompt + clamped completion can occupy, so
+  admission is bounded by *actual pool capacity*, not a dense
+  ``slots × max_seq`` reservation,
 * **prefills** admitted prompts into free cache slots *mid-decode* — the
   moment a sequence finishes its row is retired and the next queued prompt
   takes the slot; no barrier, so a slow request never stalls the others
@@ -57,6 +61,7 @@ class ServeHandle:
     # decode-time bookkeeping (populated on admission)
     _slot: int = -1
     _budget: int = 0
+    _pages: int = 0  # paged engine: worst-case page reservation
     _emitted: int = 0
     _cached_prompt: int = 0  # prompt tokens served from the prefix cache
     #: True once this attempt's prefill reached the stats counters — the
@@ -94,6 +99,7 @@ class ContinuousBatchingExecutor:
         self._slots: List[Optional[ServeHandle]] = [None] * engine.slots
         self._state: Optional[DecodeState] = None
         self._used = 0  # Eq. (1): prompt+reserved-completion tokens in flight
+        self._used_pages = 0  # paged engine: KV pages reserved in flight
         self._next_id = 0
 
     # ------------------------------------------------------------------
@@ -113,6 +119,14 @@ class ContinuousBatchingExecutor:
             raise ValueError(
                 f"prompt of {ntok} tokens exceeds engine max_seq "
                 f"{self.engine.max_seq}"
+            )
+        if (self.engine.paged
+                and self.engine.request_pages(ntok, max_tokens)
+                > self.engine.total_kv_pages):
+            raise ValueError(
+                f"request needs {self.engine.request_pages(ntok, max_tokens)} "
+                f"KV pages but the pool holds only "
+                f"{self.engine.total_kv_pages} — it could never be admitted"
             )
         handle = ServeHandle(
             request_id=self._next_id, prompt=prompt, max_tokens=max_tokens,
@@ -177,8 +191,11 @@ class ContinuousBatchingExecutor:
                 raise
             return []
         if self._state is not None and not self.pending:
-            # fully idle: release the slots × max_seq cache (GiB-scale at
-            # real configs) — init_state rebuilds it on the next admission
+            # fully idle: release the dense slots × max_seq cache
+            # (GiB-scale at real configs) — init_state rebuilds it on the
+            # next admission.  All slots already retired through
+            # _free_slot, so the paged release is a no-op backstop.
+            self.engine.release_state(self._state)
             self._state = None
         return finished
 
@@ -277,8 +294,13 @@ class ContinuousBatchingExecutor:
         return h.prompt_tokens + h.max_tokens
 
     def _free_slot(self, h: ServeHandle) -> None:
+        # paged engine: drop the slot's page references before anything
+        # else can be admitted into the freed capacity
+        self.engine.release_slot(self._state, h._slot)
         self._slots[h._slot] = None
         self._used -= self._need(h)
+        self._used_pages -= h._pages
+        h._pages = 0
 
     def _retire(self, h: ServeHandle, reason: str,
                 finished: List[ServeHandle]) -> None:
@@ -294,20 +316,29 @@ class ContinuousBatchingExecutor:
         finished.append(h)
 
     def _refill(self, finished: List[ServeHandle]) -> None:
-        """Admit queued requests into free slots under Eq. (1), then
+        """Admit queued requests into free slots under Eq. (1) — and, on
+        a paged engine, under the pool's free-page budget (each request
+        reserves its worst-case page count; DESIGN.md §10) — then
         prefill them as one ragged batch and scatter the rows in."""
         budget = self.engine.slots * self.engine.max_seq
+        page_budget = self.engine.total_kv_pages  # 0 on dense engines
         admitted: List[ServeHandle] = []
         free = [s for s, h in enumerate(self._slots) if h is None]
         while free and self._queue:
             h = self._queue[0]
+            need_pages = self.engine.request_pages(h.prompt_tokens,
+                                                   h.max_tokens)
             occupied = any(s is not None for s in self._slots) or admitted
-            if occupied and self._used + self._need(h) > budget:
-                break  # Eq. (1) exhausted; FIFO order preserved
+            if occupied and (
+                    self._used + self._need(h) > budget
+                    or self._used_pages + need_pages > page_budget > 0):
+                break  # Eq. (1) / page budget exhausted; FIFO preserved
             self._queue.popleft()
             h.status = ACTIVE
             h._slot = free.pop(0)
+            h._pages = need_pages
             self._used += self._need(h)
+            self._used_pages += need_pages
             self._slots[h._slot] = h
             admitted.append(h)
         if not admitted:
@@ -364,5 +395,9 @@ class ContinuousBatchingExecutor:
             if h.retries > self.max_retries:
                 exhausted = True
             self._queue.appendleft(h)
-        self._state = None  # decode state may be poisoned — rebuild
+        # decode state may be poisoned — rebuild.  Page references were
+        # dropped slot-by-slot above; release_state backstops any slot
+        # that never made it into the bookkeeping.
+        self.engine.release_state(self._state)
+        self._state = None
         return exhausted

@@ -1,4 +1,5 @@
-"""Radix-tree KV prefix cache over a paged KV pool (DESIGN.md §9).
+"""Radix-tree KV prefix cache over a refcounted paged KV pool
+(DESIGN.md §9–§10).
 
 Algorithm 2's block prompts are dominated by *repeated* content: the
 instruction header and the left-table block are byte-identical across
@@ -8,18 +9,27 @@ re-prefills each prompt from token zero.  This module interns token-ID
 prefixes so the engine can skip the shared part:
 
 * :class:`PagedKVPool` — a block-granular (``page_size`` tokens) pool of
-  K/V pages, one pair of device arrays shaped
-  ``(layers, n_pages, page_size, kv_heads, head_dim)``; pages are
-  *copies* of slot-cache rows (never aliases — see DESIGN.md §9 for why
-  copy-out beats aliasing on a contiguous-slot engine).
+  refcounted K/V pages, one pair of device arrays shaped
+  ``(layers, n_pages, page_size, kv_heads, head_dim)``.  Since the
+  paged-KV refactor (DESIGN.md §10) this is the **single** KV store of a
+  paged engine: live decode state and cached prefixes are the same
+  pages, shared by reference count.  A page with ``refs == 1`` has one
+  exclusive writer; a page with ``refs > 1`` is read-only (copy-on-write
+  via :meth:`copy_page`).  The dense (non-paged) engine still uses a
+  private pool with copy-out/copy-in semantics (§9) — same class, the
+  pages just never end up shared with decode rows.
 * :class:`RadixPrefixCache` — a radix tree whose edges are page-aligned
-  token-ID runs; each node owns the pages of its edge.  ``match`` walks
-  the longest cached prefix (whole pages only) and *locks* the deepest
-  node touched (ref count) so eviction cannot free pages between lookup
-  and the prefill that reads them; ``insert`` interns the newly computed
-  pages, splitting edges at the divergence page.  Eviction is LRU over
-  *unreferenced leaves* — interior nodes are prefixes of live leaves and
-  only become evictable once their subtree is gone.
+  token-ID runs; each node holds a reference on the pages of its edge.
+  ``match`` walks the longest cached prefix (whole pages only) and
+  *locks* the deepest node touched (node-level ref count) so eviction
+  cannot free pages between lookup and the moment the engine takes its
+  own page references (paged) or finishes the gather (dense);
+  ``insert`` interns newly *computed* pages by copy (dense), while
+  ``insert_refs`` interns a prefilled row's own pages **by reference**
+  — zero copies, the tree just bumps the pool refcounts (paged).
+  Eviction is LRU over *unreferenced leaves* and releases the node's
+  page references; pages survive as long as a live row still holds
+  them.
 
 The cache stores token IDs, not text: two prompts share cached work iff
 their token sequences share page-aligned prefixes, which is exactly the
@@ -37,12 +47,20 @@ import numpy as np
 
 
 class PagedKVPool:
-    """Fixed-capacity pool of KV pages with a free list.
+    """Fixed-capacity pool of refcounted KV pages.
 
     Shapes are bound lazily from the first prefilled cache the engine
     hands over (``bind``), so the pool needs no config introspection —
     it inherits layer count, head layout, and cache dtype from the real
     thing.
+
+    Reference counting: :meth:`alloc` hands out pages with ``refs == 1``
+    (one exclusive writer); :meth:`incref` shares a page read-only;
+    :meth:`decref` releases one reference and returns the page to the
+    free list when the count drains to zero.  :meth:`writable` is the
+    single-writer check the engine's append path and the churn property
+    test rely on; :meth:`copy_page` is the copy-on-write escape hatch
+    for appending into a shared partial page.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -52,6 +70,8 @@ class PagedKVPool:
         self.page_size = page_size
         self.k: Optional[jax.Array] = None  # (layers, n_pages, page, KV, hd)
         self.v: Optional[jax.Array] = None
+        self.refs = np.zeros(n_pages, np.int32)
+        self.peak_pages = 0  # high-water mark of allocated pages
         self._free: List[int] = list(range(n_pages))
         self._gather = jax.jit(lambda pool, ids: pool[:, ids])
         # dst pages is a traced operand so one compile serves every write
@@ -60,6 +80,10 @@ class PagedKVPool:
         # real configs) pool per insert
         self._scatter = jax.jit(
             lambda pool, ids, pages: pool.at[:, ids].set(pages),
+            donate_argnums=(0,),
+        )
+        self._copy = jax.jit(
+            lambda pool, src, dst: pool.at[:, dst].set(pool[:, src]),
             donate_argnums=(0,),
         )
 
@@ -71,9 +95,13 @@ class PagedKVPool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def allocated_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
     def bind(self, k_template: jax.Array, v_template: jax.Array) -> None:
         """Allocate storage matching a prefilled cache leaf
-        ``(layers, batch, max_seq, KV, hd)``."""
+        ``(layers, batch, seq, KV, hd)``."""
         if self.bound:
             return
         layers, _, _, kv, hd = k_template.shape
@@ -81,16 +109,61 @@ class PagedKVPool:
         self.k = jnp.zeros(shape, k_template.dtype)
         self.v = jnp.zeros(shape, v_template.dtype)
 
+    # ------------------------------------------------------------------
+    # Reference counting
+    # ------------------------------------------------------------------
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Take ``n`` pages off the free list, or None if unavailable."""
+        """Take ``n`` pages off the free list (each with ``refs == 1``,
+        i.e. one exclusive writer), or None if unavailable."""
         if n > len(self._free):
             return None
         taken, self._free = self._free[:n], self._free[n:]
+        for p in taken:
+            self.refs[p] = 1
+        self.peak_pages = max(self.peak_pages, self.allocated_pages)
         return taken
 
-    def free(self, pages: Sequence[int]) -> None:
-        self._free.extend(pages)
+    def incref(self, pages: Sequence[int]) -> None:
+        """Add one (read-only) reference to each page."""
+        for p in pages:
+            if self.refs[p] <= 0:
+                raise ValueError(f"incref of free page {p}")
+            self.refs[p] += 1
 
+    def decref(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; pages reaching zero are freed."""
+        for p in pages:
+            if self.refs[p] <= 0:
+                raise ValueError(f"decref of free page {p}")
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                self._free.append(p)
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Alias of :meth:`decref` (legacy single-owner callers)."""
+        self.decref(pages)
+
+    def writable(self, page: int) -> bool:
+        """True iff ``page`` has exactly one owner (safe to write)."""
+        return self.refs[page] == 1
+
+    def copy_page(self, src: int) -> Optional[int]:
+        """Copy-on-write: clone ``src`` into a fresh exclusive page and
+        release the caller's reference on ``src``.  Returns the new page
+        id, or None if the pool is exhausted."""
+        got = self.alloc(1)
+        if got is None:
+            return None
+        dst = got[0]
+        if self.bound:
+            self.k = self._copy(self.k, src, dst)
+            self.v = self._copy(self.v, src, dst)
+        self.decref([src])
+        return dst
+
+    # ------------------------------------------------------------------
+    # Page payload I/O
+    # ------------------------------------------------------------------
     def write(self, page_ids: Sequence[int], k_pages: jax.Array,
               v_pages: jax.Array) -> None:
         """Copy ``(layers, n, page, KV, hd)`` blocks into ``page_ids``."""
@@ -127,7 +200,8 @@ class _Node:
 @dataclasses.dataclass
 class PrefixMatch:
     """Result of a longest-prefix lookup.  ``release`` MUST be called once
-    the pages have been consumed (gathered into a slot cache)."""
+    the pages have been consumed (gathered into a slot cache, or
+    referenced into a paged row's page table)."""
 
     pages: List[int]
     length: int               # matched tokens (multiple of page_size)
@@ -147,6 +221,7 @@ class PrefixCacheStats:
     miss_tokens: int = 0       # looked-up tokens that had to be computed
     inserted_pages: int = 0
     evicted_pages: int = 0
+    shared_pages: int = 0      # pages interned by reference (zero-copy)
 
     def summary(self) -> dict:
         total = self.hit_tokens + self.miss_tokens
@@ -157,6 +232,7 @@ class PrefixCacheStats:
             "hit_rate": self.hit_tokens / total if total else 0.0,
             "inserted_pages": self.inserted_pages,
             "evicted_pages": self.evicted_pages,
+            "shared_pages": self.shared_pages,
         }
 
 
@@ -164,16 +240,27 @@ class RadixPrefixCache:
     """Block-granular radix tree of cached prompt prefixes.
 
     All tree state lives on the host; only page payloads live on device
-    (in the :class:`PagedKVPool`).  Locking protocol: ``match`` bumps the
-    ref count of the deepest node it used; the engine releases after the
-    chunked prefill has *copied* those pages into the slot cache.  Because
-    slot rows are copies, an eviction after release can never corrupt an
-    active request — the pool page is the only thing reclaimed.
+    (in the :class:`PagedKVPool`).  Two interning modes share the tree:
+
+    * **copy mode** (:meth:`insert`, dense engine §9) — the tree owns a
+      private pool; new pages are allocated and written with copies of
+      slot-cache slices.  Locking protocol: ``match`` bumps the ref
+      count of the deepest node it used; the engine releases after the
+      chunked prefill has *copied* those pages into the slot cache.
+    * **zero-copy mode** (:meth:`insert_refs`, paged engine §10) — the
+      pool is *shared* with live decode state; interning merely
+      increfs the prefilled row's own pages.  On a hit the engine
+      increfs the matched pages into the new row's page table while the
+      match lock is held — no page payload ever moves.
     """
 
-    def __init__(self, n_pages: int, page_size: int = 16):
+    def __init__(self, n_pages: int, page_size: int = 16,
+                 pool: Optional[PagedKVPool] = None):
         self.page_size = page_size
-        self.pool = PagedKVPool(n_pages, page_size)
+        self.pool = pool if pool is not None else PagedKVPool(n_pages, page_size)
+        if self.pool.page_size != page_size:
+            raise ValueError(
+                f"pool page_size {self.pool.page_size} != tree page_size {page_size}")
         self.root = _Node(key=(), pages=[], parent=None)
         self.stats = PrefixCacheStats()
         self._tick = 0
@@ -237,13 +324,31 @@ class RadixPrefixCache:
 
     # ------------------------------------------------------------------
     def insert(self, ids: Sequence[int], k_source, v_source) -> int:
-        """Intern every full page of ``ids``; returns pages newly cached.
+        """Intern every full page of ``ids`` by copy; returns pages newly
+        cached.
 
         ``k_source(start, stop)`` / ``v_source(start, stop)`` return the
         ``(layers, stop-start, KV, hd)`` cache block for token positions
-        ``[start, stop)`` — the engine passes slot-cache slices, so the
-        pool stores *copies* and never aliases live decode state.
+        ``[start, stop)`` — the dense engine passes slot-cache slices, so
+        the pool stores *copies* and never aliases live decode state.
         """
+        return self._insert_impl(ids, sources=(k_source, v_source), pages=None)
+
+    def insert_refs(self, ids: Sequence[int], page_ids: Sequence[int]) -> int:
+        """Intern every full page of ``ids`` **by reference** (zero-copy).
+
+        ``page_ids`` are the prefilled row's own pool pages, one per full
+        page of ``ids`` — already holding the K/V payload.  Tree segments
+        not yet present simply incref the corresponding row pages;
+        segments already interned are left as-is (the row keeps its own
+        pages, the tree keeps its earlier ones — refcounts make both
+        safe).  Returns the number of pages newly shared into the tree.
+        """
+        if len(page_ids) < self._aligned(len(ids)) // self.page_size:
+            raise ValueError("insert_refs needs one page id per full page")
+        return self._insert_impl(ids, sources=None, pages=list(page_ids))
+
+    def _insert_impl(self, ids: Sequence[int], sources, pages) -> int:
         n = self._aligned(len(ids))
         node, matched = self.root, 0
         tick = self._next_tick()
@@ -251,7 +356,7 @@ class RadixPrefixCache:
             first = tuple(ids[matched:matched + self.page_size])
             child = node.children.get(first)
             if child is None:
-                return self._attach(node, ids, matched, n, k_source, v_source)
+                return self._attach(node, ids, matched, n, sources, pages)
             want = ids[matched:matched + min(len(child.key), n - matched)]
             common = self._common_pages(child.key, want)
             child.tick = tick
@@ -262,7 +367,7 @@ class RadixPrefixCache:
                 child = self._split(node, child, common)
                 matched += common
                 node = child
-                return self._attach(node, ids, matched, n, k_source, v_source)
+                return self._attach(node, ids, matched, n, sources, pages)
             matched += common
             node = child
         return 0  # already fully interned
@@ -281,17 +386,24 @@ class RadixPrefixCache:
         return head
 
     def _attach(self, node: _Node, ids: Sequence[int], start: int, stop: int,
-                k_source, v_source) -> int:
+                sources, pages) -> int:
         n_pages = (stop - start) // self.page_size
         if n_pages <= 0:
             return 0
-        pages = self._alloc_evicting(n_pages)
-        if pages is None:
-            return 0  # pool exhausted by locked/live prefixes — skip caching
-        self.pool.write(pages,
-                        self._paged(k_source(start, stop), n_pages),
-                        self._paged(v_source(start, stop), n_pages))
-        leaf = _Node(key=tuple(ids[start:stop]), pages=pages, parent=node,
+        if pages is not None:
+            # zero-copy: share the row's own pages into the tree
+            new_pages = pages[start // self.page_size : stop // self.page_size]
+            self.pool.incref(new_pages)
+            self.stats.shared_pages += n_pages
+        else:
+            k_source, v_source = sources
+            new_pages = self._alloc_evicting(n_pages)
+            if new_pages is None:
+                return 0  # pool exhausted by locked/live prefixes — skip caching
+            self.pool.write(new_pages,
+                            self._paged(k_source(start, stop), n_pages),
+                            self._paged(v_source(start, stop), n_pages))
+        leaf = _Node(key=tuple(ids[start:stop]), pages=new_pages, parent=node,
                      tick=self._next_tick())
         node.children[tuple(leaf.key[: self.page_size])] = leaf
         self.stats.inserted_pages += n_pages
@@ -310,7 +422,13 @@ class RadixPrefixCache:
         return self.pool.alloc(n)
 
     def _evict_one(self) -> bool:
-        """Free the least-recently-used unreferenced leaf; False if none."""
+        """Drop the least-recently-used unreferenced leaf; False if none.
+
+        The node's page references are released — in zero-copy mode a
+        page still held by a live decode row survives in the pool (only
+        the tree's share is reclaimed), which is exactly what makes
+        aliasing safe.
+        """
         victim: Optional[_Node] = None
         stack = [self.root]
         while stack:
@@ -321,7 +439,7 @@ class RadixPrefixCache:
                 victim = node
         if victim is None:
             return False
-        self.pool.free(victim.pages)
+        self.pool.decref(victim.pages)
         self.stats.evicted_pages += len(victim.pages)
         assert victim.parent is not None
         del victim.parent.children[tuple(victim.key[: self.page_size])]
@@ -336,3 +454,12 @@ class RadixPrefixCache:
             stack.extend(node.children.values())
             total += len(node.key)
         return total
+
+    def tree_pages(self) -> List[int]:
+        """All page ids currently referenced by the tree (introspection)."""
+        out, stack = [], [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            out.extend(node.pages)
+        return out

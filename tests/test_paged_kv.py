@@ -1,0 +1,446 @@
+"""Paged-KV serving (DESIGN.md §10): refcounted page-pool unit tests, an
+allocator-churn hypothesis property, zero-copy prefix sharing, page
+-budget admission, and the paged-vs-dense engine parity suite.
+
+The headline property: the engine's outputs, finish reasons, and token
+accounting are *identical* with REPRO_PAGED_KV on vs off — including
+mid-decode slot refill and prefix-cache hits.  Paging may only change
+*where* KV bytes live (one shared refcounted pool vs dense slot rows),
+never what is generated or billed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import Engine, PagedKVPool
+from repro.serve.engine import PagedDecodeState, _bucket
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; see requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(11)
+
+
+# ---------------------------------------------------------------------------
+# Refcounted page pool (no model involved)
+# ---------------------------------------------------------------------------
+
+
+def test_pool_refcount_lifecycle():
+    pool = PagedKVPool(8, 4)
+    a = pool.alloc(3)
+    assert a is not None and pool.free_pages == 5
+    assert all(pool.writable(p) for p in a)          # exclusive writers
+    pool.incref(a[:2])                               # share two read-only
+    assert not pool.writable(a[0]) and pool.writable(a[2])
+    pool.decref(a)                                   # row retires
+    assert pool.free_pages == 6                      # a[2] freed, a[0:2] live
+    pool.decref(a[:2])                               # tree evicts
+    assert pool.free_pages == 8
+    assert (pool.refs == 0).all()
+    with pytest.raises(ValueError):
+        pool.decref([a[0]])                          # double free
+
+
+def test_pool_alloc_exhaustion_and_peak():
+    pool = PagedKVPool(4, 4)
+    a = pool.alloc(3)
+    assert pool.alloc(2) is None                     # only 1 free
+    assert pool.alloc(1) is not None
+    assert pool.peak_pages == 4
+    pool.decref(a)
+    assert pool.peak_pages == 4                      # high-water sticks
+
+
+def test_pool_copy_on_write_payload_and_refs():
+    pool = PagedKVPool(4, 2)
+    pool.bind(jnp.zeros((1, 1, 8, 1, 2)), jnp.zeros((1, 1, 8, 1, 2)))
+    (src,) = pool.alloc(1)
+    payload = jnp.arange(4, dtype=jnp.float32).reshape(1, 1, 2, 1, 2)
+    pool.write([src], payload, payload + 10)
+    pool.incref([src])                               # shared: row + tree
+    dst = pool.copy_page(src)
+    assert dst != src
+    assert pool.writable(dst)                        # the copy is exclusive
+    assert pool.refs[src] == 1                       # caller's ref moved off
+    k, v = pool.gather(np.asarray([[dst]], np.int32))
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(payload))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(payload + 10))
+
+
+# ---------------------------------------------------------------------------
+# Allocator churn property: alloc / free / share / CoW interleavings
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "share",
+                                               "unshare", "cow"]),
+                              st.integers(0, 10 ** 6)),
+                    min_size=1, max_size=60))
+    @settings(max_examples=50, deadline=None)
+    def test_page_allocator_churn_property(ops):
+        """Interleaved alloc/free/share/CoW ops: no page is ever
+        referenced by two writers, refcounts drain to zero, and
+        free + allocated is conserved at every step."""
+        N = 12
+        pool = PagedKVPool(N, 2)
+        writers = []    # pages owned exclusively by a simulated row
+        shared = []     # extra (read-only) references, tree-style
+
+        def check():
+            assert pool.free_pages + pool.allocated_pages == N
+            counts = {}
+            for p in writers + shared:
+                counts[p] = counts.get(p, 0) + 1
+            for p, c in counts.items():
+                assert pool.refs[p] == c
+            # single-writer invariant: a page listed as a writer target
+            # is writable iff no other reference exists
+            for p in set(writers):
+                assert writers.count(p) == 1          # never two writers
+                assert pool.writable(p) == (p not in shared)
+            for p in range(N):
+                held = counts.get(p, 0)
+                assert (pool.refs[p] == 0) == (held == 0)
+
+        for op, arg in ops:
+            if op == "alloc":
+                got = pool.alloc(arg % 3 + 1)
+                if got is not None:
+                    writers.extend(got)
+            elif op == "free" and writers:
+                pool.decref([writers.pop(arg % len(writers))])
+            elif op == "share" and writers:
+                p = writers[arg % len(writers)]
+                pool.incref([p])
+                shared.append(p)
+            elif op == "unshare" and shared:
+                pool.decref([shared.pop(arg % len(shared))])
+            elif op == "cow" and writers:
+                i = arg % len(writers)
+                if not pool.writable(writers[i]):
+                    new = pool.copy_page(writers[i])
+                    if new is not None:
+                        writers[i] = new
+            check()
+
+        # drain: every reference released → empty pool, all refs zero
+        pool.decref(writers)
+        pool.decref(shared)
+        assert pool.free_pages == N
+        assert (pool.refs == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# _bucket regression: raise, never clamp/truncate
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_raises_instead_of_clamping():
+    assert _bucket(100, (64, 128, 256)) == 128
+    with pytest.raises(ValueError, match="exceeds the largest prefill bucket"):
+        _bucket(300, (64, 128, 256))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level paged-KV behavior
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_smoke_config("granite-3-2b")
+    return init_params(model_specs(cfg), KEY, jnp.float32)
+
+
+def _engine(params, **kw):
+    cfg = get_smoke_config("granite-3-2b")
+    kw.setdefault("max_seq", 256)
+    kw.setdefault("slots", 3)
+    kw.setdefault("prefill_buckets", (64, 128, 256))
+    return Engine(cfg, params, ByteTokenizer(cfg.vocab_size), **kw)
+
+
+def _run(engine, requests):
+    """requests: [(prompt, max_tokens, stop, expected)] → (executor, results)."""
+    ex = engine.executor()
+    handles = [ex.submit(p, max_tokens=mt, stop=stop, expected=exp)
+               for (p, mt, stop, exp) in requests]
+    ex.drain()
+    return ex, [h.result for h in handles]
+
+
+def _assert_parity(ex_a, ex_b, res_a, res_b):
+    for a, b in zip(res_a, res_b):
+        assert a.text == b.text
+        assert a.finish_reason == b.finish_reason
+        assert a.prompt_tokens == b.prompt_tokens
+        assert a.completion_tokens == b.completion_tokens
+        assert a.cached_prompt_tokens == b.cached_prompt_tokens
+    assert ex_a.stats.generated_tokens == ex_b.stats.generated_tokens
+    assert (ex_a.stats.prefill_tokens_computed
+            == ex_b.stats.prefill_tokens_computed)
+    assert ex_a.stats.prefill_tokens_cached == ex_b.stats.prefill_tokens_cached
+
+
+def test_engine_rejects_overlong_prompt_instead_of_truncating(params):
+    """Regression for the _bucket clamp: a prompt longer than every
+    bucket must be rejected loudly, never silently truncated to the
+    largest bucket.  Prompts above the largest *configured* bucket but
+    within max_seq get a max_seq bucket automatically."""
+    eng = _engine(params, prefill_buckets=(64,), max_seq=256, paged=False,
+                  prefix_cache=False)
+    assert eng.prefill_buckets[-1] == 256  # max_seq always bucketed
+    mid = "m" * 120   # beyond the configured 64-bucket, within max_seq
+    res = eng.generate([mid], max_tokens=2, expected=["ok"])[0]
+    assert res.prompt_tokens > 64
+    over = "x" * 300  # beyond max_seq
+    ex = eng.executor()
+    with pytest.raises(ValueError, match="exceeds engine max_seq"):
+        ex.submit(over, max_tokens=2)
+
+
+def test_greedy_parity_paged_vs_dense_no_prefix_cache(params):
+    """Greedy decode through page tables must not change a single sampled
+    token vs the dense engine — including mid-decode slot refill (more
+    requests than slots)."""
+    shared = "Parity preamble long enough to span multiple pages here: " * 2
+    reqs = [(shared + f"tail {i}", 8, None, None) for i in range(7)]
+    ex_p, res_p = _run(_engine(params, paged=True, prefix_cache=False), reqs)
+    ex_d, res_d = _run(_engine(params, paged=False, prefix_cache=False), reqs)
+    _assert_parity(ex_p, ex_d, res_p, res_d)
+    assert ex_p.stats.refills == len(reqs) > 3  # refill path exercised
+
+
+def test_greedy_parity_paged_vs_dense_with_prefix_hits(params):
+    """The zero-copy prefix-sharing path (paged) vs the gather/copy-in
+    path (dense): identical outputs AND identical cached-token
+    accounting — the radix tree sees the same interning either way."""
+    shared = "Shared instruction header, quite long so pages align: " * 2
+    reqs = [(shared + f"variable tail number {i}", 8, None, None)
+            for i in range(7)]
+    eng_p = _engine(params, paged=True, prefix_cache=True)
+    eng_d = _engine(params, paged=False, prefix_cache=True)
+    ex_p, res_p = _run(eng_p, reqs)
+    ex_d, res_d = _run(eng_d, reqs)
+    _assert_parity(ex_p, ex_d, res_p, res_d)
+    assert ex_p.stats.prefill_tokens_cached > 0      # the cache actually hit
+    assert eng_p.prefix_cache.stats.shared_pages > 0  # interned by reference
+    assert eng_d.prefix_cache.stats.shared_pages == 0  # dense copies
+
+
+def test_parity_with_stops_budgets_and_repeat_prompts(params):
+    """Heterogeneous stops/budgets + byte-identical re-submissions (the
+    full-hit, CoW-adjacent path) stay token-identical across modes."""
+    shared = "Stop-string parity preamble shared across the batch here: " * 2
+    reqs = [
+        (shared + "q1", 32, "DONE", "xy DONE zz"),
+        (shared + "q2", 3, None, "abcdefghij"),
+        (shared + "q1", 32, "DONE", "xy DONE zz"),   # exact repeat
+        (shared + "q3", 32, "END", "pq END rr"),
+        (shared + "q2", 6, None, "abcdefghij"),      # repeat, other budget
+    ]
+    ex_p, res_p = _run(_engine(params, paged=True, prefix_cache=True), reqs)
+    ex_d, res_d = _run(_engine(params, paged=False, prefix_cache=True), reqs)
+    _assert_parity(ex_p, ex_d, res_p, res_d)
+    assert res_p[0].finish_reason == "stop"
+    assert res_p[1].finish_reason == "length"
+
+
+def test_zero_copy_sharing_and_refcounts(params):
+    """A prefix hit must reference the cached pages, not copy them: the
+    new row's table starts with the *same page ids* the tree holds, at
+    refcount >= 2, and nothing is written to them."""
+    eng = _engine(params, paged=True, prefix_cache=True)
+    shared = "Zero copy sharing check preamble padded out to pages: " * 2
+    eng.generate([shared + "first tail"], max_tokens=2, expected=["a"])
+    tree_pages = set(eng.prefix_cache.tree_pages())
+    assert tree_pages and all(eng.pool.refs[p] >= 1 for p in tree_pages)
+
+    ex = eng.executor()
+    h = ex.submit(shared + "second tail", max_tokens=2, expected="b")
+    ex.step()  # admit + prefill (decode not finished yet)
+    state = ex._state
+    assert isinstance(state, PagedDecodeState)
+    table = state.tables[h._slot]
+    n_shared = h._cached_prompt // eng.page_size
+    assert n_shared > 0
+    shared_pages = table[:n_shared]
+    assert set(shared_pages) <= tree_pages            # same ids — no copy
+    assert all(eng.pool.refs[p] >= 2 for p in shared_pages)
+    assert all(not eng.pool.writable(p) for p in shared_pages)  # read-only
+    ex.drain()
+    # retirement dropped the row's references; the tree's survive
+    assert all(eng.pool.refs[p] >= 1 for p in shared_pages)
+
+
+def test_in_batch_dedup_of_cold_shared_prefixes(params):
+    """A cold burst (several rows of one left block admitted in a single
+    refill, before the tree knows the prefix) must store the shared full
+    pages ONCE, not once per row — each row's table references the same
+    page ids, at refcount == number of sharers."""
+    eng = _engine(params, paged=True, prefix_cache=True)
+    shared = "Cold burst shared left block content spanning pages: " * 3
+    prompts = [shared + f"tail {i}" for i in range(3)]  # one batch (3 slots)
+    ex = eng.executor()
+    hs = [ex.submit(p, max_tokens=4, expected="ok") for p in prompts]
+    ex.step()  # single refill: all three admitted cold
+    assert all(h.status == "active" for h in hs)
+    assert all(h._cached_prompt == 0 for h in hs)  # tree was cold
+    state = ex._state
+    tables = [state.tables[h._slot] for h in hs]
+    n_shared = eng.count_tokens(shared) // eng.page_size - 1
+    assert n_shared > 2
+    head = tables[0][:n_shared]
+    for t in tables[1:]:
+        assert t[:n_shared] == head                 # same ids — stored once
+    # refs: 3 rows + the radix tree's zero-copy intern
+    assert all(eng.pool.refs[p] == 4 for p in head)
+    live = set().union(*tables)
+    assert len(live) < sum(len(t) for t in tables)  # genuinely deduped
+    ex.drain()
+    for a, b in zip(hs, _run(_engine(params, paged=False,
+                                     prefix_cache=True),
+                             [(p, 4, None, "ok") for p in prompts])[1]):
+        assert a.result.text == b.text              # dedup is storage-only
+
+
+def test_pages_drain_on_retire_cancel_and_failure(params, monkeypatch):
+    """Every page allocated for a row is released on retire, on active
+    cancel, and on engine-failure requeue — only tree references remain."""
+    eng = _engine(params, paged=True, prefix_cache=True)
+    ex = eng.executor()
+    hs = [ex.submit(f"drain check prompt {i} padded out somewhat: ",
+                    max_tokens=4, expected="ok") for i in range(5)]
+    ex.step()
+    ex.cancel(hs[1]) if hs[1].status == "active" else None
+    ex.drain()
+    tree = eng.prefix_cache.tree_pages()
+    assert eng.pool.allocated_pages - 1 == len(tree)  # sans dump page
+    assert ex._used_pages == 0
+
+    # engine failure mid-decode: requeue must drop page references too
+    ex2 = eng.executor(max_retries=2)
+    h = ex2.submit("failure requeue prompt padded: ", max_tokens=3,
+                   expected="ok")
+    real = eng.decode_active
+    failures = iter([True])
+
+    def flaky(state, tokens, active):
+        if next(failures, False):
+            raise RuntimeError("injected engine failure")
+        return real(state, tokens, active)
+
+    monkeypatch.setattr(eng, "decode_active", flaky)
+    ex2.drain()
+    assert h.result is not None and h.retries == 1
+    assert eng.pool.allocated_pages - 1 == len(eng.prefix_cache.tree_pages())
+    assert ex2._used_pages == 0
+
+
+def test_no_prefix_cache_pool_fully_drains(params):
+    eng = _engine(params, paged=True, prefix_cache=False)
+    eng.generate([f"fully drained prompt {i}" for i in range(4)],
+                 max_tokens=4, expected=["a", "bb", "c", "dd"])
+    assert eng.pool.allocated_pages == 1  # only the pinned dump page
+
+
+def test_admission_bounded_by_free_pages(params):
+    """A pool smaller than slots × max_seq limits concurrency by *pages*:
+    requests are admitted only while their worst-case reservation fits,
+    and a request that could never fit is rejected at submit."""
+    # 20 usable pages of 16 tokens = 320 token-slots, vs 3×256 = 768
+    eng = _engine(params, paged=True, prefix_cache=False, pool_pages=20)
+    ex = eng.executor()
+    hs = [ex.submit("admission page budget prompt " + "p" * 40,
+                    max_tokens=100, expected="x" * 6) for i in range(3)]
+    ex.step()
+    active = [h for h in hs if h.status == "active"]
+    # each needs ceil((~70 + 100)/16) ≈ 11 pages → only 1 fits in 20
+    assert 0 < len(active) < 3
+    assert sum(h._pages for h in active) <= eng.total_kv_pages
+    ex.drain()
+    assert all(h.result is not None for h in hs)
+
+    # a request whose worst case exceeds the whole pool is rejected at
+    # submit — it could never be admitted
+    tiny = _engine(params, paged=True, prefix_cache=False, pool_pages=10)
+    with pytest.raises(ValueError, match="could never be admitted"):
+        tiny.executor().submit("q" * 200, max_tokens=100)  # needs 16 > 10
+
+
+def test_decode_appends_in_place_across_page_boundaries(params):
+    """A generation long enough to cross page boundaries allocates fresh
+    pages mid-decode and the row's table grows accordingly."""
+    eng = _engine(params, paged=True, prefix_cache=False, page_size=16)
+    ex = eng.executor()
+    h = ex.submit("boundary", max_tokens=40, expected="z" * 40)
+    ex.step()
+    pages_after_prefill = len(ex._state.tables[h._slot])
+    ex.drain()
+    assert h.result.completion_tokens == 40
+    prompt = h.prompt_tokens
+    expect = -(-(prompt + 40 - 1) // 16)  # pages for every written position
+    assert pages_after_prefill == -(-prompt // 16)
+    assert eng.pool.peak_pages - 1 >= expect
+
+
+def test_paged_cache_specs_match_engine_layout(params):
+    """The abstract paged cache tree (models.cache_specs) must describe
+    exactly what the engine constructs at runtime — pool shapes, page
+    -table width, dtypes — so dry-run cost estimates cannot drift from
+    the real thing."""
+    from repro.models import cache_specs
+
+    eng = _engine(params, paged=True, prefix_cache=False)
+    eng.generate(["spec layout pin"], max_tokens=2, expected=["a"])
+    cfg = get_smoke_config("granite-3-2b")
+    specs = cache_specs(cfg, eng.slots, eng.max_seq,
+                        page_size=eng.page_size, n_pages=eng.pool.n_pages)
+    assert set(specs) == {"len", "pages", "k", "v"}
+    assert specs["k"].shape == eng.pool.k.shape
+    assert specs["v"].shape == eng.pool.v.shape
+    assert specs["pages"].shape == (eng.slots, eng._maxp)
+    assert specs["len"].shape == (eng.slots,)
+    assert specs["k"].axes == ("layers", "pages", "page", "kv_heads",
+                               "head_dim")
+    # max_seq not a multiple of the page size: the partial final page
+    # still needs a table slot (ceil, matching engine._maxp)
+    ragged = _engine(params, paged=True, prefix_cache=False, max_seq=250)
+    rspecs = cache_specs(cfg, ragged.slots, 250, page_size=16,
+                         n_pages=ragged.pool.n_pages)
+    assert rspecs["pages"].shape == (ragged.slots, ragged._maxp) \
+        == (ragged.slots, 16)
+    with pytest.raises(ValueError, match="KV-only"):
+        cache_specs(get_smoke_config("mamba2-130m"), 2, 64,
+                    page_size=16, n_pages=8)
+    with pytest.raises(ValueError, match="n_pages"):
+        cache_specs(cfg, 2, 64, page_size=16)
+
+
+def test_ssm_family_gates_paged_off(params):
+    del params
+    cfg = get_smoke_config("mamba2-130m")
+    p = init_params(model_specs(cfg), KEY, jnp.float32)
+    eng = Engine(cfg, p, ByteTokenizer(cfg.vocab_size), max_seq=128,
+                 slots=2, paged=True)
+    assert not eng.paged and eng.pool is None and eng.kv_stats() is None
+
+
+def test_env_var_gates_paged(params, monkeypatch):
+    monkeypatch.setenv("REPRO_PAGED_KV", "0")
+    assert not _engine(params).paged
+    monkeypatch.setenv("REPRO_PAGED_KV", "1")
+    assert _engine(params).paged
+    # explicit arg wins over env
+    monkeypatch.setenv("REPRO_PAGED_KV", "1")
+    assert not _engine(params, paged=False).paged
