@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -20,3 +22,24 @@ def timed(fn: Callable, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0)
+
+
+def emit_json(name: str, payload: Dict, *, smoke: bool = False) -> str:
+    """Write ``BENCH_<name>.json`` next to the benchmark scripts.
+
+    Machine-readable counterpart of each benchmark's log output (steps,
+    wall-clock, token counts, acceptance rates, ...) so the perf
+    trajectory is tracked across PRs instead of living only in logs.
+    The committed artifacts hold the full-size runs; ``smoke`` runs (CI
+    legs) write a separate, gitignored ``.smoke.json`` so they can never
+    silently overwrite the tracked evidence.  Keys should stay stable
+    between runs.
+    """
+    suffix = ".smoke.json" if smoke else ".json"
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"BENCH_{name}{suffix}")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[bench] wrote {path}")
+    return path

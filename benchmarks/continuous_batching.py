@@ -31,7 +31,7 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_params, model_specs
 from repro.serve import Engine
 
-from common import timed
+from common import emit_json, timed
 
 
 def skewed_answers(n: int, base: int = 3, peak: int = 48) -> list:
@@ -96,6 +96,22 @@ def main() -> None:
     assert r_stats.generated_tokens == b_stats.generated_tokens
     print(f"slot refill: {b_stats.decode_steps / r_stats.decode_steps:.2f}x "
           f"fewer decode steps, {b_wall / r_wall:.2f}x wall-clock speedup")
+    emit_json("continuous_batching", {
+        "workload": {"requests": args.requests, "slots": args.slots,
+                     "max_seq": args.max_seq, "max_tokens": args.max_tokens,
+                     "arch": args.arch},
+        "barrier": {"decode_steps": b_stats.decode_steps,
+                    "prefill_batches": b_stats.prefill_batches,
+                    "generated_tokens": b_stats.generated_tokens,
+                    "wall_s": round(b_wall, 3)},
+        "slot_refill": {"decode_steps": r_stats.decode_steps,
+                        "prefill_batches": r_stats.prefill_batches,
+                        "generated_tokens": r_stats.generated_tokens,
+                        "wall_s": round(r_wall, 3)},
+        "decode_step_reduction": round(
+            b_stats.decode_steps / r_stats.decode_steps, 3),
+        "wall_clock_speedup": round(b_wall / r_wall, 3),
+    })
 
 
 if __name__ == "__main__":

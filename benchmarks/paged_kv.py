@@ -44,7 +44,7 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_params, model_specs
 from repro.serve import Engine, EngineClient
 
-from common import timed
+from common import emit_json, timed
 
 COLOURS = ["red", "blue", "green", "teal", "amber", "coral", "ivory", "olive"]
 
@@ -124,6 +124,27 @@ def main() -> None:
     print(f"paged KV: {ratio:.2f}x lower KV footprint at equal concurrency "
           f"({args.slots} slots) — equivalently, ~{ratio:.1f}x the "
           f"concurrency would fit the dense engine's HBM")
+    emit_json("paged_kv", {
+        "workload": {
+            "left_rows": args.left_rows, "right_rows": args.right_rows,
+            "b1": args.b1, "b2": args.b2, "slots": args.slots,
+            "max_seq": args.max_seq, "arch": args.arch, "smoke": args.smoke,
+            "prefix_cache": args.prefix_cache, "calls": calls,
+            "result_pairs": len(res_p.pairs),
+        },
+        "dense": {"kv_token_slots": dense_tokens,
+                  "decode_steps": st_d.decode_steps,
+                  "generated_tokens": st_d.generated_tokens,
+                  "wall_s": round(wall_d, 3)},
+        "paged": {"peak_live_pages": kv["peak_live_pages"],
+                  "peak_live_tokens": live_tokens,
+                  "peak_pages": kv["peak_pages"],
+                  "page_size": kv["page_size"],
+                  "decode_steps": st_p.decode_steps,
+                  "generated_tokens": st_p.generated_tokens,
+                  "wall_s": round(wall_p, 3)},
+        "kv_footprint_reduction": round(ratio, 3),
+    }, smoke=args.smoke)
     assert ratio >= 2.0, (
         f"acceptance: expected >=2x KV footprint reduction, got {ratio:.2f}x"
     )

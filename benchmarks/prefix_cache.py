@@ -33,7 +33,7 @@ from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_params, model_specs
 from repro.serve import Engine, EngineClient
 
-from common import timed
+from common import emit_json, timed
 
 COLOURS = ["red", "blue", "green", "teal", "amber", "coral", "ivory", "olive"]
 
@@ -103,6 +103,27 @@ def main() -> None:
           f"(cached {on.prefill_tokens_cached} of "
           f"{on.prefill_tokens_cached + on.prefill_tokens_computed} "
           f"prompt tokens)")
+    cache_stats = eng_on.prefix_cache_stats()
+    emit_json("prefix_cache", {
+        "workload": {
+            "left_rows": args.left_rows, "right_rows": args.right_rows,
+            "b1": args.b1, "b2": args.b2, "slots": args.slots,
+            "max_seq": args.max_seq, "arch": args.arch, "smoke": args.smoke,
+            "calls": calls, "result_pairs": len(res_on.pairs),
+        },
+        "no_cache": {"computed_prefill_tokens": off.prefill_tokens_computed,
+                     "decode_steps": off.decode_steps,
+                     "generated_tokens": off.generated_tokens,
+                     "wall_s": round(wall_off, 3)},
+        "cache": {"computed_prefill_tokens": on.prefill_tokens_computed,
+                  "cached_prefill_tokens": on.prefill_tokens_cached,
+                  "decode_steps": on.decode_steps,
+                  "generated_tokens": on.generated_tokens,
+                  "hit_rate": round(cache_stats["hit_rate"], 4),
+                  "evicted_pages": cache_stats["evicted_pages"],
+                  "wall_s": round(wall_on, 3)},
+        "computed_prefill_reduction": round(ratio, 3),
+    }, smoke=args.smoke)
     assert ratio >= 2.0, (
         f"acceptance: expected >=2x computed-prefill reduction, got {ratio:.2f}x"
     )

@@ -19,7 +19,10 @@ teacher-forces the answers — every forward pass, cache write and decode
 step still runs for real, with honest token accounting.
 
     PYTHONPATH=src python examples/serve_join.py
+    PYTHONPATH=src python examples/serve_join.py --spec-decode   # DESIGN.md §11
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +37,18 @@ from repro.serve import Engine, EngineClient, Request, Scheduler
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding: n-gram drafts verified "
+                         "in one multi-token pass per step (DESIGN.md §11)")
+    args = ap.parse_args()
+
     sc = ads_scenario()
     cfg = get_smoke_config("granite-3-2b")
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0), jnp.float32)
     tok = ByteTokenizer(cfg.vocab_size)
-    engine = Engine(cfg, params, tok, max_seq=1024, slots=4)
+    engine = Engine(cfg, params, tok, max_seq=1024, slots=4,
+                    spec_decode=args.spec_decode)
     oracle = OracleLLM(sc.predicate, context_limit=1024)
     client = EngineClient(engine, oracle=oracle)
 
@@ -55,6 +65,14 @@ def main() -> None:
         print(f"prefix cache: hit_rate={cache['hit_rate']:.2f} "
               f"computed={stats.prefill_tokens_computed} "
               f"cached={stats.prefill_tokens_cached} prefill tokens")
+    if engine.spec_decode:
+        rate = (stats.accepted_draft_tokens / stats.drafted_tokens
+                if stats.drafted_tokens else 0.0)
+        print(f"spec decode: drafted={stats.drafted_tokens} "
+              f"accepted={stats.accepted_draft_tokens} "
+              f"(acceptance {rate:.0%}) — "
+              f"{stats.generated_tokens / max(stats.decode_steps, 1):.2f} "
+              f"tokens per model pass")
 
     print("\n=== adaptive join (Alg. 3) through the engine ===")
     res = adaptive_join(sc.r1, sc.r2, sc.condition, client,

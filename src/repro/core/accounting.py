@@ -59,11 +59,21 @@ class Usage:
     recomputed (DESIGN.md §9).  They still occupy context (Definition 2.2
     bounds prompt+completion regardless of caching) but cost no prefill
     compute — and under cached-read pricing, less money.
+
+    ``drafted_tokens`` / ``accepted_draft_tokens`` are the speculative
+    -decoding split (DESIGN.md §11): draft tokens proposed to / accepted
+    by the verification pass.  Accepted drafts are ordinary completion
+    tokens (already counted in ``completion_tokens``); rejected drafts
+    never leave the engine — they cost verification FLOPs, not tokens,
+    so neither Definition 2.2's window bound nor any pricing term sees
+    them.  The split exists purely so acceptance rates are observable.
     """
 
     prompt_tokens: int
     completion_tokens: int
     cached_prompt_tokens: int = 0
+    drafted_tokens: int = 0
+    accepted_draft_tokens: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -73,11 +83,18 @@ class Usage:
     def computed_prompt_tokens(self) -> int:
         return self.prompt_tokens - self.cached_prompt_tokens
 
+    @property
+    def draft_acceptance_rate(self) -> float:
+        return (self.accepted_draft_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
+
     def __add__(self, other: "Usage") -> "Usage":
         return Usage(
             self.prompt_tokens + other.prompt_tokens,
             self.completion_tokens + other.completion_tokens,
             self.cached_prompt_tokens + other.cached_prompt_tokens,
+            self.drafted_tokens + other.drafted_tokens,
+            self.accepted_draft_tokens + other.accepted_draft_tokens,
         )
 
 
@@ -128,6 +145,8 @@ class Ledger:
     prompt_tokens: int = 0
     completion_tokens: int = 0
     cached_prompt_tokens: int = 0  # prompt tokens served by the prefix cache
+    drafted_tokens: int = 0        # speculative drafts proposed (§11)
+    accepted_draft_tokens: int = 0  # drafts accepted by verification
     overflows: int = 0
     wasted_prompt_tokens: int = 0  # prompt tokens of calls discarded by overflow
 
@@ -136,6 +155,8 @@ class Ledger:
         self.prompt_tokens += usage.prompt_tokens
         self.completion_tokens += usage.completion_tokens
         self.cached_prompt_tokens += usage.cached_prompt_tokens
+        self.drafted_tokens += usage.drafted_tokens
+        self.accepted_draft_tokens += usage.accepted_draft_tokens
         if overflow:
             self.overflows += 1
             self.wasted_prompt_tokens += usage.prompt_tokens
@@ -145,13 +166,16 @@ class Ledger:
         self.prompt_tokens += other.prompt_tokens
         self.completion_tokens += other.completion_tokens
         self.cached_prompt_tokens += other.cached_prompt_tokens
+        self.drafted_tokens += other.drafted_tokens
+        self.accepted_draft_tokens += other.accepted_draft_tokens
         self.overflows += other.overflows
         self.wasted_prompt_tokens += other.wasted_prompt_tokens
 
     @property
     def usage(self) -> Usage:
         return Usage(self.prompt_tokens, self.completion_tokens,
-                     self.cached_prompt_tokens)
+                     self.cached_prompt_tokens, self.drafted_tokens,
+                     self.accepted_draft_tokens)
 
     def cost(self, pricing: Pricing = GPT4_PRICING) -> float:
         return pricing.cost(self.usage)
@@ -164,6 +188,9 @@ class Ledger:
             "cached_prompt_tokens": self.cached_prompt_tokens,
             "computed_prompt_tokens": self.prompt_tokens - self.cached_prompt_tokens,
             "total_tokens": self.prompt_tokens + self.completion_tokens,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_draft_tokens": self.accepted_draft_tokens,
+            "draft_acceptance_rate": self.usage.draft_acceptance_rate,
             "overflows": self.overflows,
             "wasted_prompt_tokens": self.wasted_prompt_tokens,
             "cost_usd": self.cost(pricing),

@@ -18,6 +18,7 @@ from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_decode_attention as _pda
 from repro.kernels import rmsnorm as _rn
+from repro.kernels import spec_verify_attention as _sva
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import topk_sim as _tk
 
@@ -52,6 +53,13 @@ def decode_attention(q, k_cache, v_cache, cache_len):
 @jax.jit
 def paged_decode_attention(q, k_pool, v_pool, page_table, cache_len):
     return _pda.paged_decode_attention(
+        q, k_pool, v_pool, page_table, cache_len, interpret=_interpret()
+    )
+
+
+@jax.jit
+def spec_verify_attention(q, k_pool, v_pool, page_table, cache_len):
+    return _sva.spec_verify_attention(
         q, k_pool, v_pool, page_table, cache_len, interpret=_interpret()
     )
 

@@ -87,6 +87,38 @@ def paged_decode_attention_ref(q, k_pool, v_pool, page_table, cache_len):
     return decode_attention_ref(q, k, v, cache_len)
 
 
+def spec_verify_attention_ref(q, k_pool, v_pool, page_table, cache_len):
+    """Speculative-verification attention — the multi-token paged oracle.
+
+    q: (B,K,H,hd) — the K draft-window queries of each row, whose K/V are
+    already written at context positions ``cache_len .. cache_len+K-1``;
+    k/v_pool: (n_pages, page, KV, hd); page_table: (B, n_slots) int32;
+    cache_len: (B,) context length *before* the window.  Query ``j`` of
+    row ``b`` attends to positions ``< cache_len[b] + j + 1`` — causal
+    inside the speculative window.  K=1 reduces to
+    ``paged_decode_attention_ref(q, ..., cache_len + 1)``.
+    """
+    n_pages, page, KV, hd = k_pool.shape
+    B, n_slots = page_table.shape
+    K, H = q.shape[1], q.shape[2]
+    G = H // KV
+    S = n_slots * page
+    scale = 1.0 / math.sqrt(hd)
+    k = k_pool[page_table].reshape(B, S, KV, hd)
+    v = v_pool[page_table].reshape(B, S, KV, hd)
+    qg = q.reshape(B, K, KV, G, hd)
+    s = jnp.einsum("bjkgd,bskd->bkgjs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    limit = cache_len[:, None] + jnp.arange(K)[None] + 1       # (B,K)
+    valid = (jnp.arange(S)[None, None]
+             < limit[:, :, None])[:, None, None]               # (B,1,1,K,S)
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgjs,bskd->bjkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, K, H, hd).astype(q.dtype)
+
+
 def ssd_scan_ref(x, dt, A, b, c):
     """Sequential (non-chunked) SSD recurrence — the gold reference.
 

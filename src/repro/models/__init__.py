@@ -6,6 +6,7 @@ from repro.models.model import (
     model_specs,
     n_stacks,
     prefill,
+    verify_step,
 )
 from repro.models.params import (
     Spec,
@@ -18,6 +19,7 @@ from repro.models.params import (
 
 __all__ = [
     "cache_specs", "chunked_prefill", "decode_step", "forward",
-    "model_specs", "n_stacks", "prefill", "Spec", "abstract_params",
-    "init_params", "param_count", "param_shardings", "stack_specs",
+    "model_specs", "n_stacks", "prefill", "verify_step", "Spec",
+    "abstract_params", "init_params", "param_count", "param_shardings",
+    "stack_specs",
 ]

@@ -187,6 +187,90 @@ def attn_decode_paged(
     return shard(out, "batch", None, "embed"), k_pool, v_pool
 
 
+def attn_verify(
+    cfg: ModelConfig, p, x: jax.Array,
+    k_cache: jax.Array, v_cache: jax.Array, cache_len: jax.Array,
+):
+    """K-token speculative-verification attention against a dense cache
+    (DESIGN.md §11).
+
+    ``x``: (B, K, D) — the draft window's embeddings at absolute
+    positions ``cache_len + j``.  All K tokens' K/V are written at
+    positions ``cache_len .. cache_len+K-1`` first (point scatter;
+    out-of-bounds positions of budget-padded windows are dropped), then
+    each query ``j`` attends causally inside the window: positions
+    ``< cache_len + j + 1``.  Returns (out, new_k_cache, new_v_cache).
+    """
+    B, K = x.shape[0], x.shape[1]
+    positions = cache_len[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = shard(q, "batch", None, None, None)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    k_cache = k_cache.at[rows, positions].set(k.astype(k_cache.dtype),
+                                              mode="drop")
+    v_cache = v_cache.at[rows, positions].set(v.astype(v_cache.dtype),
+                                              mode="drop")
+    if cfg.use_pallas:
+        # greedy parity requires verification logits to match the
+        # *sequential decode this engine would otherwise run* — which on
+        # a Pallas engine is the decode kernel.  A static loop of that
+        # kernel keeps the numeric path identical per window position
+        # (there is no fused dense verify kernel; the paged one is the
+        # serving default).
+        from repro.kernels import ops as kops
+
+        o = jnp.concatenate(
+            [kops.decode_attention(q[:, j:j + 1], k_cache, v_cache,
+                                   cache_len + j + 1) for j in range(K)],
+            axis=1)
+    else:
+        o = L.spec_verify_attention(q, k_cache, v_cache, cache_len)
+    mask = _head_mask(cfg, o.dtype)
+    if mask is not None:
+        o = o * mask[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, deq(p["wo"], o.dtype))
+    return shard(out, "batch", None, "embed"), k_cache, v_cache
+
+
+def attn_verify_paged(
+    cfg: ModelConfig, p, x: jax.Array,
+    k_pool: jax.Array, v_pool: jax.Array, page_table: jax.Array,
+    cache_len: jax.Array, write_pages: jax.Array, write_offs: jax.Array,
+):
+    """K-token speculative-verification attention through a per-row page
+    table (DESIGN.md §11).
+
+    ``write_pages``/``write_offs``: (B, K) — where each window token's
+    K/V lands (the engine pre-extends the row's pages to cover the
+    window; positions past the table's capacity carry the out-of-range
+    sentinel ``n_pages`` and their writes are dropped).  Attention reads
+    through the table with causal masking inside the window.  Returns
+    ``(out, new_k_pool, new_v_pool)`` — (B·K)-point scatters, appended in
+    place.
+    """
+    K = x.shape[1]
+    positions = cache_len[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = shard(q, "batch", None, None, None)
+    k_pool = k_pool.at[write_pages, write_offs].set(k.astype(k_pool.dtype),
+                                                    mode="drop")
+    v_pool = v_pool.at[write_pages, write_offs].set(v.astype(v_pool.dtype),
+                                                    mode="drop")
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        o = kops.spec_verify_attention(q, k_pool, v_pool, page_table,
+                                       cache_len)
+    else:
+        o = L.spec_verify_attention_paged(q, k_pool, v_pool, page_table,
+                                          cache_len)
+    mask = _head_mask(cfg, o.dtype)
+    if mask is not None:
+        o = o * mask[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, deq(p["wo"], o.dtype))
+    return shard(out, "batch", None, "embed"), k_pool, v_pool
+
+
 # ---------------------------------------------------------------------------
 # Dense FFN block (pre-norm SwiGLU)
 # ---------------------------------------------------------------------------

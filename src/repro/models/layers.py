@@ -284,6 +284,53 @@ def paged_decode_attention(
     return decode_attention(q, k, v, cache_len)
 
 
+def spec_verify_attention(
+    q: jax.Array,       # (B, K, H, hd) — speculative-window queries
+    k_cache: jax.Array, # (B, Skv, KVH, hd) — window K/V already written
+    v_cache: jax.Array, # (B, Skv, KVH, hd)
+    cache_len: jax.Array,  # (B,) context length BEFORE the window
+) -> jax.Array:
+    """Multi-token verification attention over a dense cache (XLA path).
+
+    Query ``j`` attends to positions ``< cache_len + j + 1`` — causal
+    inside the speculative window (DESIGN.md §11).  Implemented as a
+    static loop over :func:`decode_attention`, one window position per
+    iteration: each query's softmax/masking math is *the same ops on the
+    same operands* as the sequential single-token decode it replaces, so
+    verification logits are bit-identical to step-by-step decode — the
+    greedy-parity contract of REPRO_SPEC_DECODE rests on this.  K=1
+    reduces to ``decode_attention(q, ..., cache_len + 1)`` exactly.
+    """
+    K = q.shape[1]
+    return jnp.concatenate(
+        [decode_attention(q[:, j:j + 1], k_cache, v_cache, cache_len + j + 1)
+         for j in range(K)], axis=1)
+
+
+def spec_verify_attention_paged(
+    q: jax.Array,           # (B, K, H, hd)
+    k_pool: jax.Array,      # (n_pages, page, KVH, hd) — shared page pool
+    v_pool: jax.Array,      # (n_pages, page, KVH, hd)
+    page_table: jax.Array,  # (B, n_slots) int32
+    cache_len: jax.Array,   # (B,) context length BEFORE the window
+) -> jax.Array:
+    """Paged multi-token verification attention (XLA path).
+
+    The CPU-CI fallback for ``kernels/spec_verify_attention.py``: a
+    static loop over :func:`paged_decode_attention`, one window position
+    per iteration — bit-identical to the sequential paged decode steps it
+    replaces (same gather, same masked softmax per query), which in turn
+    is bit-identical to the dense :func:`decode_attention` on the valid
+    region.  K=1 reduces to ``paged_decode_attention(q, ...,
+    cache_len + 1)`` exactly.
+    """
+    K = q.shape[1]
+    return jnp.concatenate(
+        [paged_decode_attention(q[:, j:j + 1], k_pool, v_pool, page_table,
+                                cache_len + j + 1)
+         for j in range(K)], axis=1)
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -652,3 +652,104 @@ def decode_step(
     if paged:
         new_caches["pages"] = page_table
     return new_caches, logits
+
+
+def verify_step(
+    cfg: ModelConfig, params, cache: Dict[str, jax.Array], tokens: jax.Array,
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Score a K-token speculative window in one pass (DESIGN.md §11).
+
+    ``tokens``: (B, K) int32 — the draft window of each row (the greedy
+    token plus up to K−1 proposed continuations), budget-padded rows
+    included.  All K tokens' K/V are written at context positions
+    ``len .. len+K-1`` and every window position's logits are returned:
+    ``logits[:, j]`` is the next-token distribution after consuming
+    tokens ``0..j`` — attention masks causally *inside* the window, so
+    the result is bit-identical to feeding the same tokens through K
+    sequential :func:`decode_step` calls (the XLA verification attention
+    is a static loop over the single-token attention; see
+    ``models/layers.py``).
+
+    ``cache["len"]`` is **not** advanced: the caller commits only the
+    accepted prefix host-side (`Engine.commit_spec`) and the rejected
+    tail positions stay masked garbage — overwritten by the very next
+    write at those positions, never attended to.  Writes past the cache
+    capacity (budget-padded window tails) are dropped, so rollback needs
+    no device work at all.  KV-cache-only families only: SSM/hybrid
+    states advance irreversibly per token and cannot roll back.
+    """
+    fam = cfg.family
+    if fam not in KV_ONLY_FAMILIES:
+        raise ValueError(
+            f"speculative verification needs a KV-only cache; family "
+            f"{fam!r} carries SSM state (spec decode must be disabled)")
+    x = L.embed(tokens, params["embed"])
+    x = shard(x, "batch", None, "embed")
+    Bsz, K = tokens.shape
+    cache_len = cache["len"]
+    paged = "pages" in cache
+    if paged:
+        n_pages, page = cache["k"].shape[1], cache["k"].shape[2]
+        page_table = cache["pages"]
+        pos = cache_len[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+        slot_idx = jnp.clip(pos // page, 0, page_table.shape[1] - 1)
+        write_pages = jnp.take_along_axis(page_table, slot_idx, axis=1)
+        # window positions beyond the table's capacity (budget padding)
+        # get the out-of-range sentinel: their scatter is dropped
+        write_pages = jnp.where(pos < page_table.shape[1] * page,
+                                write_pages, n_pages)
+        write_offs = pos % page
+
+    def _layer(x, layer_params, layer_cache):
+        ys = {}
+        if paged:
+            out, k, v = B.attn_verify_paged(
+                cfg, layer_params["attn"], x,
+                layer_cache["k"], layer_cache["v"], page_table,
+                cache_len, write_pages, write_offs)
+        else:
+            out, k, v = B.attn_verify(
+                cfg, layer_params["attn"], x,
+                layer_cache["k"], layer_cache["v"], cache_len)
+        x = x + out
+        ys["k"], ys["v"] = k, v
+        if fam == "moe":
+            out, _ = B.moe_apply(cfg, layer_params["moe"], x)
+            x = x + out
+        else:
+            x = x + B.mlp_apply(cfg, layer_params["mlp"], x)
+        return x, ys
+
+    layer_caches = {k: v for k, v in cache.items()
+                    if k not in ("len", "pages")}
+
+    def _update(caches, ys, i):
+        return {
+            k: jax.lax.dynamic_update_index_in_dim(
+                caches[k], v.astype(caches[k].dtype), i, 0)
+            for k, v in ys.items()
+        }
+
+    if cfg.unroll:  # dry-run cost probes
+        new_caches = dict(layer_caches)
+        for i in range(n_stacks(cfg)):
+            x, ys = _layer(x, _take(params["blocks"], i), _take(layer_caches, i))
+            new_caches = _update(new_caches, ys, i)
+    else:
+        def body(carry, layer_params):
+            x, caches, i = carry
+            layer_cache = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+                caches)
+            x, ys = _layer(x, layer_params, layer_cache)
+            return (x, _update(caches, ys, i), i + 1), None
+
+        (x, new_caches, _), _ = jax.lax.scan(
+            body, (x, layer_caches, jnp.zeros((), jnp.int32)), params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(x, table)                     # (B, K, vocab)
+    new_caches["len"] = cache_len                    # committed host-side
+    if paged:
+        new_caches["pages"] = page_table
+    return new_caches, logits

@@ -33,7 +33,8 @@ def _to_response(r: GenResult) -> LLMResponse:
     return LLMResponse(
         text=r.text,
         usage=Usage(r.prompt_tokens, r.completion_tokens,
-                    r.cached_prompt_tokens),
+                    r.cached_prompt_tokens, r.drafted_tokens,
+                    r.accepted_draft_tokens),
         finish_reason="stop" if r.finish_reason in ("stop", "eos") else "length",
     )
 

@@ -56,10 +56,62 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.llm_client import cancel_unfinished
-from repro.models import chunked_prefill, decode_step, prefill
+from repro.models import chunked_prefill, decode_step, prefill, verify_step
 from repro.models.model import KV_ONLY_FAMILIES, cache_specs
 from repro.models.params import Spec, is_spec
 from repro.serve.prefix_cache import PagedKVPool, RadixPrefixCache
+
+_ID_BYTES = 4  # int32 token ids in the packed speculative context
+
+
+def pack_ids(ids: Sequence[int]) -> bytearray:
+    """Pack token ids into the byte buffer :func:`propose_draft` scans."""
+    return bytearray(np.asarray(list(ids), np.int32).tobytes())
+
+
+def pack_id(tok: int) -> bytes:
+    """One token id, appended to a packed context per emitted token."""
+    return int(tok).to_bytes(_ID_BYTES, "little", signed=True)
+
+
+def propose_draft(ctx: bytes, k: int, *, max_ngram: int = 3,
+                  min_ngram: int = 1) -> List[int]:
+    """Reference-free n-gram drafting (prompt lookup, DESIGN.md §11).
+
+    ``ctx`` is the packed (``pack_ids``) token-id stream of one slot:
+    prompt + everything generated so far.  The longest suffix n-gram
+    (``max_ngram`` down to ``min_ngram`` tokens) that re-occurs earlier
+    in the stream selects a draft: the up-to-``k`` tokens that followed
+    its most recent earlier occurrence.  The block join's answers are
+    near-verbatim copies of prompt substrings (row ids, separators, the
+    ``Finished`` sentinel), which is exactly what this finds.
+
+    Host-side and model-free: the scan is ``bytes.rfind`` over the
+    packed buffer (C speed), with an alignment check rejecting matches
+    that straddle id boundaries.  A draft is only ever a *proposal* —
+    verification accepts the longest greedy-matching prefix, so a bad
+    draft costs wasted FLOPs, never a wrong token.
+    """
+    isz = _ID_BYTES
+    L = len(ctx) // isz
+    if k <= 0 or L < min_ngram + 1:
+        return []
+    buf = bytes(ctx)
+    for n in range(min(max_ngram, L - 1), min_ngram - 1, -1):
+        pat = buf[(L - n) * isz:]
+        # an earlier occurrence must start at token <= L-n-1, i.e. end
+        # by byte (L-1)*isz
+        end = (L - 1) * isz
+        pos = buf.rfind(pat, 0, end)
+        while pos >= 0 and pos % isz:
+            pos = buf.rfind(pat, 0, pos + n * isz - 1)
+        if pos < 0:
+            continue
+        start = pos // isz + n
+        stop = min(start + k, L)
+        return [int(t) for t in
+                np.frombuffer(buf[start * isz:stop * isz], np.int32)]
+    return []
 
 
 @dataclasses.dataclass
@@ -71,6 +123,12 @@ class GenResult:
     #: prompt tokens served from the radix prefix cache (never recomputed);
     #: always <= prompt_tokens, 0 when the cache is off or missed
     cached_prompt_tokens: int = 0
+    #: speculative decoding (DESIGN.md §11): draft tokens proposed for /
+    #: accepted by this request.  Accepted drafts are ordinary completion
+    #: tokens (already counted there); rejected drafts cost only wasted
+    #: verification FLOPs, never tokens — Eq. (1) budgets are untouched
+    drafted_tokens: int = 0
+    accepted_draft_tokens: int = 0
 
 
 class StopMatcher:
@@ -131,14 +189,19 @@ class PagedDecodeState:
 
     There is **no per-slot cache row**: K/V live in the engine's shared
     page pool, and each slot carries only its page table (host-side list
-    of pool page ids, in context order) and its valid length.  The
-    engine rebuilds the small device-side ``(slots, max_pages)`` table
-    argument each decode step.
+    of pool page ids, in context order) and its valid length.
+    ``table_np`` is the dense ``(slots, max_pages)`` mirror of
+    ``tables`` that the decode/verify device calls consume — maintained
+    *incrementally* (insert/release touch one row; append/CoW/rollback
+    touch single cells), never rebuilt from the lists per decoded token.
+    Cells past a row's pages hold the engine's dump page, so budget
+    -padded window positions route their writes harmlessly.
     """
 
     logits: jax.Array          # (slots, vocab)
     lens: np.ndarray           # (slots,) int32 — valid context length
     tables: List[List[int]]    # per-slot pool page ids, context order
+    table_np: np.ndarray       # (slots, max_pages) int32 mirror, dump-padded
 
 
 def _bucket(n: int, buckets: Sequence[int]) -> int:
@@ -169,12 +232,29 @@ class Engine:
         paged: Optional[bool] = None,
         page_size: int = 16,
         pool_pages: Optional[int] = None,
+        spec_decode: Optional[bool] = None,
+        spec_k: int = 8,
+        spec_ngram: Tuple[int, int] = (3, 1),
     ):
         self.cfg = cfg
         self.params = params
         self.tokenizer = tokenizer
         self.max_seq = max_seq
         self.slots = slots
+
+        # Self-speculative decoding (DESIGN.md §11): greedy-parity prompt
+        # n-gram drafting + multi-token verification.  Off by default
+        # (REPRO_SPEC_DECODE=0/1; the CI matrix crosses it with the paged
+        # -KV legs) — it is a pure perf feature whose outputs are token
+        # -identical by construction.  KV-only families only: SSM/hybrid
+        # state advances irreversibly per token and cannot roll back.
+        if spec_decode is None:
+            spec_decode = os.environ.get("REPRO_SPEC_DECODE", "0") == "1"
+        self.spec_decode = bool(spec_decode) and cfg.family in KV_ONLY_FAMILIES
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.spec_k = spec_k
+        self.spec_ngram = spec_ngram
 
         # Paged KV (DESIGN.md §10): default-on for KV-only families,
         # overridable per engine or via REPRO_PAGED_KV=0/1 (the CI matrix
@@ -280,6 +360,20 @@ class Engine:
                                                     active=act),
             donate_argnums=(1,),
         )
+        # speculative verification (DESIGN.md §11): one model call scores
+        # a spec_k+1-token window per slot; the paged variant donates the
+        # pool exactly like _decode_paged
+        self._verify = jax.jit(
+            lambda p, cache, toks: verify_step(cfg, p, cache, toks))
+        self._verify_paged = jax.jit(
+            lambda p, cache, toks: verify_step(cfg, p, cache, toks),
+            donate_argnums=(1,),
+        )
+        # post-verify logits select: row r keeps the logits of its last
+        # accepted window position (counts[r]-1)
+        self._select_logits = jax.jit(
+            lambda lg, sel: jnp.take_along_axis(
+                lg, sel[:, None, None], axis=1)[:, 0])
         # Per-leaf batch axis of the cache tree, derived from the logical
         # axis names in cache_specs — k/v carry batch at axis 1, the hybrid
         # conv/ssm states at axis 2, "len" at axis 0.
@@ -380,6 +474,7 @@ class Engine:
             self.pool.decref(state.tables[slot])
         state.tables[slot] = []
         state.lens[slot] = 0
+        state.table_np[slot, :] = self._dump
 
     def release_state(self, state: Any) -> None:
         """Release every slot of a decode state about to be dropped."""
@@ -406,6 +501,8 @@ class Engine:
                                  jnp.float32),
                 lens=np.zeros(self.slots, np.int32),
                 tables=[[] for _ in range(self.slots)],
+                table_np=np.full((self.slots, self._maxp), self._dump,
+                                 np.int32),
             )
         B, L = self.slots, self.prefill_buckets[0]
         toks = jnp.zeros((B, L), jnp.int32)
@@ -672,6 +769,8 @@ class Engine:
             tables, lens = cache
             state.tables[slot] = tables[row]
             state.lens[slot] = lens[row]
+            state.table_np[slot, :] = self._dump
+            state.table_np[slot, : len(tables[row])] = tables[row]
             self._note_live_pages(state)
             state.logits = self._insert_logits(
                 state.logits, logits, jnp.int32(row), jnp.int32(slot))
@@ -703,7 +802,11 @@ class Engine:
         never scribble on a page already recycled to another request —
         and a fresh page is allocated host-side whenever an active row's
         next position crosses a page boundary (with a copy-on-write
-        guard should the tail page ever be shared)."""
+        guard should the tail page ever be shared).  The device-side
+        table/lens arguments come straight from the *incrementally*
+        maintained ``state.table_np``/``state.lens`` (inactive slots were
+        reset by :meth:`release_slot`): only slots whose tables actually
+        changed this step (page append, CoW) touch the host arrays."""
         if not self.paged:
             state.cache, state.logits = self._decode(
                 self.params, state.cache,
@@ -711,29 +814,10 @@ class Engine:
                 jnp.asarray(active, bool),
             )
             return
-        pg = self.page_size
-        table = np.full((self.slots, self._maxp), self._dump, np.int32)
-        lens = np.zeros(self.slots, np.int32)
-        for s in range(self.slots):
-            if not active[s]:
-                continue
-            pos = int(state.lens[s])
-            t = state.tables[s]
-            if pos % pg == 0:
-                # next position starts a fresh page
-                t.append(self._alloc_pages(1)[0])
-            elif not self.pool.writable(t[pos // pg]):
-                # shared partial tail (page-aligned matching never
-                # produces one, but the invariant is enforced, not
-                # assumed): copy-on-write before appending
-                t[pos // pg] = self._cow_page(t[pos // pg])
-            table[s, : len(t)] = t
-            lens[s] = pos
+        for s in np.nonzero(active)[0]:
+            self._extend_tail(state, int(s), 1)
         self._note_live_pages(state)
-        cache = {
-            "len": jnp.asarray(lens), "pages": jnp.asarray(table),
-            "k": self.pool.k, "v": self.pool.v,
-        }
+        cache = self._device_table_args(state)
         new_cache, logits = self._decode_paged(
             self.params, cache,
             jnp.asarray(tokens, jnp.int32)[:, None],
@@ -742,6 +826,105 @@ class Engine:
         self.pool.k, self.pool.v = new_cache["k"], new_cache["v"]
         state.logits = logits
         state.lens[np.asarray(active, bool)] += 1
+
+    # ------------------------------------------------------------------
+    # Self-speculative decoding (DESIGN.md §11)
+    # ------------------------------------------------------------------
+    def propose(self, ctx: bytes, k: int) -> List[int]:
+        """N-gram draft for one slot's packed token-id context."""
+        max_n, min_n = self.spec_ngram
+        return propose_draft(ctx, min(k, self.spec_k),
+                             max_ngram=max_n, min_ngram=min_n)
+
+    def _device_table_args(self, state: Any) -> dict:
+        """Paged decode/verify cache arguments from the incremental host
+        state.  ``lens``/``table_np`` are **copied** on handoff:
+        ``jnp.asarray`` may alias numpy memory on CPU, and the host
+        mutates these arrays (append, CoW, rollback, slot release) while
+        the async dispatch is still reading — the copy is what makes the
+        incremental mirror race-free."""
+        return {
+            "len": jnp.asarray(state.lens.copy()),
+            "pages": jnp.asarray(state.table_np.copy()),
+            "k": self.pool.k, "v": self.pool.v,
+        }
+
+    def _extend_tail(self, state: Any, s: int, n_tok: int) -> None:
+        """Make slot ``s``'s pages cover the next ``n_tok`` write
+        positions ``lens[s] .. lens[s]+n_tok-1``: copy-on-write the
+        partial tail page if it is shared (page-aligned matching never
+        produces one, but the invariant is enforced, not assumed) and
+        allocate fresh pages across boundaries.  Updates ``tables[s]``
+        and the ``table_np`` mirror cell-by-cell."""
+        pg = self.page_size
+        pos = int(state.lens[s])
+        t = state.tables[s]
+        if pos % pg and not self.pool.writable(t[pos // pg]):
+            t[pos // pg] = self._cow_page(t[pos // pg])
+            state.table_np[s, pos // pg] = t[pos // pg]
+        need = -(-(pos + n_tok) // pg)  # pages covering [0, pos+n_tok)
+        while len(t) < need:
+            t.append(self._alloc_pages(1)[0])
+            state.table_np[s, len(t) - 1] = t[-1]
+
+    def verify_active(
+        self, state: Any, tokens: np.ndarray, n_tokens: np.ndarray,
+        active: np.ndarray,
+    ) -> jax.Array:
+        """Score each active row's speculative window in ONE model call.
+
+        ``tokens`` (slots, spec_k+1): the greedy token plus the n-gram
+        draft, budget-padded; ``n_tokens`` (slots,): the real window
+        length per row (padded positions' writes land in masked garbage
+        or are dropped).  Returns the (slots, spec_k+1, vocab) logits —
+        ``logits[s, j]`` is the next-token distribution after row ``s``
+        consumed window tokens ``0..j``.  Nothing is committed:
+        :meth:`commit_spec` advances lengths by the *accepted* counts
+        and rolls back speculative pages.
+        """
+        toks = jnp.asarray(tokens, jnp.int32)
+        if not self.paged:
+            state.cache, logits = self._verify(self.params, state.cache, toks)
+            return logits
+        for s in np.nonzero(active)[0]:
+            self._extend_tail(state, int(s), int(n_tokens[s]))
+        self._note_live_pages(state)
+        cache = self._device_table_args(state)
+        new_cache, logits = self._verify_paged(self.params, cache, toks)
+        self.pool.k, self.pool.v = new_cache["k"], new_cache["v"]
+        return logits
+
+    def commit_spec(
+        self, state: Any, logits: jax.Array, counts: np.ndarray,
+        alive: np.ndarray,
+    ) -> None:
+        """Commit a verification's accepted prefixes (DESIGN.md §11).
+
+        ``counts`` (slots,): tokens actually consumed into each row's
+        context this step (1 + accepted drafts; 0 for rows that were
+        inactive or retired mid-window — their slot release already
+        dropped all pages).  Each surviving row keeps the logits of its
+        last accepted window position, its length advances by its count,
+        and pages allocated for the rejected tail are **rolled back**
+        (decref'd, table cells reset to the dump page) so a rejected
+        draft can never pin pool capacity.
+        """
+        sel = jnp.asarray(np.maximum(counts - 1, 0), jnp.int32)
+        state.logits = self._select_logits(logits, sel)
+        if not self.paged:
+            state.cache["len"] = (state.cache["len"]
+                                  + jnp.asarray(counts, jnp.int32))
+            return
+        pg = self.page_size
+        for s in np.nonzero(alive)[0]:
+            state.lens[s] += counts[s]
+            t = state.tables[s]
+            keep = -(-int(state.lens[s]) // pg)  # pages holding valid tokens
+            if len(t) > keep:
+                dropped = t[keep:]
+                del t[keep:]
+                state.table_np[s, keep:keep + len(dropped)] = self._dump
+                self.pool.decref(dropped)
 
     # ------------------------------------------------------------------
     # Convenience facade

@@ -37,7 +37,9 @@ from typing import Deque, Dict, Iterable, Iterator, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.engine import DecodeState, Engine, GenResult, StopMatcher
+from repro.serve.engine import (
+    DecodeState, Engine, GenResult, StopMatcher, pack_id, pack_ids,
+)
 
 QUEUED, ACTIVE, FINISHED, CANCELLED = "queued", "active", "finished", "cancelled"
 
@@ -71,6 +73,12 @@ class ServeHandle:
     _out_ids: List[int] = dataclasses.field(default_factory=list)
     _matcher: Optional[StopMatcher] = None
     _forced: Optional[List[int]] = None
+    # speculative decoding (DESIGN.md §11): packed prompt+generated token
+    # ids the n-gram proposer scans, and per-request draft counters
+    _spec_ctx: Optional[bytearray] = dataclasses.field(
+        default=None, repr=False)
+    _drafted: int = 0
+    _accepted: int = 0
 
     def done(self) -> bool:
         return self.status in (FINISHED, CANCELLED)
@@ -88,6 +96,12 @@ class ExecutorStats:
     #: radix prefix cache (the prefix-cache benchmark reads these)
     prefill_tokens_computed: int = 0
     prefill_tokens_cached: int = 0
+    #: speculative decoding (DESIGN.md §11): draft tokens submitted to
+    #: verification vs accepted.  Accepted drafts are ordinary generated
+    #: tokens (counted there too); a verify call counts as ONE decode
+    #: step — decode_steps is the number of model passes either way
+    drafted_tokens: int = 0
+    accepted_draft_tokens: int = 0
 
 
 class ContinuousBatchingExecutor:
@@ -159,6 +173,8 @@ class ContinuousBatchingExecutor:
             self._free_slot(handle)
             # its tokens never reach a result — keep throughput stats exact
             self.stats.generated_tokens -= handle._emitted
+            self.stats.drafted_tokens -= handle._drafted
+            self.stats.accepted_draft_tokens -= handle._accepted
             if handle._prefill_counted:
                 self.stats.prefill_tokens_computed -= (
                     handle.prompt_tokens - handle._cached_prompt)
@@ -199,12 +215,39 @@ class ContinuousBatchingExecutor:
             self._state = None
         return finished
 
+    def _next_token(self, h: ServeHandle, nxt: Optional[np.ndarray],
+                    slot: int, eos: int) -> int:
+        if h._forced is not None:
+            return (h._forced[h._emitted] if h._emitted < len(h._forced)
+                    else eos)
+        return int(nxt[slot])
+
+    def _emit(self, h: ServeHandle, tok: int,
+              finished: List[ServeHandle]) -> bool:
+        """Emit one (non-EOS) token: record it, scan the stop matcher,
+        enforce the budget.  Returns False iff the request retired."""
+        h._out_ids.append(tok)
+        if h._spec_ctx is not None:
+            h._spec_ctx += pack_id(tok)
+        h._emitted += 1
+        self.stats.generated_tokens += 1
+        piece = self.engine.tokenizer.decode([tok])
+        if h._matcher.push(piece):
+            self._retire(h, "stop", finished)
+            return False
+        if h._emitted >= h._budget:
+            self._retire(h, "length", finished)
+            return False
+        return True
+
     def _step_inner(self) -> List[ServeHandle]:
         finished: List[ServeHandle] = []
         self._refill(finished)
         occupied = [(s, h) for s, h in enumerate(self._slots) if h is not None]
         if not occupied or self._state is None:
             return finished
+        if self.engine.spec_decode:
+            return self._spec_step(occupied, finished)
         # argmax + device→host sync only when some row actually samples
         # (teacher-forced rows know their next token without the logits)
         nxt = None
@@ -214,29 +257,88 @@ class ContinuousBatchingExecutor:
         active = np.zeros(self.engine.slots, bool)
         eos = self.engine.tokenizer.eos_id
         for slot, h in occupied:
-            if h._forced is not None:
-                tok = (h._forced[h._emitted] if h._emitted < len(h._forced)
-                       else eos)
-            else:
-                tok = int(nxt[slot])
+            tok = self._next_token(h, nxt, slot, eos)
             if tok == eos:
                 self._retire(h, "stop", finished)
                 continue
-            h._out_ids.append(tok)
-            h._emitted += 1
-            self.stats.generated_tokens += 1
-            piece = self.engine.tokenizer.decode([tok])
-            if h._matcher.push(piece):
-                self._retire(h, "stop", finished)
-                continue
-            if h._emitted >= h._budget:
-                self._retire(h, "length", finished)
+            if not self._emit(h, tok, finished):
                 continue
             tokens[slot] = tok
             active[slot] = True
         if active.any():
             self.engine.decode_active(self._state, tokens, active)
             self.stats.decode_steps += 1
+        return finished
+
+    def _spec_step(self, occupied, finished: List[ServeHandle]
+                   ) -> List[ServeHandle]:
+        """One speculative round (DESIGN.md §11): emit each row's greedy
+        token, draft a continuation by prompt n-gram lookup, verify all
+        windows in ONE model call, then emit the longest accepted prefix
+        per row — scanning stop strings and budgets over accepted tokens
+        only, in order, exactly as sequential decode would."""
+        eng = self.engine
+        Kp = eng.spec_k + 1
+        nxt = None
+        if any(h._forced is None for _, h in occupied):
+            nxt = np.asarray(jnp.argmax(self._state.logits, axis=-1), np.int32)
+        tokens = np.zeros((eng.slots, Kp), np.int32)
+        n_tok = np.zeros(eng.slots, np.int32)
+        active = np.zeros(eng.slots, bool)
+        eos = eng.tokenizer.eos_id
+        for slot, h in occupied:
+            tok = self._next_token(h, nxt, slot, eos)
+            if tok == eos:
+                self._retire(h, "stop", finished)
+                continue
+            if not self._emit(h, tok, finished):
+                continue
+            # draft at most the remaining budget: tokens past it could
+            # never be emitted, so verifying them is pure waste
+            draft = eng.propose(h._spec_ctx, h._budget - h._emitted)
+            h._drafted += len(draft)
+            self.stats.drafted_tokens += len(draft)
+            tokens[slot, 0] = tok
+            tokens[slot, 1:1 + len(draft)] = draft
+            n_tok[slot] = 1 + len(draft)
+            active[slot] = True
+        if not active.any():
+            return finished
+        vlogits = eng.verify_active(self._state, tokens, n_tok, active)
+        self.stats.decode_steps += 1  # one model pass, however many tokens
+        nxt2 = None
+        if any(active[s] and h._forced is None for s, h in occupied):
+            nxt2 = np.asarray(jnp.argmax(vlogits, axis=-1), np.int32)
+        counts = np.zeros(eng.slots, np.int32)
+        alive = np.zeros(eng.slots, bool)
+        for slot, h in occupied:
+            if not active[slot]:
+                continue
+            accepted = 0
+            for j in range(1, int(n_tok[slot])):
+                # the true greedy continuation after window tokens 0..j-1
+                # (for teacher-forced rows, the next forced token)
+                if h._forced is not None:
+                    exp = (h._forced[h._emitted]
+                           if h._emitted < len(h._forced) else eos)
+                else:
+                    exp = int(nxt2[slot, j - 1])
+                if int(tokens[slot, j]) != exp:
+                    break  # first mismatch rejects the rest of the draft
+                if exp == eos:
+                    self._retire(h, "stop", finished)
+                    break
+                accepted += 1
+                h._accepted += 1
+                self.stats.accepted_draft_tokens += 1
+                if not self._emit(h, exp, finished):
+                    break  # stop/budget mid-window: the tail is dropped
+            if h.status == ACTIVE:
+                counts[slot] = 1 + accepted
+                alive[slot] = True
+            # retired rows keep counts == 0: their slot release already
+            # dropped every page, speculative tail included
+        self.engine.commit_spec(self._state, vlogits, counts, alive)
         return finished
 
     def as_completed(
@@ -310,6 +412,8 @@ class ContinuousBatchingExecutor:
             completion_tokens=len(h._out_ids),
             finish_reason=reason,
             cached_prompt_tokens=h._cached_prompt,
+            drafted_tokens=h._drafted,
+            accepted_draft_tokens=h._accepted,
         )
         h.status = FINISHED
         self._free_slot(h)
@@ -365,6 +469,12 @@ class ContinuousBatchingExecutor:
                 tok.encode(h.expected, bos=False) + [tok.eos_id]
                 if h.expected is not None else None
             )
+            h._drafted = 0
+            h._accepted = 0
+            # the n-gram proposer's lookup corpus: the prompt's token ids
+            # (grown by every emitted token) — spec-decode engines only
+            h._spec_ctx = (pack_ids(tok.encode(h.prompt))
+                           if self.engine.spec_decode else None)
             if h._budget <= 0:  # prompt alone fills the context window
                 self._retire(h, "length", finished)
 
@@ -383,6 +493,8 @@ class ContinuousBatchingExecutor:
             # tokens from the aborted attempt will be re-generated — back
             # them out so throughput stats never double-count
             self.stats.generated_tokens -= h._emitted
+            self.stats.drafted_tokens -= h._drafted
+            self.stats.accepted_draft_tokens -= h._accepted
             if h._prefill_counted:
                 self.stats.prefill_tokens_computed -= (
                     h.prompt_tokens - h._cached_prompt)
@@ -391,6 +503,9 @@ class ContinuousBatchingExecutor:
             h._out_ids = []
             h._emitted = 0
             h._cached_prompt = 0
+            h._drafted = 0
+            h._accepted = 0
+            h._spec_ctx = None
             h.retries += 1
             if h.retries > self.max_retries:
                 exhausted = True

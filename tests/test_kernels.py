@@ -183,6 +183,94 @@ def test_paged_decode_matches_contiguous_decode():
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
+    "B,K,H,KV,hd,page,n_slots",
+    [
+        (2, 4, 4, 2, 16, 8, 6),    # GQA 2:1
+        (1, 6, 2, 2, 16, 4, 8),    # MHA, window longer than a page
+        (3, 3, 8, 2, 16, 8, 6),    # GQA 4:1
+        (2, 5, 4, 1, 64, 16, 4),   # MQA, big head_dim
+    ],
+)
+def test_spec_verify_attention(B, K, H, KV, hd, page, n_slots, dtype):
+    """Speculative-verification kernel vs oracle: permuted page tables,
+    ragged lens including windows that straddle page boundaries, and the
+    XLA fallback (which is a static loop of paged decode attention)."""
+    from repro.models import layers as L
+
+    n_pages = B * n_slots + 3
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, K, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (n_pages, page, KV, hd), dtype)
+    vp = jax.random.normal(ks[2], (n_pages, page, KV, hd), dtype)
+    rng = np.random.default_rng(B * page + K)
+    table = jnp.asarray(
+        rng.permutation(n_pages)[: B * n_slots].reshape(B, n_slots), jnp.int32)
+    hi = n_slots * page - K
+    straddle = [max(page - 1, 0), max(page - K // 2, 1), 2 * page - 1][:B]
+    for clen in (
+        jnp.asarray((straddle * B)[:B], jnp.int32),  # window crosses a page
+        jax.random.randint(ks[3], (B,), 0, hi + 1),  # ragged, incl. len 0
+        jnp.full((B,), hi, jnp.int32),               # table fully valid
+    ):
+        out = ops.spec_verify_attention(q, kp, vp, table, clen)
+        gold = ref.spec_verify_attention_ref(q, kp, vp, table, clen)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(gold, np.float32), **_tol(dtype))
+        xla = L.spec_verify_attention_paged(q, kp, vp, table, clen)
+        np.testing.assert_allclose(np.asarray(xla, np.float32),
+                                   np.asarray(gold, np.float32), **_tol(dtype))
+
+
+def test_spec_verify_k1_reduces_to_paged_decode():
+    """K=1 must reproduce the single-token paged decode kernel (and the
+    XLA fallbacks each other) bit-for-bit — the speculative window is a
+    strict generalization, not a reimplementation."""
+    from repro.models import layers as L
+
+    B, H, KV, hd, page, n_slots = 2, 4, 2, 16, 8, 4
+    n_pages = B * n_slots + 2
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (n_pages, page, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (n_pages, page, KV, hd), jnp.float32)
+    table = jnp.arange(B * n_slots, dtype=jnp.int32).reshape(B, n_slots)
+    clen = jnp.asarray([page - 1, 3 * page], jnp.int32)
+    out = ops.spec_verify_attention(q, kp, vp, table, clen)
+    dec = ops.paged_decode_attention(q, kp, vp, table, clen + 1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dec))
+    xla = L.spec_verify_attention_paged(q, kp, vp, table, clen)
+    xdec = L.paged_decode_attention(q, kp, vp, table, clen + 1)
+    np.testing.assert_array_equal(np.asarray(xla), np.asarray(xdec))
+
+
+def test_spec_verify_dense_fallback_matches_sequential_decode():
+    """The dense verification fallback must equal K sequential decode
+    -attention calls bit-for-bit (the REPRO_SPEC_DECODE greedy-parity
+    contract), and the paged fallback must agree with it on a
+    contiguously laid-out page table."""
+    from repro.models import layers as L
+
+    B, K, H, KV, hd, page, n_slots = 2, 4, 4, 2, 16, 8, 4
+    Skv = page * n_slots
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, K, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Skv, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Skv, KV, hd), jnp.float32)
+    clen = jnp.asarray([page - 2, 2 * page], jnp.int32)
+    out = L.spec_verify_attention(q, kc, vc, clen)
+    seq = jnp.concatenate(
+        [L.decode_attention(q[:, j:j + 1], kc, vc, clen + j + 1)
+         for j in range(K)], axis=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(seq))
+    kp = kc.reshape(B * n_slots, page, KV, hd)
+    vp = vc.reshape(B * n_slots, page, KV, hd)
+    table = jnp.arange(B * n_slots, dtype=jnp.int32).reshape(B, n_slots)
+    paged = L.spec_verify_attention_paged(q, kp, vp, table, clen)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(out))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
     "B,S,H,P,N,chunk",
     [(1, 32, 2, 8, 4, 8), (2, 64, 3, 16, 8, 16), (1, 48, 4, 8, 16, 12)],
 )

@@ -332,15 +332,19 @@ def test_pages_drain_on_retire_cancel_and_failure(params, monkeypatch):
     ex2 = eng.executor(max_retries=2)
     h = ex2.submit("failure requeue prompt padded: ", max_tokens=3,
                    expected="ok")
-    real = eng.decode_active
     failures = iter([True])
 
-    def flaky(state, tokens, active):
-        if next(failures, False):
-            raise RuntimeError("injected engine failure")
-        return real(state, tokens, active)
+    def make_flaky(real):
+        def flaky(*args, **kw):
+            if next(failures, False):
+                raise RuntimeError("injected engine failure")
+            return real(*args, **kw)
+        return flaky
 
-    monkeypatch.setattr(eng, "decode_active", flaky)
+    # a spec-decode engine steps through verify_active instead of
+    # decode_active — inject into whichever the env selects
+    monkeypatch.setattr(eng, "decode_active", make_flaky(eng.decode_active))
+    monkeypatch.setattr(eng, "verify_active", make_flaky(eng.verify_active))
     ex2.drain()
     assert h.result is not None and h.retries == 1
     assert eng.pool.allocated_pages - 1 == len(eng.prefix_cache.tree_pages())

@@ -156,15 +156,21 @@ def test_executor_requeues_on_engine_failure(engine, monkeypatch):
     ex = engine.executor(max_retries=2)
     handles = [ex.submit(f"rq {i}:", max_tokens=4, expected="ok")
                for i in range(3)]
-    real = engine.decode_active
     failures = iter([True])
 
-    def flaky(state, tokens, active):
-        if next(failures, False):
-            raise RuntimeError("injected engine failure")
-        return real(state, tokens, active)
+    def make_flaky(real):
+        def flaky(*args, **kw):
+            if next(failures, False):
+                raise RuntimeError("injected engine failure")
+            return real(*args, **kw)
+        return flaky
 
-    monkeypatch.setattr(engine, "decode_active", flaky)
+    # a spec-decode engine steps through verify_active instead of
+    # decode_active — inject into whichever the env selects
+    monkeypatch.setattr(engine, "decode_active",
+                        make_flaky(engine.decode_active))
+    monkeypatch.setattr(engine, "verify_active",
+                        make_flaky(engine.verify_active))
     ex.drain()
     assert all(h.result is not None and h.result.completion_tokens > 0
                for h in handles)
@@ -172,9 +178,9 @@ def test_executor_requeues_on_engine_failure(engine, monkeypatch):
 
     ex2 = engine.executor(max_retries=1)
     h = ex2.submit("rq:", max_tokens=4, expected="ok")
-    monkeypatch.setattr(
-        engine, "decode_active",
-        lambda *a: (_ for _ in ()).throw(RuntimeError("always down")))
+    down = lambda *a, **k: (_ for _ in ()).throw(RuntimeError("always down"))
+    monkeypatch.setattr(engine, "decode_active", down)
+    monkeypatch.setattr(engine, "verify_active", down)
     with pytest.raises(RuntimeError):
         ex2.drain()
     assert h.status == "queued" and h.retries > 1

@@ -1,0 +1,351 @@
+"""Self-speculative decoding (DESIGN.md §11): n-gram proposer unit
+tests, greedy-parity suites (dense and paged, including refill / stop /
+budget paths), acceptance-window stop/budget boundary handling, draft
+accounting, and a hypothesis property over random accept/reject patterns
+for page-rollback refcount soundness.
+
+The headline property: with ``REPRO_SPEC_DECODE=1`` vs ``0`` the engine
+emits **identical token ids**, finish reasons, and token accounting —
+speculation may only change how many model passes produce them.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.accounting import Ledger, Usage
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import Engine
+from repro.serve.engine import pack_ids, propose_draft
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep; see requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# N-gram proposer (no model involved)
+# ---------------------------------------------------------------------------
+
+
+def test_propose_draft_longest_suffix_wins():
+    # suffix [5,6,7] re-occurs earlier; the draft copies what followed it
+    ctx = pack_ids([1, 5, 6, 7, 9, 2, 5, 6, 7])
+    assert propose_draft(bytes(ctx), 4) == [9, 2, 5, 6]
+    # k caps the draft
+    assert propose_draft(bytes(ctx), 1) == [9]
+
+
+def test_propose_draft_most_recent_occurrence():
+    # [3] occurs twice earlier; the most recent occurrence provides the
+    # continuation (8), not the older one (4)
+    ctx = pack_ids([3, 4, 3, 8, 3])
+    assert propose_draft(bytes(ctx), 2, max_ngram=1) == [8, 3]
+
+
+def test_propose_draft_falls_back_to_shorter_ngrams():
+    # no 3- or 2-gram repeats, but the 1-gram [9] does
+    ctx = pack_ids([9, 1, 2, 9])
+    assert propose_draft(bytes(ctx), 3) == [1, 2, 9]
+
+
+def test_propose_draft_no_match_and_degenerate():
+    assert propose_draft(bytes(pack_ids([1, 2, 3, 4])), 4) == []
+    assert propose_draft(bytes(pack_ids([1])), 4) == []
+    assert propose_draft(bytes(pack_ids([1, 1, 1])), 0) == []
+
+
+def test_propose_draft_rejects_misaligned_byte_matches():
+    # bytes of the final id appear at a *misaligned* offset spanning two
+    # earlier ids — rfind sees them, the alignment check must not
+    ids = [0x04030201, 0x03020104, 0x01040403]
+    buf = bytes(pack_ids(ids))
+    pat = buf[-4:]
+    assert buf.find(pat, 0, 8) == 2          # the trap exists ...
+    assert propose_draft(buf, 4) == []       # ... and is rejected
+
+
+def test_propose_draft_self_overlapping_repetition():
+    # "aaaa"-style runs: the suffix matches one position earlier and the
+    # draft extends the run
+    ctx = pack_ids([7, 7, 7, 7])
+    assert propose_draft(bytes(ctx), 3, max_ngram=3) == [7]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level greedy parity (spec on vs off must be token-identical)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_smoke_config("granite-3-2b")
+    return init_params(model_specs(cfg), KEY, jnp.float32)
+
+
+def _engine(params, **kw):
+    cfg = get_smoke_config("granite-3-2b")
+    kw.setdefault("max_seq", 256)
+    kw.setdefault("slots", 3)
+    kw.setdefault("prefill_buckets", (64, 128, 256))
+    return Engine(cfg, params, ByteTokenizer(cfg.vocab_size), **kw)
+
+
+def _run(engine, requests):
+    """requests: [(prompt, max_tokens, stop, expected)] → (executor, handles)."""
+    ex = engine.executor()
+    handles = [ex.submit(p, max_tokens=mt, stop=stop, expected=exp)
+               for (p, mt, stop, exp) in requests]
+    ex.drain()
+    return ex, handles
+
+
+def _assert_parity(ex_s, ex_b, hs_s, hs_b):
+    """Spec-on vs spec-off: identical token ids, reasons, accounting."""
+    for a, b in zip(hs_s, hs_b):
+        assert a._out_ids == b._out_ids          # token-identical, not text
+        assert a.result.finish_reason == b.result.finish_reason
+        assert a.result.prompt_tokens == b.result.prompt_tokens
+        assert a.result.completion_tokens == b.result.completion_tokens
+        assert a.result.cached_prompt_tokens == b.result.cached_prompt_tokens
+    assert ex_s.stats.generated_tokens == ex_b.stats.generated_tokens
+    assert ex_s.stats.decode_steps <= ex_b.stats.decode_steps
+    assert ex_b.stats.drafted_tokens == 0        # spec off: no drafts at all
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_greedy_parity_incl_refill(params, paged):
+    """True greedy sampling (no teacher forcing), more requests than
+    slots so mid-decode refill is exercised: speculation must not change
+    a single sampled token id."""
+    shared = "Greedy spec parity preamble long enough to span pages: " * 2
+    reqs = [(shared + f"tail {i}", 8, None, None) for i in range(7)]
+    ex_s, hs_s = _run(_engine(params, paged=paged, spec_decode=True), reqs)
+    ex_b, hs_b = _run(_engine(params, paged=paged, spec_decode=False), reqs)
+    _assert_parity(ex_s, ex_b, hs_s, hs_b)
+    assert ex_s.stats.refills == len(reqs) > 3   # refill path exercised
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_forced_parity_with_stops_budgets_and_acceptance(params, paged):
+    """Teacher-forced answers whose text re-occurs in the prompt: drafts
+    are actually accepted (the win exists), outputs stay identical, and
+    heterogeneous stops/budgets are enforced exactly."""
+    preamble = "The answer is abcabcabcabc and then DONE here: "
+    reqs = [
+        (preamble + "q1", 32, "DONE", "xy abcabcabcabc DONE zz"),
+        (preamble + "q2", 3, None, "abcdefghij"),
+        (preamble + "q3", 24, None, "abcabcabcabcabcabc"),
+        (preamble + "q1", 32, "DONE", "xy abcabcabcabc DONE zz"),
+    ]
+    ex_s, hs_s = _run(_engine(params, paged=paged, spec_decode=True), reqs)
+    ex_b, hs_b = _run(_engine(params, paged=paged, spec_decode=False), reqs)
+    _assert_parity(ex_s, ex_b, hs_s, hs_b)
+    assert hs_s[0].result.finish_reason == "stop"
+    assert hs_s[0].result.text.rstrip().endswith("DONE")
+    assert hs_s[1].result.finish_reason == "length"
+    # the repetitive answers must actually accept drafts — the ≥2× win
+    # of the benchmark rests on this mechanism
+    assert ex_s.stats.accepted_draft_tokens > 0
+    assert ex_s.stats.decode_steps < ex_b.stats.decode_steps
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_stop_string_straddles_acceptance_window(params, paged):
+    """A stop string accepted *mid-window* must terminate the request at
+    exactly the stop token: later accepted drafts are dropped, never
+    emitted, and (paged) their pages roll back with the slot release."""
+    # the full answer appears verbatim in the prompt, so once generation
+    # enters it the proposer drafts straight across the stop string
+    answer = "abab DONE trailing text never emitted"
+    prompt = f"copy this: {answer} | now: "
+    eng = _engine(params, paged=paged, spec_decode=True, spec_k=12)
+    ex, (h,) = _run(eng, [(prompt, 48, "DONE", answer)])
+    base_eng = _engine(params, paged=paged, spec_decode=False)
+    ex_b, (hb,) = _run(base_eng, [(prompt, 48, "DONE", answer)])
+    assert h._out_ids == hb._out_ids
+    assert h.result.finish_reason == "stop"
+    assert h.result.text == "abab DONE"
+    assert h.result.completion_tokens == len("abab DONE")
+    # the stop was crossed inside one acceptance window, not token-by-token
+    assert h.result.accepted_draft_tokens > 0
+    assert ex.stats.decode_steps < ex_b.stats.decode_steps
+    if paged:
+        assert eng.pool.allocated_pages - 1 == len(
+            eng.prefix_cache.tree_pages() if eng.prefix_cache else [])
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_max_tokens_truncation_mid_window(params, paged):
+    """Budget exhaustion mid-acceptance-window: emission stops at exactly
+    ``max_tokens`` accepted tokens; the rest of the accepted draft is
+    dropped and the pages of the speculative tail are released."""
+    eng = _engine(params, paged=paged, spec_decode=True,
+                  prefix_cache=False)
+    reqs = [("zzzzzz: ", 7, None, "z" * 30)]
+    ex, (h,) = _run(eng, reqs)
+    ex_b, (hb,) = _run(_engine(params, paged=paged, spec_decode=False,
+                               prefix_cache=False), reqs)
+    assert h._out_ids == hb._out_ids
+    assert h.result.completion_tokens == 7
+    assert h.result.finish_reason == "length"
+    assert h.result.accepted_draft_tokens > 0    # window crossed the budget
+    if paged:
+        assert eng.pool.allocated_pages == 1     # only the pinned dump page
+
+
+def test_paged_table_mirror_stays_consistent(params):
+    """The incrementally maintained ``table_np`` mirror must equal the
+    page-table lists after every step — appends, CoW, speculative
+    extension, rollback, and slot release all update it in place."""
+    for spec in (False, True):
+        eng = _engine(params, paged=True, spec_decode=spec)
+        ex = eng.executor()
+        hs = [ex.submit(f"mirror check prompt {i} padded out a bit: ",
+                        max_tokens=20, expected="yes it matches " * 2)
+              for i in range(5)]
+        steps = 0
+        while ex.pending:
+            ex.step()
+            steps += 1
+            state = ex._state
+            if state is None:
+                break
+            for s in range(eng.slots):
+                t = state.tables[s]
+                assert list(state.table_np[s, :len(t)]) == t
+                assert (state.table_np[s, len(t):] == eng._dump).all()
+                # committed invariant: tables cover exactly the tokens
+                assert len(t) == -(-int(state.lens[s]) // eng.page_size)
+        assert all(h.result is not None for h in hs)
+
+
+def test_spec_decode_gated_off_for_ssm_families():
+    cfg = get_smoke_config("mamba2-130m")
+    p = init_params(model_specs(cfg), KEY, jnp.float32)
+    eng = Engine(cfg, p, ByteTokenizer(cfg.vocab_size), max_seq=128,
+                 slots=2, spec_decode=True)
+    assert not eng.spec_decode
+
+
+def test_env_var_gates_spec_decode(params, monkeypatch):
+    monkeypatch.delenv("REPRO_SPEC_DECODE", raising=False)
+    assert not _engine(params).spec_decode            # off by default
+    monkeypatch.setenv("REPRO_SPEC_DECODE", "1")
+    assert _engine(params).spec_decode
+    monkeypatch.setenv("REPRO_SPEC_DECODE", "0")
+    assert not _engine(params).spec_decode
+    monkeypatch.setenv("REPRO_SPEC_DECODE", "1")
+    assert not _engine(params, spec_decode=False).spec_decode  # arg wins
+
+
+# ---------------------------------------------------------------------------
+# Accounting: drafted vs accepted, Eq. (1) untouched
+# ---------------------------------------------------------------------------
+
+
+def test_draft_accounting_flows_to_usage_and_ledger(params):
+    eng = _engine(params, paged=True, spec_decode=True)
+    ex, hs = _run(eng, [("count drafts: ", 16, None, "ababababababab"),
+                        ("count drafts 2: ", 16, None, "cdcdcdcdcdcdcd")])
+    total_d = sum(h.result.drafted_tokens for h in hs)
+    total_a = sum(h.result.accepted_draft_tokens for h in hs)
+    assert total_d == ex.stats.drafted_tokens > 0
+    assert total_a == ex.stats.accepted_draft_tokens > 0
+    assert total_a <= total_d
+    # only emitted tokens count as completion output (Eq. (1) untouched)
+    assert ex.stats.generated_tokens == sum(
+        h.result.completion_tokens for h in hs)
+
+    ledger = Ledger()
+    for h in hs:
+        r = h.result
+        ledger.record(Usage(r.prompt_tokens, r.completion_tokens,
+                            r.cached_prompt_tokens, r.drafted_tokens,
+                            r.accepted_draft_tokens))
+    assert ledger.drafted_tokens == total_d
+    assert ledger.accepted_draft_tokens == total_a
+    s = ledger.summary()
+    assert s["draft_acceptance_rate"] == pytest.approx(total_a / total_d)
+    # acceptance stats never leak into billable token counts
+    assert s["completion_tokens"] == ex.stats.generated_tokens
+
+
+def test_usage_addition_carries_draft_split():
+    u = Usage(10, 5, 2, 8, 3) + Usage(1, 1, 0, 2, 2)
+    assert (u.drafted_tokens, u.accepted_draft_tokens) == (10, 5)
+    assert u.draft_acceptance_rate == pytest.approx(0.5)
+    assert Usage(1, 1).draft_acceptance_rate == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Page-rollback refcount soundness under random accept/reject patterns
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(1, 40),
+           st.lists(st.tuples(st.integers(1, 9), st.integers(0, 8)),
+                    min_size=1, max_size=30))
+    @settings(max_examples=50, deadline=None)
+    def test_page_rollback_refcount_property(prompt_len, rounds):
+        """Random speculative rounds — window size ``n_tok``, accepted
+        count ``min(acc, n_tok-1)`` drafts — against the engine's page
+        bookkeeping alone (no model): after every extend/commit cycle
+        the row's pages cover exactly its committed tokens, every page
+        has exactly one (exclusive) reference, page conservation holds,
+        and releasing the slot drains the pool completely."""
+        eng = Engine.__new__(Engine)  # bookkeeping only: no weights needed
+        eng.page_size = 4
+        eng._maxp = 64
+        eng.paged = True
+        eng.prefix_cache = None
+        eng._peak_live_pages = 0
+        eng._select_logits = lambda lg, sel: jnp.take_along_axis(
+            lg, sel[:, None, None], axis=1)[:, 0]
+        from repro.serve.prefix_cache import PagedKVPool
+        eng.pool = PagedKVPool(64, 4)
+        eng._dump = eng.pool.alloc(1)[0]
+        from repro.serve.engine import PagedDecodeState
+        state = PagedDecodeState(
+            logits=jnp.zeros((1, 8), jnp.float32),
+            lens=np.zeros(1, np.int32),
+            tables=[[]],
+            table_np=np.full((1, eng._maxp), eng._dump, np.int32),
+        )
+        # a prefilled row: ceil(prompt/page) exclusive pages
+        n0 = -(-prompt_len // eng.page_size)
+        state.tables[0] = eng._alloc_pages(n0)
+        state.table_np[0, :n0] = state.tables[0]
+        state.lens[0] = prompt_len
+
+        for n_tok, acc in rounds:
+            before = int(state.lens[0])
+            if before + n_tok >= eng._maxp * eng.page_size:
+                break
+            eng._extend_tail(state, 0, n_tok)
+            t = state.tables[0]
+            assert len(t) == -(-(before + n_tok) // eng.page_size)
+            counts = np.asarray([1 + min(acc, n_tok - 1)], np.int32)
+            logits = jnp.zeros((1, n_tok + 1, 8), jnp.float32)
+            eng.commit_spec(state, logits, counts, np.asarray([True]))
+            # rollback invariant: pages cover exactly the committed tokens
+            t = state.tables[0]
+            assert int(state.lens[0]) == before + int(counts[0])
+            assert len(t) == -(-int(state.lens[0]) // eng.page_size)
+            assert list(state.table_np[0, :len(t)]) == t
+            assert (state.table_np[0, len(t):] == eng._dump).all()
+            # every page exclusively owned; conservation holds
+            assert all(eng.pool.refs[p] == 1 for p in t)
+            assert eng.pool.free_pages + eng.pool.allocated_pages == 64
+
+        eng.release_slot(state, 0)
+        assert eng.pool.allocated_pages == 1      # only the dump page
+        assert (state.table_np[0] == eng._dump).all()
