@@ -18,11 +18,19 @@ random, so the oracle
 teacher-forces the answers — every forward pass, cache write and decode
 step still runs for real, with honest token accounting.
 
+With ``--replicas N`` the same join runs a second time through a
+data-parallel serving cluster (DESIGN.md §12): N engine replicas behind
+the prefix-affinity router, one replica killed mid-join to demonstrate
+failover, merged accounting printed per replica.
+
     PYTHONPATH=src python examples/serve_join.py
     PYTHONPATH=src python examples/serve_join.py --spec-decode   # DESIGN.md §11
+    PYTHONPATH=src python examples/serve_join.py --replicas 2    # DESIGN.md §12
 """
 
 import argparse
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +41,7 @@ from repro.core.oracle import OracleLLM
 from repro.data import ads_scenario
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_params, model_specs
-from repro.serve import Engine, EngineClient, Request, Scheduler
+from repro.serve import Cluster, ClusterClient, Engine, EngineClient
 
 
 def main() -> None:
@@ -41,6 +49,9 @@ def main() -> None:
     ap.add_argument("--spec-decode", action="store_true",
                     help="self-speculative decoding: n-gram drafts verified "
                          "in one multi-token pass per step (DESIGN.md §11)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="also run the block join through a cluster of N "
+                         "engine replicas with failover (DESIGN.md §12)")
     args = ap.parse_args()
 
     sc = ads_scenario()
@@ -54,6 +65,7 @@ def main() -> None:
 
     print("=== block join through the serving engine (slot-refill batching) ===")
     res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4)
+    block_pairs = res.pairs
     stats = client.executor.stats
     print(f"calls={res.ledger.calls} prompt_toks={res.ledger.prompt_tokens} "
           f"(cached={res.ledger.cached_prompt_tokens}) "
@@ -91,11 +103,42 @@ def main() -> None:
             print(f"  req {h.request_id}: {r.prompt_tokens} in / "
                   f"{r.completion_tokens} out ({r.finish_reason})")
 
-    print("\n=== scheduler facade: blocking run() over the executor ===")
-    reqs = [Request(i, f"Text: {t}\nAnswer:", max_tokens=8)
-            for i, t in enumerate(sc.r1[:4])]
-    done = Scheduler(engine).run(reqs)
-    print(f"  completed {len(done)} requests")
+    if args.replicas > 1:
+        print(f"\n=== serving cluster: {args.replicas} replicas, "
+              f"prefix-affinity routing, one killed mid-join ===")
+        with Cluster.replicate(cfg, params, tok, args.replicas,
+                               max_seq=1024, slots=4,
+                               spec_decode=args.spec_decode) as cluster:
+            cclient = ClusterClient(cluster, oracle=oracle)
+            cluster.hold()  # gang submission: deterministic routing
+            killer = threading.Timer(
+                1.0, cluster.fail_replica, args=(args.replicas - 1,))
+            killer.start()
+            try:
+                cres = block_join(sc.r1, sc.r2, sc.condition, cclient, 4, 4)
+            finally:
+                killer.cancel()
+            cluster.fail_replica(args.replicas - 1)  # if the join outran it
+            cluster.drain()
+            deadline = time.time() + 30  # let the worker process the kill
+            while (cluster.replicas_alive == args.replicas
+                   and time.time() < deadline):
+                time.sleep(0.05)
+            assert cres.pairs == block_pairs  # token-identical serving
+            summ = cluster.summary()
+            print(f"calls={cres.ledger.calls} f1={cres.f1(sc.truth):.2f} "
+                  f"critical_path_passes={summ['critical_path_passes']} "
+                  f"router={summ['router']}")
+            if summ["prefix_cache"] is not None:
+                print(f"merged prefix cache: "
+                      f"hit_rate={summ['prefix_cache']['hit_rate']:.2f}")
+            for r_ in summ["per_replica"]:
+                st = r_["stats"]
+                print(f"  replica {r_['replica']}: "
+                      f"{'alive' if r_['alive'] else 'DEAD'} "
+                      f"calls={r_['ledger']['calls']} "
+                      f"decode_steps={st['decode_steps']} "
+                      f"prefill_batches={st['prefill_batches']}")
 
 
 if __name__ == "__main__":

@@ -171,6 +171,15 @@ class Ledger:
         self.overflows += other.overflows
         self.wasted_prompt_tokens += other.wasted_prompt_tokens
 
+    def __add__(self, other: "Ledger") -> "Ledger":
+        """Non-mutating merge — the serving cluster folds per-replica
+        ledgers into cluster-level accounting with ``sum(..., Ledger())``
+        while keeping the per-replica breakdown intact."""
+        out = Ledger()
+        out.merge(self)
+        out.merge(other)
+        return out
+
     @property
     def usage(self) -> Usage:
         return Usage(self.prompt_tokens, self.completion_tokens,

@@ -11,6 +11,9 @@ Three implementations ship with the framework:
 * :class:`repro.serve.client.EngineClient` — the real thing: routes prompts
   through the JAX serving engine (prefill + decode with KV cache) hosting any
   of the 10 assigned architectures.
+* :class:`repro.serve.cluster.ClusterClient` — the same surface over N
+  data-parallel engine replicas behind a prefix-affinity router with
+  failover (DESIGN.md §12); join operators cannot tell the difference.
 
 The join algorithms are written against this interface only, so the paper's
 contribution (block/adaptive batching) is model- and backend-agnostic.

@@ -82,14 +82,38 @@ def block_prompt_shared_prefix(batch1: Sequence[str], j: str) -> str:
     return "\n".join(lines) + "\n"
 
 
+#: First bytes of :func:`block_prompt_variable_suffix` — the marker at
+#: which every block prompt splits into shared prefix and per-call
+#: suffix.  :func:`split_shared_prefix` (and the serving cluster's
+#: prefix-affinity router) keys on everything before it.
+VARIABLE_SUFFIX_MARKER = "Text Collection 2:"
+
+
 def block_prompt_variable_suffix(batch2: Sequence[str]) -> str:
     """The per-call remainder of a block prompt: right-table block +
     answer cue.  Always rendered *after* the shared prefix."""
-    lines = ["Text Collection 2:"]
+    lines = [VARIABLE_SUFFIX_MARKER]
     for i, t in enumerate(batch2, start=1):
         lines.append(f"{i}. {t}")
     lines.append("Index pairs:")
     return "\n".join(lines)
+
+
+def split_shared_prefix(prompt: str) -> Tuple[str, str]:
+    """Split any prompt at the canonical prefix/suffix boundary.
+
+    For a block prompt this recovers exactly the
+    ``(block_prompt_shared_prefix, block_prompt_variable_suffix)`` byte
+    split (golden-pinned); prompts without the marker are all prefix —
+    each distinct prompt is its own reuse unit.  This is the keying
+    function of the serving cluster's prefix-affinity router: prompts
+    with equal first components share their KV prefix, so routing them
+    to the same engine replica preserves the radix cache's hit rate.
+    """
+    idx = prompt.find(VARIABLE_SUFFIX_MARKER)
+    if idx <= 0:
+        return prompt, ""
+    return prompt[:idx], prompt[idx:]
 
 
 def block_prompt(batch1: Sequence[str], batch2: Sequence[str], j: str) -> str:

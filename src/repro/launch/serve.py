@@ -3,16 +3,27 @@
   python -m repro.launch.serve --arch granite-3-2b --smoke \
       --scenario ads --operator adaptive
 
+  # data-parallel cluster: N engine replicas behind the prefix-affinity
+  # router (DESIGN.md §12); also via REPRO_REPLICAS=N
+  python -m repro.launch.serve --arch granite-3-2b --smoke --replicas 2
+
 Production notes: on a TPU slice the engine compiles per prefill bucket
 once at startup; the executor's token-budget admission (paper Eq. 1)
 bounds in-flight HBM while freed cache slots are refilled mid-decode
 (slot-refill continuous batching, DESIGN.md §8); engine failures re-queue
-idempotent block prompts.
+idempotent block prompts.  With ``--replicas N`` each replica is a full
+engine (own page pool, prefix cache, executor; Eq. (1) admission stays
+per replica) on its own worker thread — pin replicas to distinct
+accelerators (or, on CPU, force multiple host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and the router
+keeps every left block's prompts on one replica so cache hit rates stay
+at single-engine levels; a dead replica's work fails over to survivors.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +33,8 @@ from repro.core import adaptive_join, block_join, tuple_join
 from repro.core.oracle import OracleLLM
 from repro.data import all_scenarios
 from repro.data.tokenizer import ByteTokenizer
+from repro.serve import Cluster, ClusterClient, Engine, EngineClient, make_router
 from repro.models import init_params, model_specs
-from repro.serve import Engine, EngineClient
 
 
 def main() -> None:
@@ -36,30 +47,59 @@ def main() -> None:
                     choices=["tuple", "block", "adaptive"])
     ap.add_argument("--max-seq", type=int, default=1024)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--replicas", type=int,
+                    default=int(os.environ.get("REPRO_REPLICAS", "1")),
+                    help="data-parallel engine replicas (DESIGN.md §12; "
+                         "default from REPRO_REPLICAS, 1 = single engine)")
+    ap.add_argument("--router", default="affinity",
+                    choices=["affinity", "round_robin"],
+                    help="cluster routing policy (replicas > 1)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0), jnp.float32)
     tok = ByteTokenizer(cfg.vocab_size)
-    engine = Engine(cfg, params, tok, max_seq=args.max_seq, slots=args.slots)
 
     sc = {s.name: s for s in all_scenarios()}[args.scenario]
     oracle = OracleLLM(sc.predicate, context_limit=args.max_seq)
-    client = EngineClient(engine, oracle=oracle)
 
-    if args.operator == "tuple":
-        res = tuple_join(sc.r1, sc.r2, sc.condition, client)
-    elif args.operator == "block":
-        res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4)
+    cluster = None
+    if args.replicas > 1:
+        cluster = Cluster.replicate(
+            cfg, params, tok, args.replicas, router=make_router(args.router),
+            max_seq=args.max_seq, slots=args.slots)
+        client = ClusterClient(cluster, oracle=oracle)
     else:
-        res = adaptive_join(sc.r1, sc.r2, sc.condition, client,
-                            initial_estimate=1e-3)
+        engine = Engine(cfg, params, tok, max_seq=args.max_seq,
+                        slots=args.slots)
+        client = EngineClient(engine, oracle=oracle)
 
-    q = res.quality(sc.truth)
-    print(f"{args.operator} join on {sc.name} via {cfg.name}: "
-          f"calls={res.ledger.calls} tokens={res.ledger.usage.total_tokens} "
-          f"P={q['precision']:.2f} R={q['recall']:.2f} F1={q['f1']:.2f} "
-          f"wall={res.wall_time_s:.1f}s")
+    try:
+        if args.operator == "tuple":
+            res = tuple_join(sc.r1, sc.r2, sc.condition, client)
+        elif args.operator == "block":
+            res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4)
+        else:
+            res = adaptive_join(sc.r1, sc.r2, sc.condition, client,
+                                initial_estimate=1e-3)
+
+        q = res.quality(sc.truth)
+        backend = (f"{cfg.name} x{args.replicas} ({args.router})"
+                   if cluster is not None else cfg.name)
+        print(f"{args.operator} join on {sc.name} via {backend}: "
+              f"calls={res.ledger.calls} tokens={res.ledger.usage.total_tokens} "
+              f"P={q['precision']:.2f} R={q['recall']:.2f} F1={q['f1']:.2f} "
+              f"wall={res.wall_time_s:.1f}s")
+        if cluster is not None:
+            cluster.drain()
+            summ = cluster.summary()
+            print(f"cluster: critical_path_passes={summ['critical_path_passes']} "
+                  f"router={summ['router']} "
+                  f"per_replica_calls="
+                  f"{[r['ledger']['calls'] for r in summ['per_replica']]}")
+    finally:
+        if cluster is not None:
+            cluster.shutdown()
 
 
 if __name__ == "__main__":

@@ -11,14 +11,31 @@ from repro.serve.executor import (
     ServeHandle,
 )
 from repro.serve.client import EngineClient, EngineHandle
+from repro.serve.cluster import (
+    Cluster,
+    ClusterClient,
+    ClusterClientHandle,
+    ClusterHandle,
+)
 from repro.serve.prefix_cache import (
     PagedKVPool,
     PrefixCacheStats,
     RadixPrefixCache,
 )
-from repro.serve.scheduler import Scheduler, Request
+from repro.serve.router import (
+    PrefixAffinityRouter,
+    RoundRobinRouter,
+    Router,
+    RouterView,
+    affinity_key,
+    make_router,
+)
 
 __all__ = [
+    "Cluster",
+    "ClusterClient",
+    "ClusterClientHandle",
+    "ClusterHandle",
     "ContinuousBatchingExecutor",
     "DecodeState",
     "Engine",
@@ -28,10 +45,14 @@ __all__ = [
     "GenResult",
     "PagedDecodeState",
     "PagedKVPool",
+    "PrefixAffinityRouter",
     "PrefixCacheStats",
     "RadixPrefixCache",
-    "Request",
-    "Scheduler",
+    "RoundRobinRouter",
+    "Router",
+    "RouterView",
     "ServeHandle",
     "StopMatcher",
+    "affinity_key",
+    "make_router",
 ]

@@ -1,0 +1,679 @@
+"""Data-parallel serving cluster: N engine replicas behind a router
+(DESIGN.md §12).
+
+Everything below PR 4 scales a *single* :class:`~repro.serve.engine.Engine`
+— one page pool, one radix prefix cache, one continuous-batching
+executor.  The block join's workload is the textbook case for going
+*wide* instead: one semantic join fans out into thousands of independent
+prompts whose cost is dominated by a shared left-block prefix, so a
+production tier replicates the engine and puts an operator-aware router
+in front (the SEMA / Cortex AISQL architecture).  This module is that
+tier:
+
+* :class:`Cluster` owns N replicas.  Each replica is a full engine —
+  its own KV page pool, radix prefix cache, speculative-decode state —
+  plus its own :class:`~repro.serve.executor.ContinuousBatchingExecutor`
+  and a **worker thread** that drives ``step()`` whenever work is
+  pending.  Eq. (1) and free-page admission stay *per replica* (each
+  executor admits against its own engine's budget).  Replica engines can
+  be pinned to distinct XLA devices
+  (``--xla_force_host_platform_device_count`` hosts N CPU devices in
+  tests/CI; a real deployment maps replicas to accelerators), so device
+  work runs GIL-released and concurrently across replicas.
+* Routing is pluggable (:mod:`repro.serve.router`); the default
+  :class:`~repro.serve.router.PrefixAffinityRouter` keys each prompt by
+  its canonical shared prefix so one left block's prompt group lands on
+  one replica — cluster-wide prefix-cache hit rates match a single
+  engine's — with a least-outstanding-tokens spill valve for overload.
+* **Failover**: when a replica's step fails terminally (its executor's
+  own retry path is exhausted), the worker marks it dead, evacuates the
+  executor (the in-flight requests were already re-queued by the
+  executor's requeue path), and the cluster resubmits the orphaned
+  prompts through the router onto surviving replicas.  Prompts are
+  idempotent and decode is greedy, so a failed-over join completes with
+  token-identical results; partial-attempt tokens are backed out of the
+  dead replica's stats, so accounting stays exact.
+* **Merged accounting**: per-replica ``ExecutorStats`` and per-replica
+  ledgers (one :class:`~repro.core.accounting.Ledger` recording each
+  replica's finished requests) merge into cluster totals via their
+  ``merge``/``__add__``, with the per-replica breakdown preserved.
+
+:class:`ClusterClient` wraps a cluster in the standard
+:class:`~repro.core.llm_client.LLMClient` submission surface, so
+``block_join`` / ``adaptive_join`` / ``tuple_join`` run against N
+replicas unchanged.
+
+Lock discipline (the part that keeps this deadlock-free): each replica's
+executor/handle-map/ledger/alive flag is guarded by ``replica.lock``;
+cluster-global state (router, fatal flag, condition variables) by
+``Cluster._mu``.  No thread ever acquires ``_mu`` while holding a
+replica lock — workers release the replica lock before notifying — so
+the two levels never form a cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
+
+from repro.core.accounting import Ledger, Usage
+from repro.core.llm_client import LLMClient, LLMHandle
+from repro.core.oracle import OracleLLM
+from repro.serve.client import _to_response
+from repro.serve.engine import Engine, GenResult
+from repro.serve.executor import (
+    CANCELLED, FINISHED, ContinuousBatchingExecutor, ExecutorStats,
+    ServeHandle,
+)
+from repro.serve.router import (
+    PrefixAffinityRouter, Router, RouterView, affinity_key,
+)
+
+PENDING = "pending"
+
+
+@dataclasses.dataclass(eq=False)
+class ClusterHandle:
+    """Future-like handle for one request submitted to the cluster.
+
+    Identity equality, like :class:`~repro.serve.executor.ServeHandle`.
+    ``replica`` / ``_serve`` name the replica currently responsible —
+    they change when failover resubmits the request elsewhere
+    (``failovers`` counts the moves).
+    """
+
+    request_id: int
+    prompt: str
+    max_tokens: int
+    stop: Optional[str]
+    expected: Optional[str]
+    prompt_tokens: int
+    status: str = PENDING
+    result: Optional[GenResult] = None
+    replica: int = -1
+    failovers: int = 0
+    _serve: Optional[ServeHandle] = dataclasses.field(default=None, repr=False)
+
+    def done(self) -> bool:
+        return self.status in (FINISHED, CANCELLED)
+
+    def started(self) -> bool:
+        """True once some replica has begun paying for this request (its
+        current serve handle reached a prefill).  A failed-over request
+        whose partial attempt was backed out reads as not-started again —
+        which is exactly what its stats say."""
+        s = self._serve
+        return s is not None and s.status in ("active", "finished")
+
+
+class _Replica:
+    """One engine + executor + worker thread; all mutable state guarded
+    by ``self.lock`` (see the module docstring's lock discipline)."""
+
+    def __init__(self, idx: int, engine: Engine, *, max_retries: int):
+        self.idx = idx
+        self.engine = engine
+        self.executor = ContinuousBatchingExecutor(
+            engine, max_retries=max_retries)
+        self.lock = threading.Lock()
+        self.alive = True
+        self.error: Optional[BaseException] = None
+        self.poison: Optional[BaseException] = None  # injected failure
+        #: serve request_id -> ClusterHandle, for every unfinished
+        #: request this replica currently owns
+        self.handles: Dict[int, ClusterHandle] = {}
+        #: accounting of this replica's *finished* requests
+        self.ledger = Ledger()
+        self.thread: Optional[threading.Thread] = None
+
+    @property
+    def capacity(self) -> int:
+        return self.engine.slots * self.engine.max_seq
+
+
+def _usage(r: GenResult) -> Usage:
+    return Usage(r.prompt_tokens, r.completion_tokens,
+                 r.cached_prompt_tokens, r.drafted_tokens,
+                 r.accepted_draft_tokens)
+
+
+class Cluster:
+    def __init__(
+        self,
+        engines: Sequence[Engine],
+        *,
+        router: Optional[Router] = None,
+        max_retries: int = 2,
+    ):
+        if not engines:
+            raise ValueError("a cluster needs at least one engine replica")
+        self.router = router if router is not None else PrefixAffinityRouter()
+        self._replicas = [
+            _Replica(i, e, max_retries=max_retries)
+            for i, e in enumerate(engines)
+        ]
+        self._mu = threading.Lock()
+        self._work = threading.Condition(self._mu)   # workers wait here
+        self._done = threading.Condition(self._mu)   # consumers wait here
+        self._running = True
+        self._held = False
+        self._fatal: Optional[BaseException] = None
+        #: orphans of a dead replica, between evacuation and re-placement
+        #: on a survivor — they belong to no replica's handle map, so the
+        #: completion surfaces must count them explicitly
+        self._limbo: List[ClusterHandle] = []
+        self._next_id = 0
+        for rep in self._replicas:
+            rep.thread = threading.Thread(
+                target=self._worker, args=(rep,),
+                name=f"cluster-replica-{rep.idx}", daemon=True)
+            rep.thread.start()
+
+    # ------------------------------------------------------------------
+    # Construction convenience
+    # ------------------------------------------------------------------
+    @classmethod
+    def replicate(
+        cls,
+        cfg,
+        params,
+        tokenizer,
+        n: int,
+        *,
+        router: Optional[Router] = None,
+        max_retries: int = 2,
+        devices: Optional[Sequence[Any]] = None,
+        **engine_kwargs,
+    ) -> "Cluster":
+        """Build ``n`` identical engine replicas over shared weights.
+
+        With more than one XLA device visible (``devices=None`` →
+        ``jax.devices()``), each replica's parameters are ``device_put``
+        onto its own device round-robin, so its jitted prefill/decode
+        run there (computations follow their committed operands) and
+        replicas execute device work concurrently.  On a single device
+        the weights are shared by reference — replicas still isolate
+        their KV pools, caches, and executors.
+        """
+        import jax
+
+        if devices is None:
+            devs = jax.devices()
+            devices = ([devs[i % len(devs)] for i in range(n)]
+                       if len(devs) > 1 else [None] * n)
+        engines = []
+        for i in range(n):
+            p = (params if devices[i] is None
+                 else jax.device_put(params, devices[i]))
+            engines.append(Engine(cfg, p, tokenizer, **engine_kwargs))
+        return cls(engines, router=router, max_retries=max_retries)
+
+    @property
+    def engines(self) -> List[Engine]:
+        return [rep.engine for rep in self._replicas]
+
+    @property
+    def replicas_alive(self) -> int:
+        return sum(1 for rep in self._replicas if rep.alive)
+
+    # ------------------------------------------------------------------
+    # Submission surface
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt: str,
+        *,
+        max_tokens: int,
+        stop: Optional[str] = None,
+        expected: Optional[str] = None,
+    ) -> ClusterHandle:
+        """Route one request to a replica; returns immediately."""
+        with self._mu:
+            rid = self._next_id
+            self._next_id += 1
+        ch = ClusterHandle(
+            request_id=rid, prompt=prompt, max_tokens=max_tokens, stop=stop,
+            expected=expected,
+            prompt_tokens=self._replicas[0].engine.count_tokens(prompt),
+        )
+        self._place(ch)
+        return ch
+
+    def _view(self) -> RouterView:
+        alive = [rep.idx for rep in self._replicas if rep.alive]
+        return RouterView(
+            alive=alive,
+            outstanding={rep.idx: rep.executor.outstanding_tokens
+                         for rep in self._replicas},
+            capacity={rep.idx: rep.capacity for rep in self._replicas},
+        )
+
+    def _place(self, ch: ClusterHandle) -> None:
+        """Pick a replica through the router and enqueue ``ch`` on it.
+
+        Loops on the (rare) race where the chosen replica dies between
+        routing and enqueue; raises once no replica is left.
+        """
+        key = affinity_key(ch.prompt)
+        cost = ch.prompt_tokens + ch.max_tokens
+        while True:
+            with self._mu:
+                view = self._view()
+                if self._fatal is not None or not view.alive:
+                    # the last replica may have flipped dead while its
+                    # failover is still publishing the fatal flag
+                    raise RuntimeError(
+                        "cluster has no live replicas") from self._fatal
+                idx = self.router.pick(key, cost, view)
+            rep = self._replicas[idx]
+            with rep.lock:
+                if not rep.alive:
+                    continue  # failure raced the routing decision
+                serve = rep.executor.submit(
+                    ch.prompt, max_tokens=ch.max_tokens, stop=ch.stop,
+                    expected=ch.expected)
+                ch._serve = serve
+                ch.replica = rep.idx
+                rep.handles[serve.request_id] = ch
+            with self._mu:
+                self._work.notify_all()
+            return
+
+    def hold(self) -> None:
+        """Gang submission: buffer routed requests without executing.
+
+        While held, workers idle and submissions only queue on their
+        replicas' executors; the first consumer (:meth:`as_completed` /
+        :meth:`result` / :meth:`drain`) — or an explicit
+        :meth:`release` — starts execution.  Submitting a whole
+        operator's prompt fan-out before any decode begins makes
+        routing, refill batching, and per-replica pass counts
+        *deterministic* (no race between the submission burst and the
+        first refill), which is what the cluster benchmark measures and
+        what a replayable trace wants.
+        """
+        with self._mu:
+            self._held = True
+
+    def release(self) -> None:
+        with self._mu:
+            self._held = False
+            self._work.notify_all()
+
+    def cancel(self, ch: ClusterHandle) -> bool:
+        """Cancel a not-yet-finished request (cluster-wide)."""
+        while True:
+            if ch.done():
+                return False
+            with self._mu:
+                if self._fatal is not None:
+                    # a fatal cluster never resolves this handle; callers
+                    # reach cancel from their error cleanup — don't spin
+                    return False
+                if ch in self._limbo:
+                    # failover owns it right now; it will be re-placed or
+                    # cancelled momentarily — wait instead of busy-looping
+                    self._done.wait(timeout=0.05)
+                    continue
+            rep = self._replicas[ch.replica] if ch.replica >= 0 else None
+            if rep is None:
+                return False
+            with rep.lock:
+                serve = ch._serve
+                if (serve is None
+                        or rep.handles.get(serve.request_id) is not ch):
+                    # completed or failed over while we looked — re-read
+                    if ch.done():
+                        return False
+                    continue
+                ok = rep.executor.cancel(serve)
+                if ok:
+                    del rep.handles[serve.request_id]
+            if ok:
+                with self._mu:
+                    ch.status = CANCELLED
+                    self._done.notify_all()
+            return ok
+
+    # ------------------------------------------------------------------
+    # Completion surface
+    # ------------------------------------------------------------------
+    def _pending_handles(self) -> List[ClusterHandle]:
+        with self._mu:
+            seen = list(self._limbo)
+        for rep in self._replicas:
+            with rep.lock:
+                seen.extend(rep.handles.values())
+        return sorted(set(seen), key=lambda c: c.request_id)
+
+    def _raise_fatal(self) -> None:
+        raise RuntimeError(
+            "cluster failed: every replica is dead and the remaining "
+            "requests cannot be re-placed") from self._fatal
+
+    def as_completed(
+        self, handles: Optional[Iterable[ClusterHandle]] = None
+    ) -> Iterator[ClusterHandle]:
+        """Yield handles in completion order (across all replicas)."""
+        if handles is None:
+            handles = self._pending_handles()
+        self.release()  # a consumer is waiting: end any gang-submission hold
+        waiting: Dict[int, ClusterHandle] = {}
+        ready: List[ClusterHandle] = []
+        with self._mu:
+            for ch in handles:
+                if ch.status == FINISHED:
+                    ready.append(ch)
+                elif ch.status != CANCELLED:
+                    waiting[ch.request_id] = ch
+        yield from ready
+        while waiting:
+            with self._mu:
+                while True:
+                    ready = [c for c in waiting.values() if c.done()]
+                    if ready:
+                        break
+                    if self._fatal is not None:
+                        self._raise_fatal()
+                    self._done.wait()
+            for ch in ready:
+                del waiting[ch.request_id]
+                if ch.status == FINISHED:
+                    yield ch
+
+    def result(self, ch: ClusterHandle) -> GenResult:
+        """Block until ``ch`` resolves (workers drive the engines)."""
+        self.release()
+        with self._mu:
+            while not ch.done():
+                if self._fatal is not None:
+                    self._raise_fatal()
+                self._done.wait()
+        if ch.status == CANCELLED:
+            raise RuntimeError(f"request {ch.request_id} was cancelled")
+        return ch.result
+
+    def drain(self) -> None:
+        """Block until no replica owns an unfinished request (mid-
+        failover orphans in limbo count as unfinished)."""
+        self.release()
+        with self._mu:
+            while (self._limbo
+                   or any(rep.alive and rep.handles
+                          for rep in self._replicas)):
+                if self._fatal is not None:
+                    self._raise_fatal()
+                self._done.wait()
+
+    # ------------------------------------------------------------------
+    # Worker threads + failover
+    # ------------------------------------------------------------------
+    def _worker(self, rep: _Replica) -> None:
+        while True:
+            with self._mu:
+                while (self._running and rep.alive and rep.poison is None
+                       and (self._held or not rep.executor.pending)):
+                    self._work.wait()
+                if not self._running or not rep.alive:
+                    return
+            if rep.poison is not None:
+                self._on_replica_failure(rep, rep.poison)
+                return
+            failure: Optional[BaseException] = None
+            completions: List[tuple] = []
+            with rep.lock:
+                if not rep.alive:
+                    return
+                try:
+                    finished = rep.executor.step()
+                except Exception as exc:  # retries exhausted
+                    failure = exc
+                    finished = []
+                for serve in finished:
+                    ch = rep.handles.pop(serve.request_id, None)
+                    if ch is not None:
+                        rep.ledger.record(_usage(serve.result))
+                        completions.append((serve, ch))
+            if failure is not None:
+                self._on_replica_failure(rep, failure)
+                return
+            if completions:
+                with self._mu:
+                    for serve, ch in completions:
+                        ch.result = serve.result
+                        ch.status = FINISHED
+                    self._done.notify_all()
+
+    def _on_replica_failure(self, rep: _Replica, exc: BaseException) -> None:
+        """Kill ``rep`` and re-place its unfinished requests elsewhere.
+
+        The executor's own requeue path already reset the in-flight
+        requests into its queue (backing their tokens out of the stats);
+        :meth:`~ContinuousBatchingExecutor.evacuate` drains that queue so
+        the prompts can be resubmitted — same text, same budgets — on
+        surviving replicas.  With no survivor left the cluster goes
+        fatal and every waiter raises.
+        """
+        with rep.lock:
+            rep.alive = False
+            rep.error = exc
+            victims = rep.executor.evacuate()
+            orphans = [rep.handles.pop(s.request_id)
+                       for s in victims if s.request_id in rep.handles]
+            rep.handles.clear()
+        with self._mu:
+            # limbo makes the orphans visible to drain/_pending_handles/
+            # cancel while they belong to no replica's handle map
+            self._limbo.extend(orphans)
+            self.router.forget(rep.idx)
+            survivors = any(r.alive for r in self._replicas)
+            if not survivors:
+                self._fatal = exc
+                self._done.notify_all()
+                self._work.notify_all()
+                return
+        for ch in orphans:
+            ch.failovers += 1
+            try:
+                self._place(ch)
+            except RuntimeError:
+                return  # a concurrent failure took the last survivor;
+                # remaining orphans stay in limbo and waiters see _fatal
+            except Exception:
+                # unplaceable on any survivor (e.g. heterogeneous
+                # replicas: the survivor's max_seq or page pool is too
+                # small for this prompt) — cancel it rather than kill
+                # this worker thread; other orphans still re-place
+                with self._mu:
+                    ch.status = CANCELLED
+                    self._limbo.remove(ch)
+                    self._done.notify_all()
+                continue
+            with self._mu:
+                self._limbo.remove(ch)
+        with self._mu:
+            self._done.notify_all()  # waiters re-check liveness
+
+    def fail_replica(self, idx: int,
+                     exc: Optional[BaseException] = None) -> None:
+        """Inject a replica failure (tests, failover demos): the
+        replica's worker tears it down exactly as a real engine failure
+        would, and its unfinished work fails over to the survivors."""
+        rep = self._replicas[idx]
+        if not rep.alive:
+            return
+        rep.poison = exc or RuntimeError(f"injected failure of replica {idx}")
+        with self._mu:
+            self._work.notify_all()
+
+    def shutdown(self) -> None:
+        """Stop the worker threads (idempotent).  Pending requests are
+        left unresolved — call :meth:`drain` first if they matter."""
+        with self._mu:
+            self._running = False
+            self._work.notify_all()
+            self._done.notify_all()
+        for rep in self._replicas:
+            if rep.thread is not None and rep.thread.is_alive():
+                rep.thread.join(timeout=60)
+
+    def __enter__(self) -> "Cluster":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------------
+    # Merged accounting
+    # ------------------------------------------------------------------
+    def stats(self) -> ExecutorStats:
+        """Cluster-level throughput counters: the merge (field-wise sum)
+        of every replica's ExecutorStats."""
+        return sum((rep.executor.stats for rep in self._replicas),
+                   ExecutorStats())
+
+    def replica_stats(self) -> List[ExecutorStats]:
+        return [rep.executor.stats for rep in self._replicas]
+
+    def ledger(self) -> Ledger:
+        """Merged accounting of every finished request, cluster-wide."""
+        return sum((rep.ledger for rep in self._replicas), Ledger())
+
+    def replica_ledgers(self) -> List[Ledger]:
+        return [rep.ledger for rep in self._replicas]
+
+    def critical_path_passes(self) -> int:
+        """Serial model passes on the busiest replica — the cluster's
+        wall-clock analogue when each replica owns its own accelerator
+        (replicas run concurrently; the slowest one gates the join)."""
+        return max(rep.executor.stats.model_passes
+                   for rep in self._replicas)
+
+    def prefix_cache_stats(self) -> Optional[dict]:
+        """Field-wise sum of the replicas' radix-cache counters (None
+        when no replica runs a prefix cache); ``hit_rate`` is recomputed
+        from the summed token counts."""
+        summaries = [s for s in (rep.engine.prefix_cache_stats()
+                                 for rep in self._replicas) if s is not None]
+        if not summaries:
+            return None
+        out = {k: sum(s[k] for s in summaries)
+               for k in summaries[0] if k != "hit_rate"}
+        total = out["hit_tokens"] + out["miss_tokens"]
+        out["hit_rate"] = out["hit_tokens"] / total if total else 0.0
+        return out
+
+    def summary(self) -> dict:
+        """One dict for operators: merged totals + per-replica breakdown
+        + router counters (what ``launch/serve.py --replicas`` prints)."""
+        merged = self.stats()
+        return {
+            "replicas": len(self._replicas),
+            "replicas_alive": self.replicas_alive,
+            "stats": dataclasses.asdict(merged),
+            "critical_path_passes": self.critical_path_passes(),
+            "ledger": self.ledger().summary(),
+            "router": self.router.stats.summary(),
+            "prefix_cache": self.prefix_cache_stats(),
+            "per_replica": [
+                {
+                    "replica": rep.idx,
+                    "alive": rep.alive,
+                    "stats": dataclasses.asdict(rep.executor.stats),
+                    "ledger": rep.ledger.summary(),
+                }
+                for rep in self._replicas
+            ],
+        }
+
+
+# ---------------------------------------------------------------------------
+# LLMClient surface
+# ---------------------------------------------------------------------------
+
+
+class ClusterClientHandle(LLMHandle):
+    """LLMHandle over a live cluster request."""
+
+    def __init__(self, client: "ClusterClient", ch: ClusterHandle):
+        super().__init__(client, ch.prompt, ch.max_tokens, ch.stop)
+        self._ch = ch
+
+    def done(self) -> bool:
+        return self._ch.status == FINISHED
+
+    def started(self) -> bool:
+        return self._ch.started()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._ch.status == CANCELLED
+
+    def cancel(self) -> bool:
+        return self._client.cluster.cancel(self._ch)
+
+    def result(self):
+        if self._response is None:
+            self._response = _to_response(
+                self._client.cluster.result(self._ch))
+        return self._response
+
+
+class ClusterClient(LLMClient):
+    """The join operators' LLMClient backed by N engine replicas.
+
+    Drop-in for :class:`~repro.serve.client.EngineClient`:
+    ``block_join`` / ``adaptive_join`` / ``tuple_join`` submit through
+    the same surface and the cluster spreads the prompts over its
+    replicas (prefix-affine by default).  ``oracle_answers`` teacher
+    -forcing works exactly as on the single engine — the expected text
+    is computed at submit time, so any replica produces the same tokens.
+    """
+
+    def __init__(self, cluster: Cluster, *, oracle: Optional[OracleLLM] = None):
+        self.cluster = cluster
+        self.oracle = oracle
+        self.context_limit = min(e.max_seq for e in cluster.engines)
+        #: advertised to the batch-size optimizer exactly like
+        #: EngineClient.prefix_cached: with affinity routing, a shared
+        #: left-block prefix is computed once on its home replica
+        self.prefix_cached = all(e.prefix_cache is not None
+                                 for e in cluster.engines)
+
+    def count_tokens(self, text: str) -> int:
+        return self.cluster.engines[0].count_tokens(text)
+
+    def _expected(self, prompt: str, max_tokens: int,
+                  stop: Optional[str]) -> Optional[str]:
+        if self.oracle is None:
+            return None
+        return self.oracle._invoke_impl(
+            prompt, max_tokens=max_tokens, stop=stop).text
+
+    def submit(
+        self,
+        prompt: str,
+        *,
+        max_tokens: int,
+        stop: Optional[str] = None,
+    ) -> ClusterClientHandle:
+        ch = self.cluster.submit(
+            prompt, max_tokens=max_tokens, stop=stop,
+            expected=self._expected(prompt, max_tokens, stop),
+        )
+        return ClusterClientHandle(self, ch)
+
+    def as_completed(
+        self, handles: Iterable[LLMHandle]
+    ) -> Iterator[ClusterClientHandle]:
+        wrapped = {h._ch.request_id: h for h in handles}
+        for ch in self.cluster.as_completed(
+                [h._ch for h in wrapped.values()]):
+            h = wrapped[ch.request_id]
+            h._response = _to_response(ch.result)
+            yield h
+
+    def invoke(self, prompt: str, *, max_tokens: int,
+               stop: Optional[str] = None):
+        return self.submit(prompt, max_tokens=max_tokens, stop=stop).result()

@@ -103,6 +103,28 @@ class ExecutorStats:
     drafted_tokens: int = 0
     accepted_draft_tokens: int = 0
 
+    @property
+    def model_passes(self) -> int:
+        """Serial model invocations this executor performed (each decode
+        step and each prefill batch is one pass over every weight).  The
+        cluster benchmark's critical path is the max of this over
+        replicas — the wall-clock analogue when each replica owns its
+        own accelerator."""
+        return self.decode_steps + self.prefill_batches
+
+    def merge(self, other: "ExecutorStats") -> None:
+        """Fold ``other`` into self (cluster-level accounting merge —
+        every counter field, so per-replica breakdowns sum exactly to
+        the cluster totals)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+    def __add__(self, other: "ExecutorStats") -> "ExecutorStats":
+        out = ExecutorStats()
+        out.merge(self)
+        out.merge(other)
+        return out
+
 
 class ContinuousBatchingExecutor:
     def __init__(self, engine: Engine, *, max_retries: int = 2):
@@ -114,6 +136,7 @@ class ContinuousBatchingExecutor:
         self._state: Optional[DecodeState] = None
         self._used = 0  # Eq. (1): prompt+reserved-completion tokens in flight
         self._used_pages = 0  # paged engine: KV pages reserved in flight
+        self._queued_tokens = 0  # same reservation, for still-queued work
         self._next_id = 0
 
     # ------------------------------------------------------------------
@@ -148,6 +171,7 @@ class ContinuousBatchingExecutor:
         )
         self._next_id += 1
         self._queue.append(handle)
+        self._queued_tokens += self._need(handle)
         return handle
 
     def _check_owned(self, handle: ServeHandle) -> None:
@@ -167,6 +191,7 @@ class ContinuousBatchingExecutor:
         self._check_owned(handle)
         if handle.status == QUEUED:
             self._queue.remove(handle)
+            self._queued_tokens -= self._need(handle)
             handle.status = CANCELLED
             return True
         if handle.status == ACTIVE:
@@ -187,6 +212,15 @@ class ContinuousBatchingExecutor:
     @property
     def pending(self) -> bool:
         return bool(self._queue) or any(h is not None for h in self._slots)
+
+    @property
+    def outstanding_tokens(self) -> int:
+        """Eq. (1) reservation (prompt + clamped completion tokens) of all
+        unfinished requests — active *and* queued.  The serving cluster's
+        router reads this as each replica's load signal: unlike slot
+        occupancy it is forward-looking (queued work counts), and it is
+        maintained incrementally so the read is O(1)."""
+        return self._used + self._queued_tokens
 
     # ------------------------------------------------------------------
     # Drive side
@@ -385,6 +419,22 @@ class ContinuousBatchingExecutor:
         while self.pending:
             self.step()
 
+    def evacuate(self) -> List[ServeHandle]:
+        """Cancel and return every unfinished request, queued and active.
+
+        The cluster's failover path calls this on a dead replica's
+        executor: a failed :meth:`step` has already re-queued the
+        in-flight requests (the executor's own requeue path), so this
+        drains the queue, backs their reservations and partial-attempt
+        stats out, and hands the prompts back for resubmission on a
+        surviving replica.  Host-side only — the dead engine's device
+        state is never touched beyond dropping page references.
+        """
+        victims = self._all_pending()
+        for h in victims:
+            self.cancel(h)
+        return victims
+
     # ------------------------------------------------------------------
     # Internals
     # ------------------------------------------------------------------
@@ -438,6 +488,7 @@ class ContinuousBatchingExecutor:
                     or self._used_pages + need_pages > page_budget > 0):
                 break  # Eq. (1) / page budget exhausted; FIFO preserved
             self._queue.popleft()
+            self._queued_tokens -= self._need(h)
             h.status = ACTIVE
             h._slot = free.pop(0)
             h._pages = need_pages
@@ -510,6 +561,7 @@ class ContinuousBatchingExecutor:
             if h.retries > self.max_retries:
                 exhausted = True
             self._queue.appendleft(h)
+            self._queued_tokens += self._need(h)
         # decode state may be poisoned — rebuild.  Page references were
         # dropped slot-by-slot above; release_state backstops any slot
         # that never made it into the bookkeeping.

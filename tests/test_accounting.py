@@ -1,5 +1,7 @@
 """Accounting/ledger invariants + adaptive-join monotonicity properties."""
 
+import dataclasses
+
 import pytest
 pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
@@ -41,6 +43,46 @@ def test_merge_ledgers():
     m = merge_ledgers([a, b])
     assert m.calls == 2 and m.prompt_tokens == 15
     assert m.overflows == 1 and m.wasted_prompt_tokens == 5
+
+
+def test_ledger_add_sums_every_field_without_mutating():
+    """``+`` is the cluster accounting merge: every counter — including
+    the cached / drafted / accepted token splits — sums, and the
+    per-replica operands stay intact (the breakdown is preserved)."""
+    a, b = Ledger(), Ledger()
+    a.record(Usage(10, 2, cached_prompt_tokens=4, drafted_tokens=3,
+                   accepted_draft_tokens=2))
+    b.record(Usage(5, 1, 1, 1, 1), overflow=True)
+    m = a + b
+    assert m == merge_ledgers([a, b])
+    assert (m.calls, m.prompt_tokens, m.completion_tokens) == (2, 15, 3)
+    assert (m.cached_prompt_tokens, m.drafted_tokens,
+            m.accepted_draft_tokens) == (5, 4, 3)
+    assert (m.overflows, m.wasted_prompt_tokens) == (1, 5)
+    assert a.calls == 1 and b.calls == 1  # operands untouched
+    assert sum([a, b], Ledger()) == m     # the cluster's fold idiom
+
+
+def test_executor_stats_merge_and_add_cover_every_field():
+    """ExecutorStats.merge/__add__ must sum ALL counters — a field added
+    later (as the drafted/accepted split was in PR 4) is covered by
+    construction because merge iterates dataclasses.fields."""
+    from repro.serve.executor import ExecutorStats
+
+    fields = [f.name for f in dataclasses.fields(ExecutorStats)]
+    assert {"decode_steps", "prefill_batches", "refills",
+            "generated_tokens", "prefill_tokens_computed",
+            "prefill_tokens_cached", "drafted_tokens",
+            "accepted_draft_tokens"} <= set(fields)
+    a = ExecutorStats(**{n: i + 1 for i, n in enumerate(fields)})
+    b = ExecutorStats(**{n: 100 + i for i, n in enumerate(fields)})
+    c = a + b
+    for i, n in enumerate(fields):
+        assert getattr(c, n) == (i + 1) + (100 + i)
+    assert c.model_passes == c.decode_steps + c.prefill_batches
+    assert a.decode_steps == 1  # __add__ does not mutate
+    a.merge(b)
+    assert a == c  # merge is the in-place form of the same sum
 
 
 def test_adaptive_estimates_monotone_nondecreasing():

@@ -1,0 +1,365 @@
+"""Serving cluster (DESIGN.md §12): data-parallel engine replicas behind
+a prefix-affinity router — parity with a single engine, routing policy,
+failover, and merged accounting.
+
+The cluster engines run the full serving stack (radix prefix cache +
+paged KV + self-speculative decode, all forced on) so cluster-vs-single
+parity covers every layer at once.  ``REPRO_REPLICAS`` sizes the cluster
+(CI runs a leg with 2 replicas over 4 forced host devices).
+"""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import adaptive_join, block_join
+from repro.core.accounting import Usage, ZERO_USAGE
+from repro.core.oracle import OracleLLM
+from repro.core.prompts import (
+    block_prompt,
+    block_prompt_shared_prefix,
+    block_prompt_variable_suffix,
+    split_shared_prefix,
+)
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import (
+    Cluster,
+    ClusterClient,
+    Engine,
+    EngineClient,
+    PrefixAffinityRouter,
+    RoundRobinRouter,
+    RouterView,
+    affinity_key,
+)
+
+KEY = jax.random.PRNGKey(7)
+REPLICAS = max(2, int(os.environ.get("REPRO_REPLICAS", "2")))
+ENGINE_KW = dict(max_seq=512, slots=4, prefix_cache=True, spec_decode=True)
+
+
+def make_tables(n1=8, n2=16):
+    colours = ["red", "blue"]
+    left = [f"item {i} in {colours[i % 2]}" for i in range(n1)]
+    right = [f"want {k} {colours[k % 2]}" for k in range(n2)]
+    pred = lambda a, b: a.split()[-1] == b.split()[-1]
+    truth = {(i, k) for i, a in enumerate(left)
+             for k, b in enumerate(right) if pred(a, b)}
+    return left, right, pred, truth
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_smoke_config("granite-3-2b")
+    return cfg, init_params(model_specs(cfg), KEY, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def single_engine(params):
+    cfg, p = params
+    return Engine(cfg, p, ByteTokenizer(cfg.vocab_size), **ENGINE_KW)
+
+
+@pytest.fixture(scope="module")
+def cluster(params):
+    cfg, p = params
+    cl = Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), REPLICAS,
+                           **ENGINE_KW)
+    yield cl
+    cl.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# routing key + router policy (host-side, no engines)
+# ---------------------------------------------------------------------------
+
+
+def test_affinity_key_is_the_canonical_prefix_split():
+    b1 = ["alpha text", "beta text"]
+    b2a, b2b = ["gamma"], ["delta", "epsilon"]
+    pa = block_prompt(b1, b2a, "cond")
+    pb = block_prompt(b1, b2b, "cond")
+    prefix, suffix = split_shared_prefix(pa)
+    assert prefix == block_prompt_shared_prefix(b1, "cond")
+    assert suffix == block_prompt_variable_suffix(b2a)
+    assert prefix + suffix == pa
+    # same left block -> same key; different left block -> different key
+    assert affinity_key(pa) == affinity_key(pb)
+    assert affinity_key(pa) != affinity_key(block_prompt(["other"], b2a, "cond"))
+    # markerless prompts are their own key
+    assert affinity_key("Q: hi\nA:") == "Q: hi\nA:"
+
+
+def test_prefix_affinity_router_policy():
+    r = PrefixAffinityRouter(spill_factor=1.0)
+    view = lambda out: RouterView(alive=[0, 1], outstanding=out,
+                                  capacity={0: 100, 1: 100})
+    # new keys go least-outstanding (ties -> lowest id)
+    assert r.pick("a", 10, view({0: 0, 1: 0})) == 0
+    assert r.pick("b", 10, view({0: 50, 1: 0})) == 1
+    # affinity holds while imbalance stays within spill_factor batches
+    assert r.pick("a", 10, view({0: 90, 1: 0})) == 0
+    assert r.pick("a", 10, view({0: 100, 1: 10})) == 0
+    # beyond it, the prompt spills to the least-loaded replica
+    assert r.pick("a", 10, view({0: 150, 1: 10})) == 1
+    assert r.stats.spills == 1 and r.stats.new_keys == 2
+    # a dead home is re-pinned to a survivor
+    dead = RouterView(alive=[1], outstanding={0: 0, 1: 40},
+                      capacity={0: 100, 1: 100})
+    assert r.pick("a", 10, dead) == 1
+    assert r.stats.rehomed_keys == 1
+    assert r.pick("a", 10, view({0: 0, 1: 40})) == 1  # re-pin sticks
+
+
+def test_affinity_table_is_lru_bounded():
+    """Markerless traffic makes every prompt its own key — the table
+    must not grow one entry per request forever (regression)."""
+    r = PrefixAffinityRouter(max_keys=2)
+    view = RouterView(alive=[0, 1], outstanding={0: 0, 1: 0},
+                      capacity={0: 100, 1: 100})
+    for key in ["a", "b", "c"]:
+        r.pick(key, 1, view)
+    assert len(r._home) == 2 and "a" not in r._home  # LRU evicted
+    r.pick("b", 1, view)  # touch keeps "b" hot...
+    r.pick("d", 1, view)
+    assert "b" in r._home and "c" not in r._home  # ...so "c" went instead
+    assert r.stats.new_keys == 4  # an evicted key routes as new
+
+
+def test_round_robin_router_cycles():
+    r = RoundRobinRouter()
+    view = RouterView(alive=[0, 2], outstanding={0: 0, 2: 999},
+                      capacity={0: 1, 2: 1})
+    assert [r.pick("k", 1, view) for _ in range(4)] == [0, 2, 0, 2]
+
+
+# ---------------------------------------------------------------------------
+# cluster vs single engine: token-identical serving
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_generation_matches_single_engine(single_engine, cluster):
+    """Every prompt must decode to the same text on the cluster as on a
+    lone engine (greedy decode; prefix cache + paged KV + spec decode
+    on) — routing must never change a token."""
+    prompts = [f"request {i}: describe item {i % 3}\nAnswer:"
+               for i in range(10)]
+    expected = [f"ans {i % 4}; Finished" for i in range(10)]
+    solo = single_engine.generate(prompts, max_tokens=16, expected=expected)
+    handles = [cluster.submit(p, max_tokens=16, expected=e)
+               for p, e in zip(prompts, expected)]
+    for h, s in zip(handles, solo):
+        r = cluster.result(h)
+        assert r.text == s.text
+        assert r.prompt_tokens == s.prompt_tokens
+        assert r.completion_tokens == s.completion_tokens
+
+
+def test_cluster_block_join_parity_and_merged_accounting(
+        params, single_engine, cluster):
+    left, right, pred, truth = make_tables()
+    ref = block_join(left, right, "the colours match",
+                     EngineClient(single_engine,
+                                  oracle=OracleLLM(pred, context_limit=512)),
+                     4, 2)
+    base_ledger = cluster.ledger()  # the module-scoped cluster is shared
+    client = ClusterClient(cluster, oracle=OracleLLM(pred, context_limit=512))
+    res = block_join(left, right, "the colours match", client, 4, 2)
+    assert res.pairs == ref.pairs == truth
+    # token-identical: same calls, same prompt and completion tokens
+    assert res.ledger.calls == ref.ledger.calls
+    assert res.ledger.prompt_tokens == ref.ledger.prompt_tokens
+    assert res.ledger.completion_tokens == ref.ledger.completion_tokens
+
+    # merged accounting: per-replica ledgers sum exactly to the cluster
+    # ledger, and this join's delta matches what the join itself booked
+    merged = cluster.ledger()
+    assert merged.usage == sum(
+        (l.usage for l in cluster.replica_ledgers()), ZERO_USAGE)
+    assert sum(l.calls for l in cluster.replica_ledgers()) == merged.calls
+    delta = Usage(
+        merged.prompt_tokens - base_ledger.prompt_tokens,
+        merged.completion_tokens - base_ledger.completion_tokens,
+        merged.cached_prompt_tokens - base_ledger.cached_prompt_tokens,
+        merged.drafted_tokens - base_ledger.drafted_tokens,
+        merged.accepted_draft_tokens - base_ledger.accepted_draft_tokens,
+    )
+    assert delta == res.ledger.usage
+    # merged ExecutorStats are the field-wise sum of the replica stats
+    stats = cluster.stats()
+    per = cluster.replica_stats()
+    assert stats.generated_tokens == sum(s.generated_tokens for s in per)
+    assert stats.decode_steps == sum(s.decode_steps for s in per)
+    assert stats.prefill_tokens_computed + stats.prefill_tokens_cached == \
+        sum(s.prefill_tokens_computed + s.prefill_tokens_cached for s in per)
+
+
+def test_adaptive_join_through_cluster(cluster):
+    left, right, pred, truth = make_tables(6, 8)
+    client = ClusterClient(cluster, oracle=OracleLLM(pred, context_limit=512))
+    assert client.prefix_cached  # advertised to the batch-size optimizer
+    res = adaptive_join(left, right, "the colours match", client,
+                        initial_estimate=1e-3)
+    assert res.pairs == truth
+    assert res.meta["prefix_cached"]
+
+
+def test_cluster_cancel(cluster):
+    handles = [cluster.submit(f"cancel probe {i}:", max_tokens=8,
+                              expected="zz") for i in range(12)]
+    outcomes = [cluster.cancel(h) for h in reversed(handles[6:])]
+    cluster.drain()
+    for h, ok in zip(reversed(handles[6:]), outcomes):
+        if ok:  # cancelled before a worker picked it up: stays result-less
+            assert h.status == "cancelled" and h.result is None
+        else:   # a worker won the race: it must then have finished
+            assert h.status == "finished"
+    for h in handles[:6]:
+        assert cluster.result(h).completion_tokens > 0
+
+
+# ---------------------------------------------------------------------------
+# routing policy vs cache locality
+# ---------------------------------------------------------------------------
+
+
+def _join_hit_rate(params, router, left, right, pred):
+    cfg, p = params
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), REPLICAS,
+                           router=router, **ENGINE_KW) as cl:
+        client = ClusterClient(cl, oracle=OracleLLM(pred, context_limit=512))
+        cl.hold()  # gang submission: deterministic routing + batching
+        res = block_join(left, right, "the colours match", client, 4, 2)
+        cl.drain()
+        return res, cl.prefix_cache_stats()["hit_rate"], cl
+
+
+def test_affinity_routing_preserves_cache_hit_rate(params):
+    """Acceptance: prefix-affinity keeps the cluster's radix-cache hit
+    rate at >= 90% of a single engine's on the block-join workload,
+    while round-robin routing measurably degrades it (every replica
+    recomputes every left-block prefix)."""
+    left, right, pred, truth = make_tables(16, 16)
+    cfg, p = params
+    eng = Engine(cfg, p, ByteTokenizer(cfg.vocab_size), **ENGINE_KW)
+    ref = block_join(left, right, "the colours match",
+                     EngineClient(eng, oracle=OracleLLM(pred, context_limit=512)),
+                     4, 2)
+    single_rate = eng.prefix_cache_stats()["hit_rate"]
+    assert ref.pairs == truth and single_rate > 0
+
+    res_a, rate_affinity, _ = _join_hit_rate(
+        params, PrefixAffinityRouter(), left, right, pred)
+    res_r, rate_rr, _ = _join_hit_rate(
+        params, RoundRobinRouter(), left, right, pred)
+    assert res_a.pairs == res_r.pairs == truth
+    assert rate_affinity >= 0.9 * single_rate
+    assert rate_rr < rate_affinity  # blind balancing shreds locality
+
+
+# ---------------------------------------------------------------------------
+# failover
+# ---------------------------------------------------------------------------
+
+
+def test_replica_failure_mid_join_completes_token_identical(
+        params, single_engine):
+    """Killing a replica mid-join fails its in-flight + queued prompts
+    over to the survivors (through the executor's requeue path) and the
+    join still completes with token-identical results."""
+    left, right, pred, truth = make_tables()
+    ref = block_join(left, right, "the colours match",
+                     EngineClient(single_engine,
+                                  oracle=OracleLLM(pred, context_limit=512)),
+                     4, 2)
+    cfg, p = params
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), REPLICAS,
+                           **ENGINE_KW) as cl:
+        client = ClusterClient(cl, oracle=OracleLLM(pred, context_limit=512))
+        killer = threading.Timer(0.3, cl.fail_replica, args=(1,))
+        killer.start()
+        try:
+            res = block_join(left, right, "the colours match", client, 4, 2)
+        finally:
+            killer.cancel()
+        cl.fail_replica(1)  # idempotent if the join outran the timer
+        cl.drain()
+        assert res.pairs == ref.pairs == truth
+        assert res.ledger.calls == ref.ledger.calls
+        assert res.ledger.completion_tokens == ref.ledger.completion_tokens
+        assert cl.replicas_alive == REPLICAS - 1
+        # the dead replica's ledger only holds requests it finished;
+        # conservation still exact after the handoff
+        assert cl.ledger().usage == sum(
+            (l.usage for l in cl.replica_ledgers()), ZERO_USAGE)
+        assert cl.ledger().usage == res.ledger.usage
+
+
+def test_engine_exception_triggers_failover(params, monkeypatch):
+    """A replica whose engine keeps raising (executor retries exhausted)
+    is torn down by its own worker and its work completes elsewhere."""
+    cfg, p = params
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), 2,
+                           max_retries=1, **ENGINE_KW) as cl:
+        bad = cl.engines[1]
+        down = lambda *a, **k: (_ for _ in ()).throw(
+            RuntimeError("replica 1 is down"))
+        monkeypatch.setattr(bad, "decode_active", down)
+        monkeypatch.setattr(bad, "verify_active", down)
+        monkeypatch.setattr(bad, "prefill_rows", down)
+        handles = [cl.submit(f"fo {i}:", max_tokens=4, expected="ok")
+                   for i in range(8)]
+        for h in handles:
+            assert cl.result(h).completion_tokens > 0
+        assert cl.replicas_alive == 1
+        assert any(h.failovers > 0 for h in handles) or all(
+            h.replica == 0 for h in handles)
+
+
+def test_all_replicas_dead_raises(params):
+    cfg, p = params
+    cl = Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), 2,
+                           **ENGINE_KW)
+    h = cl.submit("doomed:", max_tokens=8, expected="x " * 64)
+    cl.fail_replica(0)
+    cl.fail_replica(1)
+    deadline = time.time() + 60
+    while cl.replicas_alive and time.time() < deadline:
+        time.sleep(0.01)
+    assert cl.replicas_alive == 0
+    # the doomed request either finished before the lights went out or
+    # its wait raises — never hangs
+    try:
+        cl.result(h)
+    except RuntimeError:
+        pass
+    with pytest.raises(RuntimeError):
+        cl.submit("after the lights went out:", max_tokens=4)
+    cl.shutdown()
+
+
+def test_cancel_on_fatal_cluster_returns_instead_of_spinning(params):
+    """Regression: a request orphaned by a fatal failure (all replicas
+    dead) must make cancel() return False — block_join's exception
+    cleanup calls cancel on every unfinished handle and used to spin."""
+    cfg, p = params
+    cl = Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), 1,
+                           **ENGINE_KW)
+    cl.hold()  # keep the request queued so the failure orphans it
+    h = cl.submit("stranded:", max_tokens=8, expected="never")
+    cl.fail_replica(0)
+    deadline = time.time() + 60
+    while cl.replicas_alive and time.time() < deadline:
+        time.sleep(0.01)
+    t0 = time.time()
+    assert cl.cancel(h) is False
+    assert time.time() - t0 < 5  # returned, not busy-looped
+    with pytest.raises(RuntimeError):
+        cl.result(h)
+    cl.shutdown()

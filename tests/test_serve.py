@@ -1,6 +1,5 @@
 """Serving engine: ragged batched prefill, slot-refill continuous
-batching (executor), stop strings, scheduler facade, EngineClient-backed
-joins."""
+batching (executor), stop strings, EngineClient-backed joins."""
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,7 @@ from repro.core.accounting import Ledger
 from repro.core.oracle import OracleLLM
 from repro.data.tokenizer import ByteTokenizer, HashWordTokenizer
 from repro.models import init_params, model_specs
-from repro.serve import Engine, EngineClient, Request, Scheduler
+from repro.serve import Engine, EngineClient
 
 KEY = jax.random.PRNGKey(3)
 
@@ -56,13 +55,17 @@ def test_max_tokens_truncation(engine):
     assert res.finish_reason == "length"
 
 
-def test_scheduler_admission_and_completion(engine):
-    reqs = [Request(i, f"prompt number {i}", max_tokens=4,
-                    expected=f"ans{i}") for i in range(9)]
-    done = Scheduler(engine).run(reqs)
-    assert set(done) == set(range(9))
-    for i, r in done.items():
-        assert r.completion_tokens > 0
+def test_executor_admission_and_completion(engine):
+    """More requests than slots: admission carves them into refills and
+    every request still completes (the old Scheduler facade's run(),
+    now the executor's submit + drain directly)."""
+    ex = engine.executor()
+    handles = [ex.submit(f"prompt number {i}", max_tokens=4,
+                         expected=f"ans{i}") for i in range(9)]
+    ex.drain()
+    for h in handles:
+        assert h.status == "finished"
+        assert h.result.completion_tokens > 0
 
 
 def test_engine_client_block_join(engine):
@@ -91,19 +94,21 @@ def test_mixed_wave_respects_per_request_max_tokens(engine):
 
 
 def test_mixed_wave_honors_heterogeneous_stops(engine):
-    """Regression (old Scheduler passed stop=None when a wave mixed stop
-    strings): each request's own stop string terminates it."""
-    reqs = [
-        Request(0, "Q1:", max_tokens=32, stop="DONE", expected="xy DONE zz"),
-        Request(1, "Q2:", max_tokens=32, stop="END", expected="pq END rr"),
-        Request(2, "Q3:", max_tokens=32, stop=None, expected="kk"),
+    """Regression (the pre-executor scheduler passed stop=None when a
+    wave mixed stop strings): each request's own stop string terminates
+    it even when batched with different-stop peers."""
+    ex = engine.executor()
+    done = [
+        ex.submit("Q1:", max_tokens=32, stop="DONE", expected="xy DONE zz"),
+        ex.submit("Q2:", max_tokens=32, stop="END", expected="pq END rr"),
+        ex.submit("Q3:", max_tokens=32, stop=None, expected="kk"),
     ]
-    done = Scheduler(engine).run(reqs)
-    assert done[0].finish_reason == "stop"
-    assert done[0].text.rstrip().endswith("DONE")
-    assert done[1].finish_reason == "stop"
-    assert done[1].text.rstrip().endswith("END")
-    assert done[2].finish_reason == "stop"  # EOS after teacher-forced text
+    ex.drain()
+    assert done[0].result.finish_reason == "stop"
+    assert done[0].result.text.rstrip().endswith("DONE")
+    assert done[1].result.finish_reason == "stop"
+    assert done[1].result.text.rstrip().endswith("END")
+    assert done[2].result.finish_reason == "stop"  # EOS after forced text
 
 
 def test_admission_control_token_budget(engine):

@@ -100,6 +100,29 @@ def test_lotus_profile(scenarios):
 
 
 # ---------------------------------------------------------------------------
+# repo hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_no_smoke_benchmark_artifact_is_tracked():
+    """Smoke benchmark runs (CI legs) write gitignored ``*.smoke.json``
+    precisely so they can never clobber the committed full-run evidence
+    (``benchmarks/BENCH_*.json``).  A tracked smoke artifact would
+    silently *become* the evidence — guard the invariant at git level."""
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=ROOT, text=True,
+                             capture_output=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    offenders = [f for f in out.stdout.splitlines()
+                 if f.endswith(".smoke.json")]
+    assert offenders == [], (
+        f"smoke benchmark artifacts must stay untracked: {offenders}")
+
+
+# ---------------------------------------------------------------------------
 # mini dry-run in a subprocess (8 fake devices, reduced configs)
 # ---------------------------------------------------------------------------
 
