@@ -1,0 +1,254 @@
+"""Zero-decode logit-scored join predicates + confidence cascade
+(DESIGN.md §13).
+
+Part A — the tuple join's per-pair Yes/No question does not need a
+decode loop at all: teacher-force both answers through ONE prefill pass
+and compare their log-probs.  This benchmark runs the SAME tuple join
+through the same engine twice — decode mode (the paper's InvokeLLM,
+one answer generated token by token) and scoring mode — and compares
+decode steps and total model passes at identical join results.  Scoring
+retires every pair with **zero** decode steps: a scored request never
+occupies a decode slot, its KV pages are released the moment the batch's
+log-probs are read, and the radix prefix cache dedups the shared prompt
+prefix of a pair's Yes/No continuations.
+
+Part B — the log-prob margin is a confidence signal the decode path
+never had: ``cascade_tuple_join`` scores every pair with a small noisy
+tier and escalates only low-margin pairs to the exact large tier.  Swept
+over thresholds on the paper's three scenarios (§7.1), reporting F1
+against ground truth, escalation fraction, and per-tier token cost —
+quality parity with always-large at a fraction of its scored pairs.
+
+Part C (full runs only) — the same cascade across two *engines*
+(mamba2-130m small tier, granite-3-2b large tier), the serving-stack
+deployment the cascade exists for.
+
+    PYTHONPATH=src python benchmarks/logit_score.py
+    PYTHONPATH=src python benchmarks/logit_score.py --smoke   # CI leg
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import OracleLLM, cascade_tuple_join, tuple_join
+from repro.data.scenarios import all_scenarios
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import Engine, EngineClient
+
+from common import emit_json, timed
+
+CASCADE_THRESHOLDS = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def make_tables(n1: int, n2: int):
+    left = [f"item {i} tone {i % 4}" for i in range(n1)]
+    right = [f"want {k} tone {k % 4}" for k in range(n2)]
+    pred = lambda a, b: a.split()[-1] == b.split()[-1]
+    return left, right, pred
+
+
+def _f1(pairs, truth):
+    if not pairs or not truth:
+        return 1.0 if pairs == truth else 0.0
+    tp = len(pairs & truth)
+    prec, rec = tp / len(pairs), tp / len(truth)
+    return 2 * prec * rec / (prec + rec) if prec + rec else 0.0
+
+
+def _ledger_tokens(ledger):
+    return {
+        "calls": ledger.calls,
+        "prompt_tokens": ledger.prompt_tokens,
+        "completion_tokens": ledger.completion_tokens,
+        "cached_prompt_tokens": ledger.cached_prompt_tokens,
+        "scored_tokens": ledger.scored_tokens,
+    }
+
+
+def run_engine_join(params, args, scoring: bool):
+    """One tuple join through a fresh engine, decode or scoring mode."""
+    cfg = get_smoke_config(args.arch)
+    engine = Engine(cfg, params, ByteTokenizer(cfg.vocab_size),
+                    max_seq=args.max_seq, slots=args.slots)
+    left, right, pred = make_tables(args.left_rows, args.right_rows)
+    client = EngineClient(engine,
+                          oracle=OracleLLM(pred, context_limit=args.max_seq))
+    res, wall = timed(
+        tuple_join, left, right, "the tones match", client,
+        # decode mode needs room to emit the full "Yes"/"No" answer;
+        # scoring mode never generates
+        max_answer_tokens=args.answer_tokens, scoring=scoring)
+    return client.executor.stats, res, wall
+
+
+def part_a_engine(params, args) -> dict:
+    st_d, res_d, wall_d = run_engine_join(params, args, scoring=False)
+    st_s, res_s, wall_s = run_engine_join(params, args, scoring=True)
+
+    assert res_s.pairs == res_d.pairs, "join results must be identical"
+    assert st_s.decode_steps == 0, "scoring must never take a decode step"
+    assert res_s.ledger.completion_tokens == 0
+    assert res_s.ledger.scored_tokens > 0
+
+    pairs_n = args.left_rows * args.right_rows
+    step_ratio = st_d.decode_steps / max(st_s.decode_steps, 1)
+    pass_ratio = st_d.model_passes / max(st_s.model_passes, 1)
+    print(f"tuple join: {args.left_rows}x{args.right_rows} pairs "
+          f"({pairs_n} calls), {args.slots} slots, "
+          f"max_answer_tokens={args.answer_tokens}")
+    print(f"{'decode':>7}: decode_steps={st_d.decode_steps:5d} "
+          f"model_passes={st_d.model_passes:5d} "
+          f"prefill_batches={st_d.prefill_batches:4d} wall={wall_d:6.2f}s")
+    print(f"{'score':>7}: decode_steps={st_s.decode_steps:5d} "
+          f"model_passes={st_s.model_passes:5d} "
+          f"prefill_batches={st_s.prefill_batches:4d} wall={wall_s:6.2f}s "
+          f"scored_tokens={st_s.scored_tokens}")
+    print(f"logit scoring: {step_ratio:.1f}x fewer decode steps, "
+          f"{pass_ratio:.2f}x fewer model passes, identical pairs")
+
+    assert step_ratio >= 3.0, (
+        f"acceptance: expected >=3x fewer decode steps, got {step_ratio:.2f}x")
+    assert st_s.model_passes < st_d.model_passes, (
+        "scoring must also reduce total model passes")
+    return {
+        "workload": {
+            "left_rows": args.left_rows, "right_rows": args.right_rows,
+            "pairs": pairs_n, "slots": args.slots, "max_seq": args.max_seq,
+            "answer_tokens": args.answer_tokens, "arch": args.arch,
+        },
+        "decode": {
+            "decode_steps": st_d.decode_steps,
+            "model_passes": st_d.model_passes,
+            "prefill_batches": st_d.prefill_batches,
+            "wall_s": round(wall_d, 3),
+            "ledger": _ledger_tokens(res_d.ledger),
+        },
+        "score": {
+            "decode_steps": st_s.decode_steps,
+            "model_passes": st_s.model_passes,
+            "prefill_batches": st_s.prefill_batches,
+            "wall_s": round(wall_s, 3),
+            "ledger": _ledger_tokens(res_s.ledger),
+        },
+        "decode_step_reduction": round(step_ratio, 3),
+        "model_pass_reduction": round(pass_ratio, 3),
+    }
+
+
+def part_b_cascade(args) -> dict:
+    out = {}
+    for sc in all_scenarios():
+        small = OracleLLM(sc.predicate, fn_rate=args.small_fn,
+                          fp_rate=args.small_fp, noise_seed=17)
+        large = OracleLLM(sc.predicate)
+        large_res = tuple_join(sc.r1, sc.r2, sc.condition, large,
+                               scoring=True)
+        f1_large = _f1(large_res.pairs, sc.truth)
+        sweep = []
+        for t in CASCADE_THRESHOLDS:
+            res = cascade_tuple_join(sc.r1, sc.r2, sc.condition,
+                                     small, large, threshold=t)
+            sweep.append({
+                "threshold": t,
+                "f1": round(_f1(res.pairs, sc.truth), 4),
+                "escalated": res.meta["escalated"],
+                "escalation_fraction": round(
+                    res.meta["escalated"] / res.meta["pairs_total"], 4),
+                "small_scored_tokens":
+                    res.meta["tiers"]["small"]["scored_tokens"],
+                "large_scored_tokens":
+                    res.meta["tiers"]["large"]["scored_tokens"],
+            })
+        mid = next(s for s in sweep if s["threshold"] == 0.5)
+        print(f"cascade [{sc.name}]: F1 small={sweep[0]['f1']:.3f} "
+              f"@0.5={mid['f1']:.3f} large={f1_large:.3f} "
+              f"(escalated {mid['escalation_fraction']:.0%} of "
+              f"{len(sc.r1) * len(sc.r2)} pairs)")
+        assert mid["f1"] >= f1_large - 0.01, (
+            f"{sc.name}: cascade@0.5 F1 {mid['f1']:.4f} not within 1 point "
+            f"of always-large {f1_large:.4f}")
+        assert sweep[0]["escalated"] == 0
+        assert sweep[-1]["f1"] == round(f1_large, 4)
+        out[sc.name] = {
+            "pairs": len(sc.r1) * len(sc.r2),
+            "f1_always_large": round(f1_large, 4),
+            "sweep": sweep,
+        }
+    return out
+
+
+def part_c_cross_engine(args) -> dict:
+    """Cascade across two engines: SSM small tier, transformer large."""
+    left, right, pred = make_tables(args.left_rows, args.right_rows)
+    truth = {(i, k) for i, a in enumerate(left) for k, b in enumerate(right)
+             if pred(a, b)}
+
+    def tier(arch, oracle):
+        cfg = get_smoke_config(arch)
+        params = init_params(model_specs(cfg), jax.random.PRNGKey(0),
+                             jnp.float32)
+        engine = Engine(cfg, params, ByteTokenizer(cfg.vocab_size),
+                        max_seq=args.max_seq, slots=args.slots)
+        return EngineClient(engine, oracle=oracle)
+
+    small = tier(args.small_arch,
+                 OracleLLM(pred, fn_rate=args.small_fn, fp_rate=args.small_fp,
+                           noise_seed=17, context_limit=args.max_seq))
+    large = tier(args.arch, OracleLLM(pred, context_limit=args.max_seq))
+    res, wall = timed(cascade_tuple_join, left, right, "the tones match",
+                      small, large, threshold=0.5)
+    f1 = _f1(res.pairs, truth)
+    st_small, st_large = small.executor.stats, large.executor.stats
+    assert st_small.decode_steps == 0 and st_large.decode_steps == 0
+    print(f"cross-engine cascade ({args.small_arch} -> {args.arch}): "
+          f"F1={f1:.3f}, escalated {res.meta['escalated']}/"
+          f"{res.meta['pairs_total']}, small passes={st_small.model_passes}, "
+          f"large passes={st_large.model_passes}, wall={wall:.2f}s")
+    return {
+        "small_arch": args.small_arch, "large_arch": args.arch,
+        "f1": round(f1, 4),
+        "escalated": res.meta["escalated"],
+        "pairs": res.meta["pairs_total"],
+        "small_model_passes": st_small.model_passes,
+        "large_model_passes": st_large.model_passes,
+        "tiers": res.meta["tiers"],
+        "wall_s": round(wall, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--small-arch", default="mamba2-130m")
+    ap.add_argument("--left-rows", type=int, default=12)
+    ap.add_argument("--right-rows", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--answer-tokens", type=int, default=4,
+                    help="decode-mode answer budget (>= len('Yes') tokens)")
+    ap.add_argument("--small-fn", type=float, default=0.2)
+    ap.add_argument("--small-fp", type=float, default=0.2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer pairs, same assertions)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.left_rows, args.right_rows = 6, 6
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), jnp.float32)
+
+    payload = {"engine": part_a_engine(params, args),
+               "cascade": part_b_cascade(args)}
+    if not args.smoke:
+        payload["cross_engine"] = part_c_cross_engine(args)
+    emit_json("logit_score", payload, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

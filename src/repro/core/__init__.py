@@ -24,6 +24,12 @@ from repro.core.batch_opt import (
     plan,
 )
 from repro.core.block_join import block_join
+from repro.core.cascade import (
+    cascade_tuple_join,
+    margin_confidence,
+    score_pairs,
+    scored_decision,
+)
 from repro.core.cost_model import (
     JoinStats,
     ModelParams,
@@ -41,9 +47,22 @@ from repro.core.cost_model import (
 )
 from repro.core.embedding_join import HashEmbedder, embedding_join
 from repro.core.join_types import JoinResult, Overflow
-from repro.core.llm_client import Embedder, LLMClient, LLMResponse
+from repro.core.llm_client import (
+    Embedder,
+    LLMClient,
+    LLMResponse,
+    ScoreHandle,
+    ScoreResponse,
+)
 from repro.core.lotus_join import lotus_join
 from repro.core.oracle import OracleLLM
+from repro.core.prompts import (
+    NO_ANSWER,
+    SCORE_CHOICES,
+    YES_ANSWER,
+    classify_yes_no,
+    parse_yes_no,
+)
 from repro.core.simulator import SimParams, SimulatedLLM, synthetic_table
 from repro.core.tuple_join import tuple_join
 
@@ -59,4 +78,7 @@ __all__ = [
     "HashEmbedder", "embedding_join", "JoinResult", "Overflow", "Embedder",
     "LLMClient", "LLMResponse", "lotus_join", "OracleLLM", "SimParams",
     "SimulatedLLM", "synthetic_table", "tuple_join",
+    "NO_ANSWER", "SCORE_CHOICES", "ScoreHandle", "ScoreResponse",
+    "YES_ANSWER", "cascade_tuple_join", "classify_yes_no",
+    "margin_confidence", "parse_yes_no", "score_pairs", "scored_decision",
 ]

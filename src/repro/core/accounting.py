@@ -67,6 +67,13 @@ class Usage:
     never leave the engine — they cost verification FLOPs, not tokens,
     so neither Definition 2.2's window bound nor any pricing term sees
     them.  The split exists purely so acceptance rates are observable.
+
+    ``scored_tokens`` is the prefill-only scoring split (DESIGN.md §13):
+    candidate-continuation tokens whose log-probs were read from prefill
+    logits instead of being generated.  They are *read*, not written —
+    already counted in ``prompt_tokens``, never in ``completion_tokens``
+    — so pricing sees them at the read rate; the split exists so the
+    decode-vs-score cost lever is observable per tier.
     """
 
     prompt_tokens: int
@@ -74,6 +81,7 @@ class Usage:
     cached_prompt_tokens: int = 0
     drafted_tokens: int = 0
     accepted_draft_tokens: int = 0
+    scored_tokens: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -95,6 +103,7 @@ class Usage:
             self.cached_prompt_tokens + other.cached_prompt_tokens,
             self.drafted_tokens + other.drafted_tokens,
             self.accepted_draft_tokens + other.accepted_draft_tokens,
+            self.scored_tokens + other.scored_tokens,
         )
 
 
@@ -147,6 +156,7 @@ class Ledger:
     cached_prompt_tokens: int = 0  # prompt tokens served by the prefix cache
     drafted_tokens: int = 0        # speculative drafts proposed (§11)
     accepted_draft_tokens: int = 0  # drafts accepted by verification
+    scored_tokens: int = 0         # continuations scored prefill-only (§13)
     overflows: int = 0
     wasted_prompt_tokens: int = 0  # prompt tokens of calls discarded by overflow
 
@@ -157,6 +167,7 @@ class Ledger:
         self.cached_prompt_tokens += usage.cached_prompt_tokens
         self.drafted_tokens += usage.drafted_tokens
         self.accepted_draft_tokens += usage.accepted_draft_tokens
+        self.scored_tokens += usage.scored_tokens
         if overflow:
             self.overflows += 1
             self.wasted_prompt_tokens += usage.prompt_tokens
@@ -168,6 +179,7 @@ class Ledger:
         self.cached_prompt_tokens += other.cached_prompt_tokens
         self.drafted_tokens += other.drafted_tokens
         self.accepted_draft_tokens += other.accepted_draft_tokens
+        self.scored_tokens += other.scored_tokens
         self.overflows += other.overflows
         self.wasted_prompt_tokens += other.wasted_prompt_tokens
 
@@ -184,7 +196,7 @@ class Ledger:
     def usage(self) -> Usage:
         return Usage(self.prompt_tokens, self.completion_tokens,
                      self.cached_prompt_tokens, self.drafted_tokens,
-                     self.accepted_draft_tokens)
+                     self.accepted_draft_tokens, self.scored_tokens)
 
     def cost(self, pricing: Pricing = GPT4_PRICING) -> float:
         return pricing.cost(self.usage)
@@ -200,6 +212,7 @@ class Ledger:
             "drafted_tokens": self.drafted_tokens,
             "accepted_draft_tokens": self.accepted_draft_tokens,
             "draft_acceptance_rate": self.usage.draft_acceptance_rate,
+            "scored_tokens": self.scored_tokens,
             "overflows": self.overflows,
             "wasted_prompt_tokens": self.wasted_prompt_tokens,
             "cost_usd": self.cost(pricing),

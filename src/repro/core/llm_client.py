@@ -59,6 +59,27 @@ class LLMResponse:
     finish_reason: str  # "stop" | "length"
 
 
+@dataclasses.dataclass(frozen=True)
+class ScoreResponse:
+    """Result of one prefill-only scoring invocation (DESIGN.md §13).
+
+    ``logprobs[i]`` is the total log-probability of candidate continuation
+    ``choices[i]`` under teacher forcing after the prompt — read from
+    prefill logits with zero decode steps.  ``usage`` accounts every
+    choice's pass: continuation tokens are *read* (they occupy context and
+    cost prefill compute), reported both inside ``prompt_tokens`` and as
+    the ``scored_tokens`` split.
+    """
+
+    logprobs: tuple
+    usage: Usage
+
+    def argmax(self) -> int:
+        """Index of the highest-scoring choice (first wins ties)."""
+        best = max(self.logprobs)
+        return self.logprobs.index(best)
+
+
 class LLMHandle:
     """Future for one submitted invocation.
 
@@ -105,6 +126,44 @@ class LLMHandle:
         return self._response
 
 
+class ScoreHandle:
+    """Future for one submitted scoring request.
+
+    Mirrors :class:`LLMHandle`: the default implementation is lazy (the
+    underlying ``score`` runs on first :meth:`result`, so cancelled
+    handles cost nothing); engine-backed clients override with true
+    in-flight futures over the serving executor.
+    """
+
+    def __init__(self, client: "LLMClient", prompt: str,
+                 choices: Sequence[str]):
+        self.prompt = prompt
+        self.choices = tuple(choices)
+        self._client = client
+        self._response: Optional[ScoreResponse] = None
+        self._cancelled = False
+
+    def done(self) -> bool:
+        return self._response is not None
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> bool:
+        if self._response is not None:
+            return False
+        self._cancelled = True
+        return True
+
+    def result(self) -> ScoreResponse:
+        if self._cancelled:
+            raise RuntimeError("cancelled scoring request has no result")
+        if self._response is None:
+            self._response = self._client.score(self.prompt, self.choices)
+        return self._response
+
+
 def cancel_unfinished(client, handles) -> None:
     """Best-effort cancel of every handle not yet resolved.
 
@@ -126,6 +185,11 @@ class LLMClient(abc.ABC):
     #: (Definition 2.2: "The sum of tokens read and generated per model
     #: invocation is upper-bounded by a model-specific constant.")
     context_limit: int
+
+    #: True for clients implementing the prefill-only :meth:`score`
+    #: surface.  Join operators consult this (plus ``REPRO_SCORE_JOIN``)
+    #: before replacing decode-based verification with scoring.
+    supports_scoring: bool = False
 
     @abc.abstractmethod
     def invoke(
@@ -190,6 +254,35 @@ class LLMClient(abc.ABC):
         for _ in self.as_completed(list(handles)):
             pass
         return [h.result() for h in handles]
+
+    # -- scoring surface (prefill-only, zero decode steps) -----------------
+    def score(self, prompt: str, choices: Sequence[str]) -> ScoreResponse:
+        """Log-probabilities of candidate continuations after ``prompt``.
+
+        No text is generated: implementations teacher-force each choice
+        through prefill and read its log-prob from the logits.  Clients
+        that cannot score leave ``supports_scoring`` False and inherit
+        this stub.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement scoring")
+
+    def submit_score(self, prompt: str,
+                     choices: Sequence[str]) -> ScoreHandle:
+        """Enqueue one scoring request; returns a future-like handle."""
+        if not choices:
+            raise ValueError("score requires at least one choice")
+        return ScoreHandle(self, prompt, choices)
+
+    def as_scored(self, handles: Iterable[ScoreHandle]) -> Iterator[ScoreHandle]:
+        """Yield scoring handles as their responses complete (sequential
+        and lazy by default, completion order for engine-backed clients).
+        Cancelled handles are skipped."""
+        for h in handles:
+            if h.cancelled:
+                continue
+            h.result()
+            yield h
 
     def count_tokens(self, text: str) -> int:
         return count_tokens(text)

@@ -21,12 +21,16 @@ A configurable latency model supports the paper's wall-time comparisons
 from __future__ import annotations
 
 import hashlib
+import math
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.accounting import Usage, count_tokens
-from repro.core.llm_client import LLMClient, LLMResponse
+from repro.core.llm_client import LLMClient, LLMResponse, ScoreResponse
 from repro.core.prompts import (
     FINISHED,
+    NO_ANSWER,
+    YES_ANSWER,
+    classify_yes_no,
     parse_block_prompt,
     parse_tuple_prompt,
 )
@@ -39,6 +43,8 @@ class ContextWindowExceeded(ValueError):
 
 
 class OracleLLM(LLMClient):
+    supports_scoring = True
+
     def __init__(
         self,
         predicate: Predicate,
@@ -87,7 +93,61 @@ class OracleLLM(LLMClient):
         )
 
     def _answer_tuple(self, t1: str, t2: str) -> str:
-        return "Yes" if self._decide(t1, t2) else "No"
+        return YES_ANSWER if self._decide(t1, t2) else NO_ANSWER
+
+    # -- pseudo-logits for the scoring surface (DESIGN.md §13) -----------
+    def _pseudo_margin(self, t1: str, t2: str) -> float:
+        """Deterministic yes/no log-odds margin for one pair.
+
+        Calibrated against the noisy decision: when :meth:`_decide`
+        disagrees with ground truth the margin is drawn low (two-way
+        confidence ``tanh(margin/2)`` ≤ ~0.34), when it agrees the margin
+        is high (confidence ≥ ~0.76).  A cascade escalating below a 0.5
+        confidence threshold therefore re-asks exactly the pairs this
+        oracle got wrong — mirroring how real logit margins correlate
+        with error rate.  The draw is salted independently of the
+        decision hash so margins do not leak the decision noise.
+        """
+        u = self._unit_hash(f"margin|{t1}", t2)
+        if self._decide(t1, t2) == self.predicate(t1, t2):
+            return 2.0 + 6.0 * u
+        return 0.1 + 0.6 * u
+
+    def _score_impl(self, prompt: str, choices: Sequence[str]) -> ScoreResponse:
+        parsed = parse_tuple_prompt(prompt)
+        if parsed is None:
+            raise ValueError(
+                "oracle can only score tuple-join prompts:\n" + prompt[:200])
+        t1, t2, _ = parsed
+        in_toks = self.count_tokens(prompt)
+        decision = self._decide(t1, t2)
+        margin = self._pseudo_margin(t1, t2)
+        # Properly normalized two-way log-softmax: the decided answer gets
+        # -log(1 + e^-m), the other -m - log(1 + e^-m).
+        lp_hi = -math.log1p(math.exp(-margin))
+        lp_lo = lp_hi - margin
+        logprobs: List[float] = []
+        usage = Usage(0, 0)
+        for c in choices:
+            meaning = classify_yes_no(c)
+            if meaning is None:
+                raise ValueError(f"oracle cannot score non-yes/no choice {c!r}")
+            c_toks = count_tokens(c)
+            if in_toks + c_toks >= self.context_limit:
+                raise ContextWindowExceeded(
+                    f"prompt + choice has {in_toks + c_toks} tokens >= "
+                    f"context limit {self.context_limit}")
+            logprobs.append(lp_hi if meaning == decision else lp_lo)
+            usage = usage + Usage(in_toks + c_toks, 0, scored_tokens=c_toks)
+        return ScoreResponse(tuple(logprobs), usage)
+
+    def score(self, prompt: str, choices: Sequence[str]) -> ScoreResponse:
+        """Prefill-only scoring: latency charges input tokens only —
+        there are zero generated tokens by construction."""
+        resp = self._score_impl(prompt, choices)
+        self.sim_clock_s += (self.latency_base_s
+                             + resp.usage.prompt_tokens * self.latency_per_in_tok)
+        return resp
 
     def _answer_block(
         self, b1: Sequence[str], b2: Sequence[str], budget: int

@@ -47,9 +47,43 @@ def parse_tuple_prompt(prompt: str) -> Optional[Tuple[str, str, str]]:
     return m.group("t1"), m.group("t2"), m.group("j")
 
 
-def parse_yes_no(answer: str) -> bool:
-    """Interpret the (single-token) answer of a tuple-join invocation."""
-    return answer.strip().lower().startswith("yes")
+#: The golden-pinned answer convention shared by the tuple-join template
+#: ("Yes"/"No" in :data:`TUPLE_TEMPLATE`), the ``OracleLLM`` answer path,
+#: and the prefill-only scoring path: :data:`SCORE_CHOICES` is the ordered
+#: pair of candidate continuations a scorer ranks, index 0 = positive.
+YES_ANSWER = "Yes"
+NO_ANSWER = "No"
+SCORE_CHOICES = (YES_ANSWER, NO_ANSWER)
+
+_FIRST_WORD_RE = re.compile(r"[a-z]+")
+
+
+def classify_yes_no(answer: str) -> Optional[bool]:
+    """Classify an answer as yes (True), no (False), or unrecognized (None).
+
+    Only an *exact* first word ``yes``/``no`` (case-insensitive, ignoring
+    leading whitespace/punctuation) counts — ``"Yes."`` and ``"no, because"``
+    parse, but ``"yesterday"``, truncated ``"Y"``, and empty answers do not.
+    """
+    m = _FIRST_WORD_RE.search(answer.lower())
+    word = m.group(0) if m else ""
+    if word == "yes":
+        return True
+    if word == "no":
+        return False
+    return None
+
+
+def parse_yes_no(answer: str, default: bool = False) -> bool:
+    """Interpret the answer of a tuple-join invocation.
+
+    Malformed answers fall back to ``default`` (deterministically No: a
+    verification that cannot be read must not emit a join pair) instead of
+    the old lenient ``"yes"``-prefix match, which mapped e.g.
+    ``"yesterday"`` to a join hit.
+    """
+    got = classify_yes_no(answer)
+    return default if got is None else got
 
 
 # ---------------------------------------------------------------------------

@@ -3,9 +3,11 @@
 from __future__ import annotations
 
 import itertools
-from typing import Sequence
+import os
+from typing import Optional, Sequence
 
 from repro.core.accounting import Ledger
+from repro.core.cascade import score_pairs
 from repro.core.join_types import JoinResult, Timer
 from repro.core.llm_client import LLMClient, cancel_unfinished
 from repro.core.prompts import parse_yes_no, tuple_prompt
@@ -19,6 +21,7 @@ def tuple_join(
     *,
     max_answer_tokens: int = 1,
     window: int = 256,
+    scoring: Optional[bool] = None,
 ) -> JoinResult:
     """Evaluate all tuple pairs, one LLM call each (paper Algorithm 1).
 
@@ -36,7 +39,19 @@ def tuple_join(
     cross product is |r1|·|r2| invocations, so materializing every handle
     up front would cost quadratic memory for no throughput gain — the
     engine only keeps ``slots`` requests decoding anyway.
+
+    ``scoring=True`` answers each pair from one prefill pass instead of a
+    decode loop (DESIGN.md §13): the Yes/No answers are *scored* as
+    continuations and the decision is their log-prob argmax — zero decode
+    steps, ``max_answer_tokens`` unused.  Defaults to the
+    ``REPRO_SCORE_JOIN=1`` env switch, and only when the client supports
+    scoring (decode otherwise).
     """
+    if scoring is None:
+        scoring = (os.environ.get("REPRO_SCORE_JOIN", "0") == "1"
+                   and getattr(client, "supports_scoring", False))
+    if scoring:
+        return _tuple_join_scored(r1, r2, j, client, window=window)
     ledger = Ledger()
     pairs = set()
     index = ((i, k) for i in range(len(r1)) for k in range(len(r2)))
@@ -67,3 +82,20 @@ def tuple_join(
                 raise
     return JoinResult(pairs=pairs, ledger=ledger, wall_time_s=timer.elapsed,
                       meta={"operator": "tuple"})
+
+
+def _tuple_join_scored(
+    r1: Sequence[str],
+    r2: Sequence[str],
+    j: str,
+    client: LLMClient,
+    *,
+    window: int,
+) -> JoinResult:
+    index = [(i, k) for i in range(len(r1)) for k in range(len(r2))]
+    ledger = Ledger()
+    with Timer() as timer:
+        scores = score_pairs(index, r1, r2, j, client, ledger, window=window)
+    pairs = {p for p, (dec, _) in scores.items() if dec}
+    return JoinResult(pairs=pairs, ledger=ledger, wall_time_s=timer.elapsed,
+                      meta={"operator": "tuple", "scoring": True})

@@ -259,7 +259,7 @@ def cache_specs(
 
 def prefill(
     cfg: ModelConfig, params, batch: Dict[str, jax.Array], max_seq: int,
-    valid_len: Optional[jax.Array] = None,
+    valid_len: Optional[jax.Array] = None, all_logits: bool = False,
 ) -> Tuple[Dict[str, jax.Array], jax.Array]:
     """Process the prompt; return (cache, last-token logits).
 
@@ -270,6 +270,11 @@ def prefill(
     (continuous batching): causality makes padded key/values harmless for
     attention; SSM layers zero ``dt``/``x`` beyond the valid prefix so the
     carried state stops there; last-token logits are gathered per row.
+
+    ``all_logits=True`` unembeds **every** position instead of the last,
+    returning ``(B, S, vocab)`` — the prefill-only scoring path (DESIGN.md
+    §13) reads teacher-forced continuation log-probs from these without a
+    single decode step.  Works for every family, SSM included.
     """
     x = _embed_inputs(cfg, params, batch)
     Bsz, S = x.shape[0], x.shape[1]
@@ -343,13 +348,15 @@ def prefill(
     else:
         x, caches = jax.lax.scan(body, x, params["blocks"])
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    if valid_len is None:
-        x_last = x[:, -1:]
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if all_logits:
+        logits = L.unembed(x, table)  # (B, S, vocab)
+    elif valid_len is None:
+        logits = L.unembed(x[:, -1:], table)[:, 0]
     else:  # ragged batch: per-row last valid position
         idx = jnp.clip(valid_len - 1, 0, S - 1)
         x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
-    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = L.unembed(x_last, table)[:, 0]
+        logits = L.unembed(x_last, table)[:, 0]
     caches["len"] = (jnp.full((Bsz,), S, jnp.int32)
                      if valid_len is None else valid_len.astype(jnp.int32))
     return caches, logits
@@ -366,7 +373,7 @@ KV_ONLY_FAMILIES = ("dense", "audio", "vlm", "moe")
 def chunked_prefill(
     cfg: ModelConfig, params, batch: Dict[str, jax.Array], max_seq: int,
     valid_len: jax.Array, prefix_k: jax.Array, prefix_v: jax.Array,
-    prefix_len: jax.Array, paged: bool = False,
+    prefix_len: jax.Array, paged: bool = False, all_logits: bool = False,
 ) -> Tuple[Dict[str, jax.Array], jax.Array]:
     """Prefill only the *uncached suffix* of each prompt over an existing
     prefix cache (DESIGN.md §9).
@@ -452,10 +459,15 @@ def chunked_prefill(
         x, caches = jax.lax.scan(
             body, x, (params["blocks"], prefix_k, prefix_v))
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    idx = jnp.clip(valid_len - 1, 0, S - 1)
-    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = L.unembed(x_last, table)[:, 0]
+    if all_logits:
+        # Scoring path: per-position logits over the computed suffix —
+        # position i predicts absolute token prefix_len + i + 1.
+        logits = L.unembed(x, table)  # (B, S, vocab)
+    else:
+        idx = jnp.clip(valid_len - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = L.unembed(x_last, table)[:, 0]
     caches["len"] = (prefix_len + valid_len).astype(jnp.int32)
     return caches, logits
 

@@ -3,6 +3,7 @@ from repro.serve.engine import (
     Engine,
     GenResult,
     PagedDecodeState,
+    ScoreRow,
     StopMatcher,
 )
 from repro.serve.executor import (
@@ -10,12 +11,13 @@ from repro.serve.executor import (
     ExecutorStats,
     ServeHandle,
 )
-from repro.serve.client import EngineClient, EngineHandle
+from repro.serve.client import EngineClient, EngineHandle, EngineScoreHandle
 from repro.serve.cluster import (
     Cluster,
     ClusterClient,
     ClusterClientHandle,
     ClusterHandle,
+    ClusterScoreHandle,
 )
 from repro.serve.prefix_cache import (
     PagedKVPool,
@@ -36,14 +38,17 @@ __all__ = [
     "ClusterClient",
     "ClusterClientHandle",
     "ClusterHandle",
+    "ClusterScoreHandle",
     "ContinuousBatchingExecutor",
     "DecodeState",
     "Engine",
     "EngineClient",
     "EngineHandle",
+    "EngineScoreHandle",
     "ExecutorStats",
     "GenResult",
     "PagedDecodeState",
+    "ScoreRow",
     "PagedKVPool",
     "PrefixAffinityRouter",
     "PrefixCacheStats",

@@ -20,21 +20,27 @@ random demo weights can't answer semantic questions, pretrained ones would.
 
 from __future__ import annotations
 
-from typing import Iterable, Iterator, List, Optional
+from typing import Iterable, Iterator, List, Optional, Sequence
 
 from repro.core.accounting import Usage
-from repro.core.llm_client import LLMClient, LLMHandle, LLMResponse
+from repro.core.llm_client import (
+    LLMClient, LLMHandle, LLMResponse, ScoreHandle, ScoreResponse,
+)
 from repro.core.oracle import OracleLLM
 from repro.serve.engine import Engine, GenResult
 from repro.serve.executor import ContinuousBatchingExecutor, ServeHandle
 
 
+def _usage(r: GenResult) -> Usage:
+    return Usage(r.prompt_tokens, r.completion_tokens,
+                 r.cached_prompt_tokens, r.drafted_tokens,
+                 r.accepted_draft_tokens, r.scored_tokens)
+
+
 def _to_response(r: GenResult) -> LLMResponse:
     return LLMResponse(
         text=r.text,
-        usage=Usage(r.prompt_tokens, r.completion_tokens,
-                    r.cached_prompt_tokens, r.drafted_tokens,
-                    r.accepted_draft_tokens),
+        usage=_usage(r),
         finish_reason="stop" if r.finish_reason in ("stop", "eos") else "length",
     )
 
@@ -67,7 +73,50 @@ class EngineHandle(LLMHandle):
         return self._response
 
 
+class EngineScoreHandle(ScoreHandle):
+    """ScoreHandle over one live executor score request per choice.
+
+    Each choice is its own :meth:`ContinuousBatchingExecutor.submit_score`
+    request — the executor batches all queued score requests into shared
+    prefill passes, so one pair's Yes/No choices normally score in the
+    same batch (and their shared prompt pages dedup on the paged engine).
+    """
+
+    def __init__(self, client: "EngineClient", prompt: str,
+                 choices: Sequence[str], serves: List[ServeHandle]):
+        super().__init__(client, prompt, choices)
+        self._serves = serves
+
+    def done(self) -> bool:
+        return all(s.status == "finished" for s in self._serves)
+
+    @property
+    def cancelled(self) -> bool:
+        return any(s.status == "cancelled" for s in self._serves)
+
+    def cancel(self) -> bool:
+        ok = False
+        for s in self._serves:
+            if not s.done():
+                ok = self._client.executor.cancel(s) or ok
+        return ok
+
+    def result(self) -> ScoreResponse:
+        if self.cancelled:
+            raise RuntimeError("cancelled scoring request has no result")
+        if self._response is None:
+            results = [self._client.executor.result(s) for s in self._serves]
+            usage = Usage(0, 0)
+            for r in results:
+                usage = usage + _usage(r)
+            self._response = ScoreResponse(
+                tuple(r.score_logprob for r in results), usage)
+        return self._response
+
+
 class EngineClient(LLMClient):
+    supports_scoring = True
+
     def __init__(
         self,
         engine: Engine,
@@ -116,6 +165,61 @@ class EngineClient(LLMClient):
             h = wrapped[serve.request_id]
             h._response = _to_response(serve.result)
             yield h
+
+    # -- scoring surface (prefill-only, DESIGN.md §13) ---------------------
+    def _expected_scores(self, prompt: str,
+                         choices: Sequence[str]) -> List[Optional[float]]:
+        """Teacher-forcing analogue for scoring: with an oracle attached,
+        its calibrated pseudo-logprobs are reported per choice while the
+        engine still runs the real scoring pass with honest accounting —
+        mirroring how ``expected`` forces decode answers."""
+        if self.oracle is None:
+            return [None] * len(choices)
+        return list(self.oracle._score_impl(prompt, choices).logprobs)
+
+    def submit_score(self, prompt: str,
+                     choices: Sequence[str]) -> EngineScoreHandle:
+        if not choices:
+            raise ValueError("score requires at least one choice")
+        expected = self._expected_scores(prompt, choices)
+        serves = [
+            self.executor.submit_score(prompt, c, expected_logprob=e)
+            for c, e in zip(choices, expected)
+        ]
+        return EngineScoreHandle(self, prompt, choices, serves)
+
+    def score(self, prompt: str, choices: Sequence[str]) -> ScoreResponse:
+        return self.submit_score(prompt, choices).result()
+
+    def as_scored(
+        self, handles: Iterable[EngineScoreHandle]
+    ) -> Iterator[EngineScoreHandle]:
+        """Yield scoring handles in completion order: each one the moment
+        the last of its per-choice executor requests retires."""
+        remaining: dict = {}
+        owner: dict = {}
+        waiting_serves: List[ServeHandle] = []
+        ready: List[EngineScoreHandle] = []
+        for h in handles:
+            if h.cancelled:
+                continue
+            waiting = [s for s in h._serves if not s.done()]
+            if not waiting:
+                ready.append(h)
+                continue
+            remaining[id(h)] = len(waiting)
+            for s in waiting:
+                owner[s.request_id] = h
+                waiting_serves.append(s)
+        for h in ready:
+            h.result()
+            yield h
+        for serve in self.executor.as_completed(waiting_serves):
+            h = owner[serve.request_id]
+            remaining[id(h)] -= 1
+            if remaining[id(h)] == 0:
+                h.result()
+                yield h
 
     # -- synchronous surface ----------------------------------------------
     def invoke(self, prompt: str, *, max_tokens: int,

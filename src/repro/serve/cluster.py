@@ -58,7 +58,9 @@ import threading
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
 
 from repro.core.accounting import Ledger, Usage
-from repro.core.llm_client import LLMClient, LLMHandle
+from repro.core.llm_client import (
+    LLMClient, LLMHandle, ScoreHandle, ScoreResponse,
+)
 from repro.core.oracle import OracleLLM
 from repro.serve.client import _to_response
 from repro.serve.engine import Engine, GenResult
@@ -89,6 +91,12 @@ class ClusterHandle:
     stop: Optional[str]
     expected: Optional[str]
     prompt_tokens: int
+    #: non-None marks a prefill-only scoring request (DESIGN.md §13):
+    #: the continuation string whose logprob the replica measures.
+    #: Failover works unchanged — scoring requests evacuate from their
+    #: executor's queue like any other and re-place on a survivor.
+    score: Optional[str] = None
+    expected_score: Optional[float] = None
     status: str = PENDING
     result: Optional[GenResult] = None
     replica: int = -1
@@ -135,7 +143,7 @@ class _Replica:
 def _usage(r: GenResult) -> Usage:
     return Usage(r.prompt_tokens, r.completion_tokens,
                  r.cached_prompt_tokens, r.drafted_tokens,
-                 r.accepted_draft_tokens)
+                 r.accepted_draft_tokens, r.scored_tokens)
 
 
 class Cluster:
@@ -240,6 +248,35 @@ class Cluster:
         self._place(ch)
         return ch
 
+    def submit_score(
+        self,
+        prompt: str,
+        continuation: str,
+        *,
+        expected_logprob: Optional[float] = None,
+    ) -> ClusterHandle:
+        """Route one prefill-only scoring request (zero decode steps).
+
+        The routing cost and Eq. (1) reservation are the full teacher
+        -forced sequence (prompt + continuation) with ``max_tokens=0``;
+        affinity keying on the prompt keeps a pair's Yes/No choices —
+        and a whole left block's scoring fan-out — on one replica, so
+        the scored prefixes dedup in that replica's radix cache.
+        """
+        eng = self._replicas[0].engine
+        seq_tokens = (eng.count_tokens(prompt)
+                      + len(eng.tokenizer.encode(continuation, bos=False)))
+        with self._mu:
+            rid = self._next_id
+            self._next_id += 1
+        ch = ClusterHandle(
+            request_id=rid, prompt=prompt, max_tokens=0, stop=None,
+            expected=None, prompt_tokens=seq_tokens,
+            score=continuation, expected_score=expected_logprob,
+        )
+        self._place(ch)
+        return ch
+
     def _view(self) -> RouterView:
         alive = [rep.idx for rep in self._replicas if rep.alive]
         return RouterView(
@@ -270,9 +307,14 @@ class Cluster:
             with rep.lock:
                 if not rep.alive:
                     continue  # failure raced the routing decision
-                serve = rep.executor.submit(
-                    ch.prompt, max_tokens=ch.max_tokens, stop=ch.stop,
-                    expected=ch.expected)
+                if ch.score is not None:
+                    serve = rep.executor.submit_score(
+                        ch.prompt, ch.score,
+                        expected_logprob=ch.expected_score)
+                else:
+                    serve = rep.executor.submit(
+                        ch.prompt, max_tokens=ch.max_tokens, stop=ch.stop,
+                        expected=ch.expected)
                 ch._serve = serve
                 ch.replica = rep.idx
                 rep.handles[serve.request_id] = ch
@@ -620,6 +662,46 @@ class ClusterClientHandle(LLMHandle):
         return self._response
 
 
+class ClusterScoreHandle(ScoreHandle):
+    """ScoreHandle over one cluster scoring request per choice.
+
+    Prefix-affinity routing sends every choice of a pair (same prompt,
+    same affinity key) to the same replica, so the pair's choices score
+    in one prefill batch there — but the handle does not assume it:
+    each choice resolves independently and survives failover."""
+
+    def __init__(self, client: "ClusterClient", prompt: str,
+                 choices: Sequence[str], chs: List[ClusterHandle]):
+        super().__init__(client, prompt, choices)
+        self._chs = chs
+
+    def done(self) -> bool:
+        return all(ch.status == FINISHED for ch in self._chs)
+
+    @property
+    def cancelled(self) -> bool:
+        return any(ch.status == CANCELLED for ch in self._chs)
+
+    def cancel(self) -> bool:
+        ok = False
+        for ch in self._chs:
+            if not ch.done():
+                ok = self._client.cluster.cancel(ch) or ok
+        return ok
+
+    def result(self) -> ScoreResponse:
+        if self.cancelled:
+            raise RuntimeError("cancelled scoring request has no result")
+        if self._response is None:
+            results = [self._client.cluster.result(ch) for ch in self._chs]
+            usage = Usage(0, 0)
+            for r in results:
+                usage = usage + _usage(r)
+            self._response = ScoreResponse(
+                tuple(r.score_logprob for r in results), usage)
+        return self._response
+
+
 class ClusterClient(LLMClient):
     """The join operators' LLMClient backed by N engine replicas.
 
@@ -630,6 +712,8 @@ class ClusterClient(LLMClient):
     -forcing works exactly as on the single engine — the expected text
     is computed at submit time, so any replica produces the same tokens.
     """
+
+    supports_scoring = True
 
     def __init__(self, cluster: Cluster, *, oracle: Optional[OracleLLM] = None):
         self.cluster = cluster
@@ -673,6 +757,55 @@ class ClusterClient(LLMClient):
             h = wrapped[ch.request_id]
             h._response = _to_response(ch.result)
             yield h
+
+    # -- scoring surface (prefill-only, DESIGN.md §13) ---------------------
+    def _expected_scores(self, prompt: str,
+                         choices: Sequence[str]) -> List[Optional[float]]:
+        if self.oracle is None:
+            return [None] * len(choices)
+        return list(self.oracle._score_impl(prompt, choices).logprobs)
+
+    def submit_score(self, prompt: str,
+                     choices: Sequence[str]) -> ClusterScoreHandle:
+        if not choices:
+            raise ValueError("score requires at least one choice")
+        expected = self._expected_scores(prompt, choices)
+        chs = [
+            self.cluster.submit_score(prompt, c, expected_logprob=e)
+            for c, e in zip(choices, expected)
+        ]
+        return ClusterScoreHandle(self, prompt, choices, chs)
+
+    def score(self, prompt: str, choices: Sequence[str]) -> ScoreResponse:
+        return self.submit_score(prompt, choices).result()
+
+    def as_scored(
+        self, handles: Iterable[ClusterScoreHandle]
+    ) -> Iterator[ClusterScoreHandle]:
+        remaining: dict = {}
+        owner: dict = {}
+        waiting_chs: List[ClusterHandle] = []
+        ready: List[ClusterScoreHandle] = []
+        for h in handles:
+            if h.cancelled:
+                continue
+            waiting = [ch for ch in h._chs if not ch.done()]
+            if not waiting:
+                ready.append(h)
+                continue
+            remaining[id(h)] = len(waiting)
+            for ch in waiting:
+                owner[ch.request_id] = h
+                waiting_chs.append(ch)
+        for h in ready:
+            h.result()
+            yield h
+        for ch in self.cluster.as_completed(waiting_chs):
+            h = owner[ch.request_id]
+            remaining[id(h)] -= 1
+            if remaining[id(h)] == 0:
+                h.result()
+                yield h
 
     def invoke(self, prompt: str, *, max_tokens: int,
                stop: Optional[str] = None):

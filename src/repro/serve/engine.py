@@ -129,6 +129,29 @@ class GenResult:
     #: verification FLOPs, never tokens — Eq. (1) budgets are untouched
     drafted_tokens: int = 0
     accepted_draft_tokens: int = 0
+    #: prefill-only scoring (DESIGN.md §13): candidate-continuation tokens
+    #: whose log-probs were read from prefill logits (subset of
+    #: prompt_tokens; completion_tokens stays 0 for score requests)
+    scored_tokens: int = 0
+    #: total log-prob of the scored continuation (None for generation)
+    score_logprob: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ScoreRow:
+    """One scored (prompt, continuation) pair from :meth:`Engine.score_rows`.
+
+    ``logprob`` is the sum of per-token log-probs of the continuation under
+    teacher forcing after the prompt — read from per-position prefill
+    logits, zero decode steps.  ``cached_tokens`` of the sequence were
+    served by the radix prefix cache instead of recomputed.
+    """
+
+    logprob: float
+    token_logprobs: List[float]
+    prompt_tokens: int
+    cont_tokens: int
+    cached_tokens: int
 
 
 class StopMatcher:
@@ -349,6 +372,40 @@ class Engine:
                 paged=True,
             )
         )
+        # scoring variants (DESIGN.md §13): identical passes that unembed
+        # every position — score_rows reads teacher-forced continuation
+        # log-probs straight out of the prefill, zero decode steps.  The
+        # plain variant is bucket-length (score rows never join the decode
+        # batch, so no max_seq padding) and serves dense, paged, and SSM
+        # engines alike.
+        self._prefill_bucket_all = jax.jit(
+            lambda p, toks, vlen: prefill(
+                cfg, p, {"tokens": toks}, max_seq=toks.shape[1],
+                valid_len=vlen, all_logits=True,
+            )
+        )
+        self._chunked_prefill_all = jax.jit(
+            lambda p, toks, vlen, kp, vp, plen: chunked_prefill(
+                cfg, p, {"tokens": toks}, max_seq=self.max_seq,
+                valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
+                all_logits=True,
+            )
+        )
+        self._chunked_prefill_all_paged = jax.jit(
+            lambda p, toks, vlen, kp, vp, plen: chunked_prefill(
+                cfg, p, {"tokens": toks}, max_seq=self.max_seq,
+                valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
+                paged=True, all_logits=True,
+            )
+        )
+        # per-position log-prob gather: select each row's continuation
+        # -predicting positions, log-softmax, take the target token ids
+        self._score_gather = jax.jit(
+            lambda lg, idx, tgt: jnp.take_along_axis(
+                jax.nn.log_softmax(
+                    jnp.take_along_axis(lg, idx[:, :, None], axis=1),
+                    axis=-1),
+                tgt[:, :, None], axis=2)[..., 0])
         self._decode = jax.jit(
             lambda p, cache, toks, act: decode_step(cfg, p, cache, toks, active=act)
         )
@@ -545,20 +602,95 @@ class Engine:
             return self._prefill_rows_paged(ids, lens)
         return self._prefill_rows_dense(ids, lens)
 
+    def score_rows(
+        self, pairs: Sequence[Tuple[str, str]]
+    ) -> List[ScoreRow]:
+        """Score up to ``slots`` (prompt, continuation) pairs in ONE
+        prefill pass with zero decode steps (DESIGN.md §13).
+
+        Each row teacher-forces ``prompt + continuation`` through prefill
+        with per-position logits: the logit at position ``i`` predicts
+        token ``i + 1``, so the continuation's log-prob is read directly
+        — no decode step, no sampling, no decode slot.
+
+        The full serving machinery is reused: the radix prefix cache
+        serves any cached prefix (capped at ``len(prompt_ids) - 1`` so
+        the position predicting the first continuation token is always
+        computed), the uncached suffix runs through chunked prefill over
+        the gathered prefix, and on the paged engine the rows' pages are
+        allocated/deduped/interned exactly like a generation prefill —
+        then **released immediately** after the gather: a score request
+        never holds pages beyond its own prefill batch (the radix tree
+        keeps interned pages elastically, evictable under pressure).
+        """
+        if not 0 < len(pairs) <= self.slots:
+            raise ValueError(f"score_rows takes 1..{self.slots} pairs")
+        prompt_ids = [self.tokenizer.encode(p) for p, _ in pairs]
+        cont_ids = [self.tokenizer.encode(c, bos=False) for _, c in pairs]
+        if any(not ci for ci in cont_ids):
+            raise ValueError("cannot score an empty continuation")
+        seqs = [p + c for p, c in zip(prompt_ids, cont_ids)]
+        lens = [len(s) for s in seqs]
+        if max(lens) > self.max_seq:
+            raise ValueError(
+                f"prompt+continuation of {max(lens)} tokens exceeds "
+                f"engine max_seq {self.max_seq}")
+        limits = [len(p) - 1 for p in prompt_ids]
+        if self.paged:
+            cache, logits, _, cached = self._prefill_rows_paged(
+                seqs, lens, limits=limits, all_logits=True)
+        else:
+            cache, logits, _, cached = self._prefill_rows_dense(
+                seqs, lens, limits=limits, all_logits=True)
+        # logits: (slots, L, vocab) over each row's *computed* suffix —
+        # continuation token i lives at suffix-relative position
+        # len(prompt_ids) - 1 + i - cached[r]
+        M = max(len(ci) for ci in cont_ids)
+        idx = np.zeros((self.slots, M), np.int32)
+        tgt = np.zeros((self.slots, M), np.int32)
+        for r, (pi, ci) in enumerate(zip(prompt_ids, cont_ids)):
+            base = len(pi) - 1 - cached[r]
+            for i, t in enumerate(ci):
+                idx[r, i] = base + i
+                tgt[r, i] = t
+        lp = np.asarray(self._score_gather(
+            logits, jnp.asarray(idx), jnp.asarray(tgt)))
+        rows = []
+        for r, (pi, ci) in enumerate(zip(prompt_ids, cont_ids)):
+            token_lps = [float(lp[r, i]) for i in range(len(ci))]
+            rows.append(ScoreRow(
+                logprob=float(sum(token_lps)), token_logprobs=token_lps,
+                prompt_tokens=len(pi), cont_tokens=len(ci),
+                cached_tokens=cached[r]))
+        if self.paged:
+            # release immediately: score rows never own pages past their
+            # batch — only the radix tree's own (evictable) refs remain
+            tables, _ = cache
+            for t in tables:
+                if t:
+                    self.pool.decref(t)
+        return rows
+
     # ---------------------------- dense path --------------------------
-    def _prefill_rows_dense(self, ids: List[List[int]], lens: List[int]):
+    def _prefill_rows_dense(self, ids: List[List[int]], lens: List[int],
+                            limits: Optional[List[int]] = None,
+                            all_logits: bool = False):
         pc = self.prefix_cache
         matches = []
         cached = [0] * len(ids)
         if pc is not None and pc.pool.bound:
-            # cap at len-1: at least one token must be computed — its
-            # logits seed the decode loop
-            matches = [pc.match(seq, limit=len(seq) - 1) for seq in ids]
+            # cap at len-1 (decode: the last token's logits seed the decode
+            # loop) or at the caller's limit (scoring: prompt_len-1, so the
+            # position predicting the first continuation token is computed)
+            caps = limits or [len(seq) - 1 for seq in ids]
+            matches = [pc.match(seq, limit=cap)
+                       for seq, cap in zip(ids, caps)]
             cached = [m.length for m in matches]
 
         try:
             if any(cached):
-                cache, logits = self._prefill_over_cache(ids, matches)
+                cache, logits = self._prefill_over_cache(
+                    ids, matches, all_logits=all_logits)
             else:
                 L = _bucket(max(lens), self.prefill_buckets)
                 toks = np.zeros((self.slots, L), np.int32)
@@ -566,7 +698,8 @@ class Engine:
                 for r, seq in enumerate(ids):
                     toks[r, : len(seq)] = seq
                     vlen[r] = len(seq)
-                cache, logits = self._prefill(
+                fn = self._prefill_bucket_all if all_logits else self._prefill
+                cache, logits = fn(
                     self.params, jnp.asarray(toks), jnp.asarray(vlen)
                 )
             if pc is not None:
@@ -585,7 +718,8 @@ class Engine:
                 m.release()
         return cache, logits, lens, cached
 
-    def _prefill_over_cache(self, ids: List[List[int]], matches: List[Any]):
+    def _prefill_over_cache(self, ids: List[List[int]], matches: List[Any],
+                            all_logits: bool = False):
         """Gather cached pages + chunked-prefill the uncached suffixes.
 
         Shared by both engines; they differ only in what happens to the
@@ -610,14 +744,21 @@ class Engine:
             plen[r] = m.length
             page_ids[r, : len(m.pages)] = m.pages
         kp, vp = pc.pool.gather(page_ids)
-        fn = self._chunked_prefill_paged if self.paged else self._chunked_prefill
+        if self.paged:
+            fn = (self._chunked_prefill_all_paged if all_logits
+                  else self._chunked_prefill_paged)
+        else:
+            fn = (self._chunked_prefill_all if all_logits
+                  else self._chunked_prefill)
         return fn(
             self.params, jnp.asarray(toks), jnp.asarray(vlen),
             kp, vp, jnp.asarray(plen),
         )
 
     # ---------------------------- paged path --------------------------
-    def _prefill_rows_paged(self, ids: List[List[int]], lens: List[int]):
+    def _prefill_rows_paged(self, ids: List[List[int]], lens: List[int],
+                            limits: Optional[List[int]] = None,
+                            all_logits: bool = False):
         """Prefill into freshly allocated pool pages; share matched
         prefixes by reference (zero-copy, DESIGN.md §10).
 
@@ -645,7 +786,9 @@ class Engine:
         matches: List[Any] = [None] * len(ids)
         cached = [0] * len(ids)
         if pc is not None and self.pool.bound:
-            matches = [pc.match(seq, limit=len(seq) - 1) for seq in ids]
+            caps = limits or [len(seq) - 1 for seq in ids]
+            matches = [pc.match(seq, limit=cap)
+                       for seq, cap in zip(ids, caps)]
             cached = [m.length for m in matches]
 
         row_own: List[List[int]] = []     # pages this row allocated (writer)
@@ -685,7 +828,8 @@ class Engine:
                     own.append(page)
                     plan.append(page)
             if any(cached):
-                cache, logits = self._prefill_over_cache(ids, matches)
+                cache, logits = self._prefill_over_cache(
+                    ids, matches, all_logits=all_logits)
             else:
                 L = _bucket(max(lens), self.prefill_buckets)
                 toks = np.zeros((self.slots, L), np.int32)
@@ -693,7 +837,9 @@ class Engine:
                 for r, seq in enumerate(ids):
                     toks[r, : len(seq)] = seq
                     vlen[r] = len(seq)
-                cache, logits = self._prefill_bucket(
+                fn = (self._prefill_bucket_all if all_logits
+                      else self._prefill_bucket)
+                cache, logits = fn(
                     self.params, jnp.asarray(toks), jnp.asarray(vlen)
                 )
             if not self.pool.bound:

@@ -58,6 +58,16 @@ class ServeHandle:
     status: str = QUEUED
     result: Optional[GenResult] = None
     retries: int = 0
+    #: prefill-only scoring (DESIGN.md §13): the candidate continuation to
+    #: score after ``prompt`` (None for generation requests).  Score
+    #: requests carry ``max_tokens=0`` and ``prompt_tokens`` = the FULL
+    #: prompt+continuation token count, so Eq. (1) sees every position
+    #: they occupy and zero reserved output.
+    score: Optional[str] = None
+    #: teacher-forcing analogue for scoring: a caller-supplied log-prob
+    #: (e.g. from the rule oracle) reported instead of the raw model's —
+    #: the engine still runs the real scoring pass with honest accounting
+    expected_score: Optional[float] = None
     #: the executor that owns this handle (set by submit)
     _owner: Optional[object] = dataclasses.field(default=None, repr=False)
     # decode-time bookkeeping (populated on admission)
@@ -102,6 +112,12 @@ class ExecutorStats:
     #: step — decode_steps is the number of model passes either way
     drafted_tokens: int = 0
     accepted_draft_tokens: int = 0
+    #: prefill-only scoring (DESIGN.md §13): score requests retired and
+    #: continuation tokens whose log-probs were read from prefill logits.
+    #: A score batch counts as ONE prefill batch and ZERO decode steps —
+    #: the whole point of the path
+    score_requests: int = 0
+    scored_tokens: int = 0
 
     @property
     def model_passes(self) -> int:
@@ -138,6 +154,9 @@ class ContinuousBatchingExecutor:
         self._used_pages = 0  # paged engine: KV pages reserved in flight
         self._queued_tokens = 0  # same reservation, for still-queued work
         self._next_id = 0
+        #: a failed score batch exhausted some request's retries — the
+        #: next step() must re-raise instead of swallowing the failure
+        self._score_exhausted = False
 
     # ------------------------------------------------------------------
     # Submission side
@@ -168,6 +187,47 @@ class ContinuousBatchingExecutor:
         handle = ServeHandle(
             request_id=self._next_id, prompt=prompt, max_tokens=max_tokens,
             stop=stop, expected=expected, prompt_tokens=ntok, _owner=self,
+        )
+        self._next_id += 1
+        self._queue.append(handle)
+        self._queued_tokens += self._need(handle)
+        return handle
+
+    def submit_score(
+        self,
+        prompt: str,
+        continuation: str,
+        *,
+        expected_logprob: Optional[float] = None,
+    ) -> ServeHandle:
+        """Enqueue one prefill-only scoring request (DESIGN.md §13).
+
+        The request is admitted under Eq. (1) with ``max_tokens=0`` —
+        its reservation is exactly the prompt+continuation tokens it
+        prefills, held only for the duration of its scoring batch: it
+        never occupies a decode slot, never reserves completion tokens
+        or worst-case pages, and retires with zero decode steps.
+        """
+        if not continuation:
+            raise ValueError("cannot score an empty continuation")
+        tok = self.engine.tokenizer
+        seq_tok = (len(tok.encode(prompt))
+                   + len(tok.encode(continuation, bos=False)))
+        if seq_tok > self.engine.max_seq:
+            raise ValueError(
+                f"prompt+continuation of {seq_tok} tokens exceeds engine "
+                f"max_seq {self.engine.max_seq}")
+        if (self.engine.paged
+                and self.engine.request_pages(seq_tok, 0)
+                > self.engine.total_kv_pages):
+            raise ValueError(
+                f"score request needs {self.engine.request_pages(seq_tok, 0)} "
+                f"KV pages but the pool holds only "
+                f"{self.engine.total_kv_pages} — it could never be admitted")
+        handle = ServeHandle(
+            request_id=self._next_id, prompt=prompt, max_tokens=0,
+            stop=None, expected=None, prompt_tokens=seq_tok, _owner=self,
+            score=continuation, expected_score=expected_logprob,
         )
         self._next_id += 1
         self._queue.append(handle)
@@ -236,7 +296,8 @@ class ContinuousBatchingExecutor:
         try:
             finished = self._step_inner()
         except Exception:
-            exhausted = self._requeue_in_flight()
+            exhausted = self._requeue_in_flight() or self._score_exhausted
+            self._score_exhausted = False
             if exhausted:
                 raise
             return []
@@ -474,12 +535,17 @@ class ContinuousBatchingExecutor:
         a paged engine, under the pool's free-page budget (each request
         reserves its worst-case page count; DESIGN.md §10) — then
         prefill them as one ragged batch and scatter the rows in."""
+        self._score_refill(finished)
         budget = self.engine.slots * self.engine.max_seq
         page_budget = self.engine.total_kv_pages  # 0 on dense engines
         admitted: List[ServeHandle] = []
         free = [s for s, h in enumerate(self._slots) if h is None]
         while free and self._queue:
             h = self._queue[0]
+            if h.score is not None:
+                # a score request _score_refill could not yet admit —
+                # capacity frees as decode rows retire; FIFO preserved
+                break
             need_pages = self.engine.request_pages(h.prompt_tokens,
                                                    h.max_tokens)
             occupied = any(s is not None for s in self._slots) or admitted
@@ -528,6 +594,77 @@ class ContinuousBatchingExecutor:
                            if self.engine.spec_decode else None)
             if h._budget <= 0:  # prompt alone fills the context window
                 self._retire(h, "length", finished)
+
+    def _score_refill(self, finished: List[ServeHandle]) -> None:
+        """Admit and retire queued score requests (DESIGN.md §13).
+
+        Score requests are batch-admitted under Eq. (1) and the page
+        budget like everything else, but their reservation is
+        *transient*: the whole batch prefills, its log-probs are read,
+        and its pages are released inside this one call — no decode
+        slot, no completion reservation, nothing carried across steps.
+        They are admitted opportunistically (ahead of queued generation
+        requests) precisely because they cannot hold capacity.
+        """
+        if all(h.score is None for h in self._queue):
+            return
+        eng = self.engine
+        budget = eng.slots * eng.max_seq
+        page_budget = eng.total_kv_pages
+        while True:
+            batch: List[ServeHandle] = []
+            batch_tok = batch_pages = 0
+            for h in self._queue:
+                if h.score is None:
+                    continue
+                if len(batch) == eng.slots:
+                    break
+                pages = eng.request_pages(h.prompt_tokens, 0)
+                if (self._used or batch) and (
+                        self._used + batch_tok + self._need(h) > budget
+                        or self._used_pages + batch_pages + pages
+                        > page_budget > 0):
+                    break  # budget exhausted; FIFO among score requests
+                batch.append(h)
+                batch_tok += self._need(h)
+                batch_pages += pages
+            if not batch:
+                return
+            for h in batch:
+                self._queue.remove(h)
+                self._queued_tokens -= self._need(h)
+                h.status = ACTIVE
+            try:
+                rows = eng.score_rows([(h.prompt, h.score) for h in batch])
+            except Exception:
+                # idempotent like generation prefill: back onto the queue
+                # front, count a retry, re-raise into step()'s handler
+                for h in reversed(batch):
+                    h.status = QUEUED
+                    h.retries += 1
+                    if h.retries > self.max_retries:
+                        self._score_exhausted = True
+                    self._queue.appendleft(h)
+                    self._queued_tokens += self._need(h)
+                raise
+            self.stats.prefill_batches += 1
+            self.stats.score_requests += len(batch)
+            for h, row in zip(batch, rows):
+                self.stats.scored_tokens += row.cont_tokens
+                self.stats.prefill_tokens_computed += (
+                    h.prompt_tokens - row.cached_tokens)
+                self.stats.prefill_tokens_cached += row.cached_tokens
+                h.result = GenResult(
+                    text="", prompt_tokens=h.prompt_tokens,
+                    completion_tokens=0, finish_reason="score",
+                    cached_prompt_tokens=row.cached_tokens,
+                    scored_tokens=row.cont_tokens,
+                    score_logprob=(h.expected_score
+                                   if h.expected_score is not None
+                                   else row.logprob),
+                )
+                h.status = FINISHED
+                finished.append(h)
 
     def _requeue_in_flight(self) -> bool:
         """Engine failure: reset in-flight requests back onto the queue.

@@ -1,0 +1,435 @@
+"""Prefill-only scoring path + confidence cascade (DESIGN.md §13):
+yes/no answer convention goldens, oracle pseudo-logits, engine
+``score_rows`` vs a full-forward reference, executor admission with zero
+decode steps, scored-vs-decode join parity, and cascade threshold
+semantics."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    NO_ANSWER,
+    SCORE_CHOICES,
+    YES_ANSWER,
+    OracleLLM,
+    cascade_tuple_join,
+    classify_yes_no,
+    margin_confidence,
+    scored_decision,
+    tuple_join,
+)
+from repro.core.accounting import Ledger, Usage
+from repro.core.llm_client import ScoreResponse
+from repro.core.prompts import parse_tuple_prompt, parse_yes_no, tuple_prompt
+from repro.data.scenarios import all_scenarios
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.models.model import forward
+from repro.serve import Engine, EngineClient
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ---------------------------------------------------------------------------
+# yes/no convention goldens (shared by parsing and scoring)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("text,want", [
+    ("Yes", True), ("yes", True), ("YES.", True), ("  yes, they match", True),
+    ("No", False), ("no", False), ("No.", False), ("\nNo way", False),
+    ("yesterday", False),   # prefix of "yes" is NOT yes
+    ("Y", False), ("N", False), ("maybe", False), ("", False), ("42", False),
+])
+def test_parse_yes_no_goldens(text, want):
+    assert parse_yes_no(text) is want
+
+
+def test_parse_yes_no_default_on_unrecognized():
+    assert classify_yes_no("Yes!") is True
+    # "nope" is one maximal [a-z]+ word != "no": unrecognized, not a No
+    assert classify_yes_no("nope") is None
+    assert classify_yes_no("gibberish") is None
+    assert classify_yes_no("") is None
+    assert parse_yes_no("gibberish", default=True) is True
+    assert parse_yes_no("gibberish") is False
+    assert SCORE_CHOICES == (YES_ANSWER, NO_ANSWER)
+    assert classify_yes_no(YES_ANSWER) is True
+    assert classify_yes_no(NO_ANSWER) is False
+
+
+# ---------------------------------------------------------------------------
+# margin confidence + scored decisions
+# ---------------------------------------------------------------------------
+
+
+def test_margin_confidence_shape():
+    assert margin_confidence(0.0, 0.0) == 0.0
+    assert margin_confidence(-1.0, -1.0) == 0.0
+    assert 0.0 < margin_confidence(-0.5, -1.0) < margin_confidence(-0.1, -5.0)
+    assert margin_confidence(0.0, -50.0) < 1.0  # never reaches 1
+    # symmetric in the answers
+    assert margin_confidence(-1.0, -3.0) == margin_confidence(-3.0, -1.0)
+    # equals |p_a - p_b| of the two-way softmax
+    lp_a, lp_b = -0.3, -1.4
+    pa = math.exp(lp_a) / (math.exp(lp_a) + math.exp(lp_b))
+    assert margin_confidence(lp_a, lp_b) == pytest.approx(abs(2 * pa - 1))
+
+
+def test_scored_decision_ties_break_yes():
+    resp = ScoreResponse((-1.0, -1.0), Usage(4, 0))
+    dec, conf = scored_decision(resp)
+    assert dec is True and conf == 0.0
+    assert resp.argmax() == 0
+
+
+# ---------------------------------------------------------------------------
+# oracle scoring surface
+# ---------------------------------------------------------------------------
+
+
+def _oracle(pred, **kw):
+    kw.setdefault("context_limit", 8192)
+    return OracleLLM(pred, **kw)
+
+
+def test_oracle_score_matches_decode_on_scenarios():
+    """argmax of the scored choices == the decoded answer, pair by pair,
+    on every benchmark scenario — the golden convention both share."""
+    for sc in all_scenarios():
+        oracle = _oracle(sc.predicate)
+        for i in range(0, len(sc.r1), max(1, len(sc.r1) // 10)):
+            for k in range(0, len(sc.r2), max(1, len(sc.r2) // 10)):
+                p = tuple_prompt(sc.r1[i], sc.r2[k], sc.condition)
+                resp = oracle.score(p, SCORE_CHOICES)
+                decoded = oracle._answer_tuple(sc.r1[i], sc.r2[k])
+                assert SCORE_CHOICES[resp.argmax()] == decoded
+                # deterministic
+                again = oracle.score(p, SCORE_CHOICES)
+                assert resp.logprobs == again.logprobs
+
+
+def test_oracle_score_calibration():
+    """Wrong (noisy) decisions carry low confidence, correct ones high —
+    what makes the cascade threshold meaningful."""
+    pred = lambda a, b: (len(a) * 7 + len(b)) % 3 == 0
+    noisy = _oracle(pred, fn_rate=0.3, fp_rate=0.3, noise_seed=5)
+    lo, hi = [], []
+    for i in range(30):
+        t1, t2 = f"alpha{i}", f"beta{i * i}"
+        resp = noisy.score(tuple_prompt(t1, t2, "match?"), SCORE_CHOICES)
+        _, conf = scored_decision(resp)
+        (hi if noisy._decide(t1, t2) == pred(t1, t2) else lo).append(conf)
+    assert lo and hi
+    assert max(lo) < 0.35
+    assert min(hi) > 0.75
+    # properly normalized two-way distribution
+    r = noisy.score(tuple_prompt("a", "b", "match?"), SCORE_CHOICES)
+    assert sum(math.exp(lp) for lp in r.logprobs) == pytest.approx(1.0)
+
+
+def test_oracle_score_accounting_and_validation():
+    oracle = _oracle(lambda a, b: True)
+    p = tuple_prompt("x", "y", "match?")
+    resp = oracle.score(p, SCORE_CHOICES)
+    assert resp.usage.completion_tokens == 0
+    assert resp.usage.scored_tokens == 2  # "Yes" + "No", one word each
+    assert resp.usage.prompt_tokens > resp.usage.scored_tokens
+    with pytest.raises(ValueError):
+        oracle.score("not a join prompt", SCORE_CHOICES)
+    with pytest.raises(ValueError):
+        oracle.score(p, ("maybe",))
+    with pytest.raises(ValueError):
+        oracle.submit_score(p, ())
+
+
+def test_usage_and_ledger_carry_scored_tokens():
+    u = Usage(10, 0, scored_tokens=2) + Usage(5, 3, scored_tokens=1)
+    assert u.scored_tokens == 3 and u.prompt_tokens == 15
+    led = Ledger()
+    led.record(Usage(10, 0, scored_tokens=2))
+    led.record(Usage(5, 3))
+    assert led.scored_tokens == 2
+    assert led.usage.scored_tokens == 2
+    assert led.summary()["scored_tokens"] == 2
+    merged = led + led
+    assert merged.scored_tokens == 4
+
+
+# ---------------------------------------------------------------------------
+# engine score_rows vs a full-forward reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def score_setup():
+    cfg = get_smoke_config("granite-3-2b")
+    params = init_params(model_specs(cfg), KEY, jnp.float32)
+    tok = ByteTokenizer(cfg.vocab_size)
+    return cfg, params, tok
+
+
+def _reference_logprob(cfg, params, tok, prompt, cont):
+    """Teacher-forced continuation log-prob from one full forward pass."""
+    pids = tok.encode(prompt)
+    cids = tok.encode(cont, bos=False)
+    ids = pids + cids
+    lg, _ = forward(cfg, params, {"tokens": jnp.asarray([ids], jnp.int32)})
+    lp = jax.nn.log_softmax(lg[0], axis=-1)
+    total = 0.0
+    for i, t in enumerate(cids):
+        total += float(lp[len(pids) - 1 + i, t])
+    return total
+
+
+@pytest.mark.parametrize("paged,prefix_cache", [
+    (False, False), (False, True), (True, False), (True, True),
+])
+def test_score_rows_match_forward_reference(score_setup, paged, prefix_cache):
+    cfg, params, tok = score_setup
+    eng = Engine(cfg, params, tok, max_seq=128, slots=4,
+                 paged=paged, prefix_cache=prefix_cache)
+    pairs = [("Q: is Paris in France?\nA:", " Yes"),
+             ("Q: is Paris in France?\nA:", " No"),
+             ("some other text", " maybe so")]
+    rows = eng.score_rows(pairs)
+    for (prompt, cont), row in zip(pairs, rows):
+        ref = _reference_logprob(cfg, params, tok, prompt, cont)
+        assert row.logprob == pytest.approx(ref, abs=2e-3)
+        assert row.cont_tokens == len(tok.encode(cont, bos=False))
+        assert len(row.token_logprobs) == row.cont_tokens
+        assert sum(row.token_logprobs) == pytest.approx(row.logprob, abs=1e-5)
+    if prefix_cache:
+        # second scoring of the same prompts reuses the radix cache
+        rows2 = eng.score_rows(pairs)
+        assert any(r.cached_tokens > 0 for r in rows2)
+        for r1, r2 in zip(rows, rows2):
+            assert r2.logprob == pytest.approx(r1.logprob, abs=2e-3)
+    if paged:
+        # score pages are released immediately: only interned prefix
+        # pages (plus the pool's null page) stay allocated
+        live = eng.pool.allocated_pages - 1
+        tree = (len(eng.prefix_cache.tree_pages())
+                if eng.prefix_cache is not None else 0)
+        assert live == tree
+
+
+def test_score_rows_ssm_family(score_setup):
+    """SSM configs (no KV cache, no paging/prefix cache) score through
+    the plain bucket prefill."""
+    cfg = get_smoke_config("mamba2-130m")
+    params = init_params(model_specs(cfg), KEY, jnp.float32)
+    tok = ByteTokenizer(cfg.vocab_size)
+    eng = Engine(cfg, params, tok, max_seq=128, slots=2)
+    rows = eng.score_rows([("state space", " Yes"), ("state space", " No")])
+    for (prompt, cont), row in zip(
+            [("state space", " Yes"), ("state space", " No")], rows):
+        ref = _reference_logprob(cfg, params, tok, prompt, cont)
+        assert row.logprob == pytest.approx(ref, abs=2e-3)
+
+
+def test_score_rows_validation(score_setup):
+    cfg, params, tok = score_setup
+    eng = Engine(cfg, params, tok, max_seq=64, slots=2)
+    with pytest.raises(ValueError):
+        eng.score_rows([])
+    with pytest.raises(ValueError):
+        eng.score_rows([("p", "c")] * 3)  # > slots
+    with pytest.raises(ValueError):
+        eng.score_rows([("p", "")])  # empty continuation
+    with pytest.raises(ValueError):
+        eng.score_rows([("x" * 200, " y")])  # > max_seq
+
+
+# ---------------------------------------------------------------------------
+# executor + EngineClient scoring
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def score_client(score_setup):
+    cfg, params, tok = score_setup
+    eng = Engine(cfg, params, tok, max_seq=128, slots=4)
+    pred = lambda a, b: (len(a) + len(b)) % 2 == 0
+    return EngineClient(eng, oracle=OracleLLM(pred, context_limit=128)), pred
+
+
+def test_executor_scoring_zero_decode_steps(score_client):
+    client, pred = score_client
+    prompts = [tuple_prompt(f"it{i}", f"that{i}", "match?") for i in range(6)]
+    handles = [client.submit_score(p, SCORE_CHOICES) for p in prompts]
+    base_decode = client.executor.stats.decode_steps
+    got = 0
+    for h in client.as_scored(handles):
+        resp = h.result()
+        assert resp.usage.completion_tokens == 0
+        assert resp.usage.scored_tokens > 0
+        # teacher-forcing analogue: reported logprobs are the oracle's
+        parsed = parse_tuple_prompt(h.prompt)
+        exp = client.oracle._score_impl(h.prompt, h.choices).logprobs
+        assert resp.logprobs == exp
+        assert (SCORE_CHOICES[resp.argmax()]
+                == client.oracle._answer_tuple(parsed[0], parsed[1]))
+        got += 1
+    assert got == len(prompts)
+    st = client.executor.stats
+    assert st.decode_steps == base_decode  # no decode slot ever occupied
+    assert st.score_requests >= 2 * len(prompts)
+    assert st.scored_tokens > 0
+
+
+def test_executor_score_submit_validation(score_client):
+    client, _ = score_client
+    ex = client.executor
+    with pytest.raises(ValueError):
+        ex.submit_score("p", "")
+    with pytest.raises(ValueError):
+        ex.submit_score("x" * 500, " Yes")  # over max_seq
+
+
+def test_executor_score_cancel(score_client):
+    client, _ = score_client
+    h = client.submit_score(tuple_prompt("a", "b", "match?"), SCORE_CHOICES)
+    assert h.cancel()
+    assert h.cancelled
+    assert list(client.as_scored([h])) == []
+    with pytest.raises(RuntimeError):
+        h.result()
+
+
+def test_engine_tuple_join_scoring_parity(score_client):
+    """Scored tuple join == decode tuple join on the engine, pair for
+    pair (both teacher-forced by the same oracle)."""
+    client, pred = score_client
+    r1 = [f"red{i}" for i in range(3)]
+    r2 = [f"blue{k}" for k in range(3)]
+    truth = {(i, k) for i in range(3) for k in range(3)
+             if client.oracle._decide(r1[i], r2[k])}
+    decode = tuple_join(r1, r2, "match?", client,
+                        max_answer_tokens=8, scoring=False)
+    scored = tuple_join(r1, r2, "match?", client, scoring=True)
+    assert decode.pairs == scored.pairs == truth
+    assert scored.meta["scoring"] is True
+    assert scored.ledger.completion_tokens == 0
+    assert scored.ledger.scored_tokens > 0
+    assert decode.ledger.completion_tokens > 0
+
+
+def test_tuple_join_env_switch(score_client, monkeypatch):
+    client, _ = score_client
+    monkeypatch.setenv("REPRO_SCORE_JOIN", "1")
+    res = tuple_join(["a"], ["b"], "match?", client)
+    assert res.meta.get("scoring") is True
+    monkeypatch.setenv("REPRO_SCORE_JOIN", "0")
+    res = tuple_join(["a"], ["b"], "match?", client, max_answer_tokens=8)
+    assert res.meta.get("scoring") is None
+
+
+# ---------------------------------------------------------------------------
+# confidence cascade
+# ---------------------------------------------------------------------------
+
+
+def _f1(pairs, truth):
+    if not pairs or not truth:
+        return 1.0 if pairs == truth else 0.0
+    tp = len(pairs & truth)
+    prec, rec = tp / len(pairs), tp / len(truth)
+    return 2 * prec * rec / (prec + rec) if prec + rec else 0.0
+
+
+def _cascade_fixture(n1=8, n2=8):
+    r1 = [f"item number {i}" for i in range(n1)]
+    r2 = [f"query str {k * 3}" for k in range(n2)]
+    pred = lambda a, b: (len(a) * 3 + len(b)) % 4 == 0
+    small = _oracle(pred, fn_rate=0.25, fp_rate=0.25, noise_seed=9)
+    large = _oracle(pred)
+    truth = {(i, k) for i in range(n1) for k in range(n2)
+             if pred(r1[i], r2[k])}
+    return r1, r2, pred, small, large, truth
+
+
+def test_cascade_threshold_endpoints():
+    r1, r2, pred, small, large, truth = _cascade_fixture()
+    j = "match?"
+    small_only = tuple_join(r1, r2, j, small, scoring=True)
+    large_only = tuple_join(r1, r2, j, large, scoring=True)
+    c0 = cascade_tuple_join(r1, r2, j, small, large, threshold=0.0)
+    c1 = cascade_tuple_join(r1, r2, j, small, large, threshold=1.0)
+    assert c0.pairs == small_only.pairs
+    assert c0.meta["escalated"] == 0
+    assert c0.meta["tiers"]["large"]["calls"] == 0
+    assert c1.pairs == large_only.pairs == truth
+    assert c1.meta["escalated"] == len(r1) * len(r2)
+
+
+def test_cascade_escalation_monotone_in_threshold():
+    r1, r2, pred, small, large, truth = _cascade_fixture()
+    prev = -1
+    for t in (0.0, 0.25, 0.5, 0.75, 1.0):
+        res = cascade_tuple_join(r1, r2, "match?", small, large, threshold=t)
+        assert res.meta["escalated"] >= prev
+        prev = res.meta["escalated"]
+
+
+def test_cascade_quality_and_cost():
+    """Mid threshold: quality within 1 F1 point of always-large, at a
+    fraction of the large model's scored pairs."""
+    r1, r2, pred, small, large, truth = _cascade_fixture()
+    res = cascade_tuple_join(r1, r2, "match?", small, large, threshold=0.5)
+    large_only = tuple_join(r1, r2, "match?", large, scoring=True)
+    assert _f1(res.pairs, truth) >= _f1(large_only.pairs, truth) - 0.01
+    total = res.meta["pairs_total"]
+    assert 0 < res.meta["escalated"] < total
+    # per-tier ledgers conserve the merged totals
+    s, l = res.meta["tiers"]["small"], res.meta["tiers"]["large"]
+    assert res.ledger.scored_tokens == s["scored_tokens"] + l["scored_tokens"]
+    assert res.ledger.prompt_tokens == s["prompt_tokens"] + l["prompt_tokens"]
+    # one scoring call per escalated pair (both choices in one response)
+    assert l["calls"] == res.meta["escalated"]
+
+
+def test_cascade_validation():
+    r1, r2, pred, small, large, truth = _cascade_fixture(2, 2)
+    with pytest.raises(ValueError):
+        cascade_tuple_join(r1, r2, "j", small, large, threshold=1.5)
+
+    class NoScore:
+        supports_scoring = False
+
+    with pytest.raises(ValueError):
+        cascade_tuple_join(r1, r2, "j", NoScore(), large)
+
+
+def test_cascade_escalated_decisions_match_always_large():
+    """Property: for any threshold, every escalated pair's final decision
+    equals always-large's decision, and non-escalated pairs equal
+    small-only's — the cascade never invents a third behavior."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    r1, r2, pred, small, large, truth = _cascade_fixture(5, 5)
+    j = "match?"
+    small_only = tuple_join(r1, r2, j, small, scoring=True).pairs
+    large_only = tuple_join(r1, r2, j, large, scoring=True).pairs
+
+    @given(st.floats(min_value=0.0, max_value=1.0,
+                     allow_nan=False, allow_infinity=False))
+    @settings(max_examples=25, deadline=None)
+    def check(threshold):
+        res = cascade_tuple_join(r1, r2, j, small, large,
+                                 threshold=threshold)
+        esc = set(res.meta["escalated_pairs"])
+        for p in esc:
+            assert (p in res.pairs) == (p in large_only)
+        for i in range(len(r1)):
+            for k in range(len(r2)):
+                if (i, k) not in esc:
+                    assert ((i, k) in res.pairs) == ((i, k) in small_only)
+
+    check()
