@@ -56,6 +56,7 @@ from repro.core.llm_client import (
 )
 from repro.core.lotus_join import lotus_join
 from repro.core.oracle import OracleLLM
+from repro.core.prefilter_join import prefilter_join, topk_candidates
 from repro.core.prompts import (
     NO_ANSWER,
     SCORE_CHOICES,
@@ -80,5 +81,6 @@ __all__ = [
     "SimulatedLLM", "synthetic_table", "tuple_join",
     "NO_ANSWER", "SCORE_CHOICES", "ScoreHandle", "ScoreResponse",
     "YES_ANSWER", "cascade_tuple_join", "classify_yes_no",
-    "margin_confidence", "parse_yes_no", "score_pairs", "scored_decision",
+    "margin_confidence", "parse_yes_no", "prefilter_join", "score_pairs",
+    "scored_decision", "topk_candidates",
 ]

@@ -236,5 +236,96 @@ def ads_scenario(seed: int = 13) -> Scenario:
     return sc
 
 
+# ---------------------------------------------------------------------------
+# Marketplace — scaled planted-match scenario for the prefilter join
+# ---------------------------------------------------------------------------
+#
+# The paper's three scenarios top out at 100×10 rows, where the full cross
+# product is trivially affordable.  The embedding-prefiltered join
+# (DESIGN.md §14) targets the regime where it is not: 10⁴×10³ rows is a
+# 10⁷-pair cross product.  Every row belongs to a planted category
+# (product × city); a pair matches iff the categories agree.  Ground truth
+# comes from the planted assignment — O(|truth|), never the brute-force
+# O(n1·n2) sweep of ``_truth_set``.
+
+_MARKET_PRODUCTS = [
+    "oak dining table", "leather office chair", "cast iron skillet",
+    "mechanical keyboard", "road bike frame", "acoustic guitar",
+    "espresso machine", "standing desk", "wool area rug",
+    "vintage turntable", "ceramic flower pot", "canvas wall tent",
+    "carbon fiber tripod", "velvet reading sofa", "copper stock pot",
+    "walnut bookshelf", "granite mortar set", "linen bed frame",
+    "bamboo cutting board", "steel tool cabinet", "marble chess set",
+    "rattan patio chair", "cedar storage chest", "brass desk lamp",
+    "slate serving board",
+]
+_MARKET_CITIES = [
+    "Berlin", "Lisbon", "Oslo", "Madrid", "Vienna",
+    "Prague", "Dublin", "Athens", "Warsaw", "Zurich",
+]
+
+
+def _market_fields(text: str) -> Optional[Tuple[str, str]]:
+    """Parse (product, city) out of an offer or a request; None otherwise."""
+    if text.startswith("Offering: "):
+        head, sep, tail = text.partition(" available in ")
+        if not sep:
+            return None
+        return head[len("Offering: "):], tail.partition(".")[0]
+    if text.startswith("Request: looking for "):
+        head, sep, tail = text.partition(" in ")
+        if not sep:
+            return None
+        return head[len("Request: looking for "):], tail.partition(".")[0]
+    return None
+
+
+def _market_match(offer: str, request: str) -> bool:
+    fo, fr = _market_fields(offer), _market_fields(request)
+    return fo is not None and fr is not None and fo == fr
+
+
+def marketplace_scenario(
+    n1: int = 10_000, n2: int = 1_000,
+    n_products: int = 25, n_cities: int = 10, seed: int = 17,
+) -> Scenario:
+    """Offers × requests with ``n_products · n_cities`` planted categories.
+
+    Defaults give 250 categories, ~40 offers and ~4 requests per category,
+    selectivity ≈ 1/250 — dense enough per category that a small top-k
+    candidate set can reach full recall, sparse enough globally that
+    verifying the cross product is 10⁷ model passes.
+    """
+    if not 1 <= n_products <= len(_MARKET_PRODUCTS):
+        raise ValueError(f"n_products must be in [1, {len(_MARKET_PRODUCTS)}]")
+    if not 1 <= n_cities <= len(_MARKET_CITIES):
+        raise ValueError(f"n_cities must be in [1, {len(_MARKET_CITIES)}]")
+    rng = random.Random(seed)
+    combos = [(p, c) for p in _MARKET_PRODUCTS[:n_products]
+              for c in _MARKET_CITIES[:n_cities]]
+    cat1 = [rng.randrange(len(combos)) for _ in range(n1)]
+    cat2 = [rng.randrange(len(combos)) for _ in range(n2)]
+    r1 = [
+        f"Offering: {combos[c][0]} available in {combos[c][1]}. "
+        f"Contact seller {i}." for i, c in enumerate(cat1)
+    ]
+    r2 = [
+        f"Request: looking for {combos[c][0]} in {combos[c][1]}. "
+        f"Buyer {k}." for k, c in enumerate(cat2)
+    ]
+    by_cat2: Dict[int, List[int]] = {}
+    for k, c in enumerate(cat2):
+        by_cat2.setdefault(c, []).append(k)
+    truth = {(i, k) for i, c in enumerate(cat1) for k in by_cat2.get(c, ())}
+    return Scenario(
+        name="marketplace",
+        r1=r1,
+        r2=r2,
+        condition="the offered item and city match the request",
+        predicate=_market_match,
+        truth=truth,
+    )
+
+
 def all_scenarios() -> List[Scenario]:
     return [emails_scenario(), reviews_scenario(), ads_scenario()]

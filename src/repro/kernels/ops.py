@@ -79,6 +79,11 @@ def top1_similarity(e1, e2):
     return _tk.top1_similarity(e1, e2, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_similarity(e1, e2, *, k):
+    return _tk.topk_similarity(e1, e2, k, interpret=_interpret())
+
+
 @jax.jit
 def similarity_matrix(e1, e2):
     """Dense fallback used by the embedding join for tiny tables."""

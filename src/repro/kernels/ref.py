@@ -159,3 +159,17 @@ def top1_sim_ref(e1, e2):
     """
     sim = e1.astype(jnp.float32) @ e2.astype(jnp.float32).T
     return jnp.argmax(sim, axis=1).astype(jnp.int32), jnp.max(sim, axis=1)
+
+
+def topk_sim_ref(e1, e2, k):
+    """Cosine top-k matches of every e1 row against e2 rows.
+
+    Materializes the full (M, N) similarity matrix and takes
+    ``lax.top_k`` per row (sorted descending, ties to the lower index) —
+    the exact-equality target for the streaming Pallas kernel.
+    Returns (idx: (M, min(k, N)) int32, sim: (M, min(k, N)) f32).
+    """
+    sim = jnp.einsum("md,nd->mn", e1.astype(jnp.float32),
+                     e2.astype(jnp.float32))
+    vals, idx = jax.lax.top_k(sim, min(k, e2.shape[0]))
+    return idx.astype(jnp.int32), vals

@@ -1,10 +1,26 @@
-"""Pallas kernel for the embedding join's top-1 cosine matching (§7.1).
+"""Pallas kernel for the embedding join/prefilter top-k cosine matching.
 
-The embedding-join baseline computes, for every row of table 1, the most
-similar row of table 2 (cosine).  For large tables the (M × N) similarity
-matrix should never hit HBM: the kernel streams N in blocks, keeps a
-running (max, argmax) per query row in VMEM scratch, and emits only the
-(M,) winners.  Grid: ``(n_m_blocks, n_n_blocks)``, N minor.
+The embedding-join baseline (§7.1) matches every row of table 1 to its
+single most similar row of table 2; the prefilter pipeline (DESIGN.md
+§14) generalizes this to the **k** most similar rows — the candidate set
+the LLM then verifies.  For large tables the (M × N) similarity matrix
+should never hit HBM: the kernel streams N in blocks, keeps a running
+k-best (value, index) list per query row in VMEM scratch, and emits only
+the (M, k) winners.  Grid: ``(n_m_blocks, n_n_blocks)``, N minor.
+
+Ragged shapes are handled by **padding, not block shrinking**: inputs
+are zero-padded up to the block multiple and the padded similarity
+columns are masked to ``NEG_INF`` so they can never enter the top-k.
+(The previous top-1 kernel shrank the block size until it divided the
+table length — ``while M % block_m: block_m -= 1`` — which degenerates
+to block size 1 on prime-length tables and explodes the grid.)
+
+The per-block merge is selection, not sorting: k unrolled
+(max, argmax, one-hot mask) passes over the concatenation of the running
+scratch and the masked block — VPU-friendly vector ops only, no gather.
+Ties break toward the lower column index (scratch entries come first in
+the concatenation and blocks stream in ascending index order), matching
+``jax.lax.top_k`` on the full similarity matrix exactly.
 """
 
 from __future__ import annotations
@@ -20,7 +36,7 @@ NEG_INF = -1e30
 
 
 def _kernel(e1_ref, e2_ref, idx_ref, sim_ref, best_scr, besti_scr,
-            *, block_n, n_n):
+            *, block_n, n_n, n_valid, k):
     ni = pl.program_id(1)
 
     @pl.when(ni == 0)
@@ -33,12 +49,22 @@ def _kernel(e1_ref, e2_ref, idx_ref, sim_ref, best_scr, besti_scr,
     sim = jax.lax.dot_general(e1, e2, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)  # (bm, bn)
     bm, bn = sim.shape
-    local_best = jnp.max(sim, axis=1, keepdims=True)                # (bm,1)
-    local_arg = jnp.argmax(sim, axis=1).reshape(bm, 1).astype(jnp.int32)
-    local_arg = local_arg + ni * block_n
-    improved = local_best > best_scr[...]
-    best_scr[...] = jnp.where(improved, local_best, best_scr[...])
-    besti_scr[...] = jnp.where(improved, local_arg, besti_scr[...])
+    col = ni * block_n + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    sim = jnp.where(col < n_valid, sim, NEG_INF)      # mask padded columns
+
+    work = jnp.concatenate([best_scr[...], sim], axis=1)       # (bm, k+bn)
+    work_idx = jnp.concatenate([besti_scr[...], col], axis=1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, work.shape, 1)
+    vals, idxs = [], []
+    for _ in range(k):  # k is static — unrolled selection passes
+        a = jnp.argmax(work, axis=1)                           # (bm,)
+        sel = iota == a[:, None]                               # one-hot
+        vals.append(jnp.max(work, axis=1, keepdims=True))
+        idxs.append(jnp.sum(jnp.where(sel, work_idx, 0), axis=1,
+                            keepdims=True).astype(jnp.int32))
+        work = jnp.where(sel, NEG_INF, work)
+    best_scr[...] = jnp.concatenate(vals, axis=1)
+    besti_scr[...] = jnp.concatenate(idxs, axis=1)
 
     @pl.when(ni == n_n - 1)
     def _finalize():
@@ -46,44 +72,67 @@ def _kernel(e1_ref, e2_ref, idx_ref, sim_ref, best_scr, besti_scr,
         sim_ref[...] = best_scr[...]
 
 
-def top1_similarity(
+def topk_similarity(
     e1: jax.Array,   # (M, D) — L2-normalized rows
     e2: jax.Array,   # (N, D)
+    k: int,
     *,
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = True,
 ):
-    """Returns (best_idx (M,) int32, best_sim (M,) fp32)."""
+    """Returns (best_idx (M, k') int32, best_sim (M, k') fp32), sorted by
+    descending similarity with ties broken toward the lower index;
+    ``k' = min(k, N)``."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
     M, D = e1.shape
     N = e2.shape[0]
+    k = min(k, N)
     block_m = min(block_m, M)
     block_n = min(block_n, N)
-    while M % block_m:
-        block_m -= 1
-    while N % block_n:
-        block_n -= 1
-    n_m, n_n = M // block_m, N // block_n
+    pad_m = -M % block_m
+    pad_n = -N % block_n
+    if pad_m:
+        e1 = jnp.pad(e1, ((0, pad_m), (0, 0)))
+    if pad_n:
+        e2 = jnp.pad(e2, ((0, pad_n), (0, 0)))
+    n_m, n_n = (M + pad_m) // block_m, (N + pad_n) // block_n
 
     idx, sim = pl.pallas_call(
-        functools.partial(_kernel, block_n=block_n, n_n=n_n),
+        functools.partial(_kernel, block_n=block_n, n_n=n_n, n_valid=N, k=k),
         grid=(n_m, n_n),
         in_specs=[
             pl.BlockSpec((block_m, D), lambda mi, ni: (mi, 0)),
             pl.BlockSpec((block_n, D), lambda mi, ni: (ni, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block_m, 1), lambda mi, ni: (mi, 0)),
-            pl.BlockSpec((block_m, 1), lambda mi, ni: (mi, 0)),
+            pl.BlockSpec((block_m, k), lambda mi, ni: (mi, 0)),
+            pl.BlockSpec((block_m, k), lambda mi, ni: (mi, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((M, 1), jnp.int32),
-            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M + pad_m, k), jnp.int32),
+            jax.ShapeDtypeStruct((M + pad_m, k), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((block_m, 1), jnp.float32),
-            pltpu.VMEM((block_m, 1), jnp.int32),
+            pltpu.VMEM((block_m, k), jnp.float32),
+            pltpu.VMEM((block_m, k), jnp.int32),
         ],
         interpret=interpret,
     )(e1, e2)
+    return idx[:M], sim[:M]
+
+
+def top1_similarity(
+    e1: jax.Array,
+    e2: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = True,
+):
+    """Returns (best_idx (M,) int32, best_sim (M,) fp32) — k=1 special
+    case of :func:`topk_similarity`."""
+    idx, sim = topk_similarity(e1, e2, 1, block_m=block_m,
+                               block_n=block_n, interpret=interpret)
     return idx[:, 0], sim[:, 0]

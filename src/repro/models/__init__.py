@@ -2,6 +2,7 @@ from repro.models.model import (
     cache_specs,
     chunked_prefill,
     decode_step,
+    encode,
     forward,
     model_specs,
     n_stacks,
@@ -18,7 +19,7 @@ from repro.models.params import (
 )
 
 __all__ = [
-    "cache_specs", "chunked_prefill", "decode_step", "forward",
+    "cache_specs", "chunked_prefill", "decode_step", "encode", "forward",
     "model_specs", "n_stacks", "prefill", "verify_step", "Spec",
     "abstract_params", "init_params", "param_count", "param_shardings",
     "stack_specs",

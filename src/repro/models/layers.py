@@ -346,6 +346,25 @@ def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) 
 
 
 # ---------------------------------------------------------------------------
+# Top-k similarity (embedding prefilter)
+# ---------------------------------------------------------------------------
+
+
+def topk_similarity(e1: jax.Array, e2: jax.Array, k: int):
+    """XLA fallback for the streaming top-k kernel (DESIGN.md §14).
+
+    e1: (M, D); e2: (N, D) — L2-normalized rows.  Dense (M, N)
+    similarity then per-row ``lax.top_k`` (descending, ties to the lower
+    index) — bit-identical to the Pallas kernel and the ref oracle.
+    Returns (idx: (M, min(k, N)) int32, sim: (M, min(k, N)) f32).
+    """
+    sim = jnp.einsum("md,nd->mn", e1.astype(jnp.float32),
+                     e2.astype(jnp.float32))
+    vals, idx = jax.lax.top_k(sim, min(k, e2.shape[0]))
+    return idx.astype(jnp.int32), vals
+
+
+# ---------------------------------------------------------------------------
 # Embedding / unembedding / loss
 # ---------------------------------------------------------------------------
 

@@ -180,6 +180,36 @@ def forward(
     return logits, aux
 
 
+def encode(
+    cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+    valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Sequence embeddings: mean-pooled final-norm hidden states → (B, D).
+
+    Runs the same backbone as :func:`forward` but stops before the
+    unembedding: the final-norm hidden states are mean-pooled over each
+    row's valid positions and returned in fp32 — the serving tier's
+    embedding surface (``Engine.embed_rows``, DESIGN.md §14).
+
+    ``valid_len`` (B,) supports right-padded ragged batches exactly like
+    :func:`prefill`: every layer family here is causal (attention masks,
+    SSM scans), so hidden states at positions ``< valid_len`` are
+    unaffected by the padding, and only those positions are pooled.
+    No KV cache is allocated — encode is a pure prefill-shaped pass.
+    """
+    x = _embed_inputs(cfg, params, batch)
+    Bsz, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+    x, _ = _backbone(cfg, params, x, positions)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    xf = x.astype(jnp.float32)
+    if valid_len is None:
+        return jnp.mean(xf, axis=1)
+    mask = (positions < valid_len[:, None]).astype(jnp.float32)   # (B, S)
+    denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return (xf * mask[..., None]).sum(axis=1) / denom
+
+
 # ---------------------------------------------------------------------------
 # KV / state caches
 # ---------------------------------------------------------------------------

@@ -11,7 +11,12 @@ from repro.serve.executor import (
     ExecutorStats,
     ServeHandle,
 )
-from repro.serve.client import EngineClient, EngineHandle, EngineScoreHandle
+from repro.serve.client import (
+    EngineClient,
+    EngineEmbedder,
+    EngineHandle,
+    EngineScoreHandle,
+)
 from repro.serve.cluster import (
     Cluster,
     ClusterClient,
@@ -43,6 +48,7 @@ __all__ = [
     "DecodeState",
     "Engine",
     "EngineClient",
+    "EngineEmbedder",
     "EngineHandle",
     "EngineScoreHandle",
     "ExecutorStats",

@@ -22,9 +22,11 @@ from __future__ import annotations
 
 from typing import Iterable, Iterator, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.accounting import Usage
 from repro.core.llm_client import (
-    LLMClient, LLMHandle, LLMResponse, ScoreHandle, ScoreResponse,
+    Embedder, LLMClient, LLMHandle, LLMResponse, ScoreHandle, ScoreResponse,
 )
 from repro.core.oracle import OracleLLM
 from repro.serve.engine import Engine, GenResult
@@ -225,3 +227,76 @@ class EngineClient(LLMClient):
     def invoke(self, prompt: str, *, max_tokens: int,
                stop: Optional[str] = None) -> LLMResponse:
         return self.submit(prompt, max_tokens=max_tokens, stop=stop).result()
+
+
+class EngineEmbedder(Embedder):
+    """Embedder over the serving tier (DESIGN.md §14).
+
+    Each text runs the hosted model's backbone through the engine's
+    bucketed ragged encode pass (:meth:`Engine.embed_rows`): the fp32
+    mean-pooled final-norm hidden states are the embedding vector,
+    L2-normalized host-side so cosine similarity is a dot product (the
+    layout the ``topk_sim`` kernel and the NumPy matching path expect).
+
+    ``backend`` may be an :class:`~repro.serve.engine.Engine`, an
+    :class:`EngineClient` (its engine is used), a
+    :class:`~repro.serve.cluster.Cluster`, or a
+    :class:`~repro.serve.cluster.ClusterClient` — cluster backends
+    round-robin embedding batches over alive replicas under the replica
+    locks.  Token accounting mirrors embedding APIs: every text's real
+    tokenized length accumulates in :attr:`tokens_read`, which the
+    embedding/prefilter joins record on their ledgers (one call per
+    table, input tokens only).
+
+    Works for every hosted family — SSM and hybrid included: encode is a
+    pure prefill-shaped pass with no KV cache, so none of the
+    cache-layout gates apply.
+    """
+
+    def __init__(self, backend):
+        engine = getattr(backend, "engine", None)
+        cluster = getattr(backend, "cluster", None)
+        if engine is not None:                      # EngineClient
+            self._embed_rows = engine.embed_rows
+            self._batch = engine.slots
+            cfg = engine.cfg
+        elif cluster is not None:                   # ClusterClient
+            self._embed_rows = cluster.embed_rows
+            self._batch = sum(e.slots for e in cluster.engines)
+            cfg = cluster.engines[0].cfg
+        elif hasattr(backend, "embed_rows"):        # Engine or Cluster
+            self._embed_rows = backend.embed_rows
+            engines = getattr(backend, "engines", None)
+            if engines is not None:                 # Cluster
+                self._batch = sum(e.slots for e in engines)
+                cfg = engines[0].cfg
+            else:                                   # Engine
+                self._batch = backend.slots
+                cfg = backend.cfg
+        else:
+            raise TypeError(
+                f"EngineEmbedder backend must be an Engine, EngineClient, "
+                f"Cluster, or ClusterClient; got {type(backend).__name__}")
+        self.dim = cfg.d_model
+        self.batches = 0
+        self._tokens_read = 0
+
+    def embed(self, texts: Sequence[str]) -> List[List[float]]:
+        out: List[List[float]] = []
+        for start in range(0, len(texts), self._batch):
+            chunk = list(texts[start:start + self._batch])
+            if not chunk:
+                break
+            vecs, lens = self._embed_rows(chunk)
+            self.batches += 1
+            self._tokens_read += sum(lens)
+            vecs = np.asarray(vecs, np.float64)
+            norms = np.linalg.norm(vecs, axis=1, keepdims=True)
+            vecs = np.where(norms > 0, vecs / np.where(norms > 0, norms, 1.0),
+                            vecs)
+            out.extend(v.tolist() for v in vecs)
+        return out
+
+    @property
+    def tokens_read(self) -> int:
+        return self._tokens_read

@@ -55,7 +55,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.accounting import Ledger, Usage
 from repro.core.llm_client import (
@@ -224,6 +226,36 @@ class Cluster:
     @property
     def replicas_alive(self) -> int:
         return sum(1 for rep in self._replicas if rep.alive)
+
+    def embed_rows(
+        self, texts: Sequence[str]
+    ) -> Tuple[np.ndarray, List[int]]:
+        """Embed arbitrarily many texts across the cluster.
+
+        Batches of up to ``engine.slots`` texts round-robin over the
+        alive replicas, each batch one :meth:`Engine.embed_rows` call
+        made under that replica's lock (workers hold it only
+        transiently, so a direct engine call is safe and serializes
+        against in-flight decode steps).  Embedding is synchronous and
+        outside the failover machinery — a replica failure mid-batch
+        propagates to the caller.
+        """
+        alive = [rep for rep in self._replicas if rep.alive]
+        if not alive:
+            raise RuntimeError("embed_rows: no alive replicas")
+        vecs: List[np.ndarray] = []
+        lens: List[int] = []
+        start, turn = 0, 0
+        while start < len(texts):
+            rep = alive[turn % len(alive)]
+            turn += 1
+            chunk = list(texts[start:start + rep.engine.slots])
+            with rep.lock:
+                v, l = rep.engine.embed_rows(chunk)
+            vecs.append(v)
+            lens.extend(l)
+            start += len(chunk)
+        return np.concatenate(vecs, axis=0), lens
 
     # ------------------------------------------------------------------
     # Submission surface

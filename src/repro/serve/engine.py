@@ -56,7 +56,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.llm_client import cancel_unfinished
-from repro.models import chunked_prefill, decode_step, prefill, verify_step
+from repro.models import chunked_prefill, decode_step, encode, prefill, verify_step
 from repro.models.model import KV_ONLY_FAMILIES, cache_specs
 from repro.models.params import Spec, is_spec
 from repro.serve.prefix_cache import PagedKVPool, RadixPrefixCache
@@ -406,6 +406,16 @@ class Engine:
                     jnp.take_along_axis(lg, idx[:, :, None], axis=1),
                     axis=-1),
                 tgt[:, :, None], axis=2)[..., 0])
+        # embedding surface (DESIGN.md §14): the same bucketed ragged
+        # batch shape as prefill, but no KV cache and no unembed — the
+        # backbone's final-norm hidden states come back mean-pooled per
+        # row.  Shape-specialized per (slots, bucket) like every other
+        # closure here.
+        self._encode = jax.jit(
+            lambda p, toks, vlen: encode(
+                cfg, p, {"tokens": toks}, valid_len=vlen
+            )
+        )
         self._decode = jax.jit(
             lambda p, cache, toks, act: decode_step(cfg, p, cache, toks, active=act)
         )
@@ -671,7 +681,40 @@ class Engine:
                     self.pool.decref(t)
         return rows
 
-    # ---------------------------- dense path --------------------------
+    def embed_rows(
+        self, texts: Sequence[str]
+    ) -> Tuple[np.ndarray, List[int]]:
+        """Embed up to ``slots`` texts in ONE bucketed encode pass.
+
+        Each text runs the full backbone as a ragged right-padded row
+        (same bucketing as prefill); the fp32 mean-pooled final-norm
+        hidden states come back as a ``(len(texts), d_model)`` array
+        together with each row's prompt-token count — the serving tier's
+        embedding surface (DESIGN.md §14), consumed by
+        :class:`repro.serve.client.EngineEmbedder`.
+
+        No KV cache or decode slot is touched: embeddings never join the
+        decode batch, so the pass is cache-free and releases nothing.
+        The batch is padded to ``slots`` rows so the jitted encode
+        compiles once per prefill bucket.
+        """
+        if not 0 < len(texts) <= self.slots:
+            raise ValueError(f"embed_rows takes 1..{self.slots} texts")
+        ids = [self.tokenizer.encode(t) for t in texts]
+        lens = [len(i) for i in ids]
+        if max(lens) > self.max_seq:
+            raise ValueError(
+                f"text of {max(lens)} tokens exceeds engine max_seq "
+                f"{self.max_seq}")
+        L = _bucket(max(lens), self.prefill_buckets)
+        toks = np.zeros((self.slots, L), np.int32)
+        vlen = np.zeros((self.slots,), np.int32)
+        for r, seq in enumerate(ids):
+            toks[r, :len(seq)] = seq
+            vlen[r] = len(seq)
+        vecs = np.asarray(self._encode(
+            self.params, jnp.asarray(toks), jnp.asarray(vlen)))
+        return vecs[:len(texts)], lens
     def _prefill_rows_dense(self, ids: List[List[int]], lens: List[int],
                             limits: Optional[List[int]] = None,
                             all_logits: bool = False):

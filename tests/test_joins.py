@@ -155,6 +155,39 @@ def test_embedding_join_modes():
     assert one.pairs <= both.pairs
 
 
+def test_embedding_join_ledger_one_call_per_table():
+    """Regression: a single record() plus a manual ``calls += 1`` used to
+    report the embed cost as one merged call; each table embed is its own
+    embedding-API call."""
+    r1, r2, pred, truth = _scenario(6, 6, 2, 0.3)
+    res = embedding_join(r1, r2, "", mode="both")
+    assert res.ledger.calls == 2
+    assert res.ledger.prompt_tokens > 0
+    assert res.ledger.completion_tokens == 0
+
+
+def test_embedding_join_unknown_mode_raises():
+    """Regression: ``mode="r3"`` used to fall through both branches and
+    silently return an empty join."""
+    r1, r2, pred, truth = _scenario(4, 4, 0, 0.3)
+    with pytest.raises(ValueError):
+        embedding_join(r1, r2, "", mode="r3")
+
+
+def test_embedding_join_excludes_zero_norm_rows():
+    """Regression: rows that embed to the zero vector (cosine undefined)
+    used to match whatever argmax returned for an all-zero column."""
+    r1 = ["red item", "", "blue item"]
+    r2 = ["", "query red", "query blue"]
+    res = embedding_join(r1, r2, "", mode="both")
+    assert all(i != 1 and k != 0 for i, k in res.pairs)
+    assert res.meta["excluded_r1"] == 1
+    assert res.meta["excluded_r2"] == 1
+    # non-degenerate rows still all match in the directed mode
+    one = embedding_join(["red", "blue"], ["red", "blue"], "", mode="r1")
+    assert len(one.pairs) == 2
+
+
 def test_generate_statistics_measures_data():
     r1 = ["one two three"] * 10
     r2 = ["a b c d e"] * 20

@@ -313,6 +313,97 @@ def test_top1_similarity(M, N, D):
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)
 
 
+def _lattice(key, shape):
+    """Quarter-integer entries in [-1, 1]: every dot product is exactly
+    representable in f32, so blocked and dense contractions round
+    identically (bit-parity is testable) and duplicated rows are *true*
+    ties (the tie-break order is testable)."""
+    return jax.random.randint(key, shape, -4, 5).astype(jnp.float32) / 4.0
+
+
+def _topk_all(e1, e2, k):
+    """(kernel, XLA fallback, reference) results for one input."""
+    from repro.models import layers as L
+
+    return (ops.topk_similarity(e1, e2, k=k),
+            L.topk_similarity(e1, e2, k),
+            ref.topk_sim_ref(e1, e2, k))
+
+
+def _assert_topk_exact(e1, e2, k):
+    (ki, ksim), (fi, fsim), (gi, gsim) = _topk_all(e1, e2, k)
+    k_eff = min(k, e2.shape[0])
+    assert ki.shape == fi.shape == gi.shape == (e1.shape[0], k_eff)
+    assert bool(jnp.all(ki == gi)) and bool(jnp.all(fi == gi))
+    # bit-exact on lattice inputs, kernel AND fallback
+    assert bool(jnp.all(ksim == gsim)) and bool(jnp.all(fsim == gsim))
+
+
+# prime/ragged shapes exercise the padding path (the old block-shrink
+# loops degenerated to 1-wide blocks on prime extents); (1, 7, 8) pins
+# the M=1 contraction layout; (257, 259, 8) spans multiple 256-blocks
+@pytest.mark.parametrize("M,N,D", [
+    (16, 16, 8), (32, 48, 16), (64, 30, 32),
+    (17, 13, 8), (31, 29, 16), (97, 101, 24),
+    (257, 259, 8), (5, 3, 4), (1, 7, 8),
+])
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_topk_similarity_exact(M, N, D, k):
+    ks = jax.random.split(KEY, 2)
+    _assert_topk_exact(_lattice(ks[0], (M, D)), _lattice(ks[1], (N, D)), k)
+
+
+@pytest.mark.parametrize("M,N,D,k", [
+    (5, 3, 4, 25), (31, 29, 16, 1000), (16, 16, 8, 16),
+])
+def test_topk_k_exceeds_n(M, N, D, k):
+    """k >= N returns exactly N columns: a full similarity argsort."""
+    ks = jax.random.split(KEY, 2)
+    _assert_topk_exact(_lattice(ks[0], (M, D)), _lattice(ks[1], (N, D)), k)
+
+
+@pytest.mark.parametrize("M", [1, 33])
+@pytest.mark.parametrize("k", [1, 3, 8, 25, 40])
+def test_topk_ties_break_to_lower_index(M, k):
+    """Duplicated e2 rows are exact ties on lattice inputs; the kernel
+    must order them lower-index-first, matching ``jax.lax.top_k``."""
+    ks = jax.random.split(KEY, 2)
+    e1 = _lattice(ks[0], (M, 8))
+    base = _lattice(ks[1], (5, 8))
+    e2 = jnp.tile(base, (5, 1))  # 25 rows, each one of 5 distinct vectors
+    _assert_topk_exact(e1, e2, k)
+
+
+def test_topk_normalized_gaussian():
+    """Continuous inputs: indices still agree exactly (no measure-zero
+    ties), similarities to float tolerance."""
+    ks = jax.random.split(KEY, 2)
+    e1 = jax.random.normal(ks[0], (64, 32))
+    e2 = jax.random.normal(ks[1], (50, 32))
+    e1 = e1 / jnp.linalg.norm(e1, axis=1, keepdims=True)
+    e2 = e2 / jnp.linalg.norm(e2, axis=1, keepdims=True)
+    (ki, ksim), (fi, fsim), (gi, gsim) = _topk_all(e1, e2, 8)
+    assert bool(jnp.all(ki == gi)) and bool(jnp.all(fi == gi))
+    np.testing.assert_allclose(np.asarray(ksim), np.asarray(gsim), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fsim), np.asarray(gsim), atol=1e-6)
+
+
+def test_top1_is_topk_column_zero():
+    ks = jax.random.split(KEY, 2)
+    e1, e2 = _lattice(ks[0], (31, 16)), _lattice(ks[1], (29, 16))
+    i1, s1 = ops.top1_similarity(e1, e2)
+    ik, sk = ops.topk_similarity(e1, e2, k=1)
+    assert bool(jnp.all(i1 == ik[:, 0])) and bool(jnp.all(s1 == sk[:, 0]))
+
+
+def test_topk_rejects_bad_k():
+    from repro.kernels import topk_sim
+
+    e = jnp.ones((4, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        topk_sim.topk_similarity(e, e, 0)
+
+
 def test_flash_attention_inside_model():
     """cfg.use_pallas routes the model's attention through the kernel."""
     import dataclasses

@@ -1,0 +1,261 @@
+"""Embedding-prefiltered join pipeline (DESIGN.md §14): candidate
+generation semantics, recall-vs-k monotonicity, parity with the block
+join at degenerate k, ledger accounting, the scored/decode/cascade
+verification paths, the scaled marketplace scenario's planted truth,
+and the EngineEmbedder serving path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    HashEmbedder,
+    OracleLLM,
+    block_join,
+    embedding_join,
+    prefilter_join,
+    topk_candidates,
+)
+from repro.data.scenarios import (
+    _market_match,
+    _truth_set,
+    all_scenarios,
+    marketplace_scenario,
+)
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import Engine, EngineClient, EngineEmbedder
+
+KEY = jax.random.PRNGKey(9)
+
+
+@pytest.fixture(scope="module")
+def market():
+    return marketplace_scenario(n1=120, n2=60, n_products=5, n_cities=4,
+                                seed=3)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_smoke_config("mamba2-130m")
+    params = init_params(model_specs(cfg), KEY, jnp.float32)
+    tok = ByteTokenizer(cfg.vocab_size)
+    return cfg, params, tok
+
+
+# ---------------------------------------------------------------------------
+# scaled marketplace scenario
+# ---------------------------------------------------------------------------
+
+
+def test_marketplace_planted_truth_matches_predicate():
+    sc = marketplace_scenario(n1=80, n2=40, n_products=4, n_cities=3, seed=1)
+    assert sc.truth == _truth_set(_market_match, sc.r1, sc.r2)
+    assert 0.0 < sc.selectivity < 1.0
+
+
+def test_marketplace_validates_sizes():
+    with pytest.raises(ValueError):
+        marketplace_scenario(n1=10, n2=10, n_products=999)
+    with pytest.raises(ValueError):
+        marketplace_scenario(n1=10, n2=10, n_cities=0)
+
+
+# ---------------------------------------------------------------------------
+# candidate generation
+# ---------------------------------------------------------------------------
+
+
+def test_topk_candidates_modes_and_validation():
+    emb = HashEmbedder()
+    e1 = np.asarray(emb.embed(["red apple", "green pear", "blue sky"]))
+    e2 = np.asarray(emb.embed(["red apple pie", "clear blue sky"]))
+    both = topk_candidates(e1, e2, 1)
+    only1 = topk_candidates(e1, e2, 1, mode="r1")
+    only2 = topk_candidates(e1, e2, 1, mode="r2")
+    assert only1 | only2 == both
+    assert len(only1) == 3 and len(only2) == 2  # one partner per valid row
+    with pytest.raises(ValueError):
+        topk_candidates(e1, e2, 0)
+    with pytest.raises(ValueError):
+        topk_candidates(e1, e2, 1, mode="r3")
+
+
+def test_topk_candidates_excludes_zero_norm_rows():
+    emb = HashEmbedder()
+    e1 = np.asarray(emb.embed(["red", "", "blue"]))
+    e2 = np.asarray(emb.embed(["", "red", "blue"]))
+    cands = topk_candidates(e1, e2, 5)
+    assert cands and all(i != 1 and k != 0 for i, k in cands)
+    assert topk_candidates(np.zeros((3, 4)), e2, 2) == set()
+
+
+def test_topk_candidates_kernel_path_agrees(market):
+    emb = HashEmbedder()
+    e1 = np.asarray(emb.embed(market.r1))
+    e2 = np.asarray(emb.embed(market.r2))
+    assert (topk_candidates(e1, e2, 4, use_kernel=True)
+            == topk_candidates(e1, e2, 4))
+
+
+# ---------------------------------------------------------------------------
+# prefilter join: recall/quality/accounting
+# ---------------------------------------------------------------------------
+
+
+def test_prefilter_recall_monotone_in_k(market):
+    oracle = OracleLLM(market.predicate, context_limit=100_000)
+    prev = -1.0
+    for k in (1, 2, 4, 8, 16, 60):
+        res = prefilter_join(market.r1, market.r2, market.condition,
+                             oracle, k=k)
+        cand = set(res.meta["candidate_pairs"])
+        recall = len(cand & market.truth) / len(market.truth)
+        assert recall >= prev - 1e-12
+        prev = recall
+        # exact-oracle verification admits no false positives
+        assert res.pairs <= market.truth
+        assert res.pairs == cand & market.truth
+    # k >= |r2| degenerates to the full cross product: perfect recall
+    assert prev == 1.0
+
+
+def test_prefilter_matches_block_join_on_seed_scenarios():
+    """At degenerate k the prefilter must reproduce the block join
+    exactly on the paper's three scenarios."""
+    for sc in all_scenarios():
+        oracle = OracleLLM(sc.predicate, context_limit=100_000)
+        res = prefilter_join(sc.r1, sc.r2, sc.condition, oracle,
+                             k=max(len(sc.r1), len(sc.r2)))
+        blk = block_join(sc.r1, sc.r2, sc.condition,
+                         OracleLLM(sc.predicate, context_limit=100_000),
+                         8, 8)
+        assert res.pairs == blk.pairs == sc.truth
+        assert res.meta["candidate_fraction"] == 1.0
+
+
+def test_prefilter_beats_argmax_embedding_join(market):
+    """The embedding baseline *decides* with argmax; the prefilter only
+    *generates* with top-k and lets the LLM decide."""
+    oracle = OracleLLM(market.predicate, context_limit=100_000)
+    res = prefilter_join(market.r1, market.r2, market.condition, oracle, k=8)
+    base = embedding_join(market.r1, market.r2, market.condition)
+    assert res.f1(market.truth) > base.f1(market.truth)
+
+
+def test_prefilter_ledger_accounting(market):
+    oracle = OracleLLM(market.predicate, context_limit=100_000)
+    res = prefilter_join(market.r1, market.r2, market.condition, oracle, k=4)
+    # two embedding calls + one scoring call per candidate, zero decode
+    assert res.ledger.calls == 2 + res.meta["candidates"]
+    assert res.ledger.completion_tokens == 0
+    assert res.ledger.scored_tokens > 0
+    assert res.meta["scoring"] is True
+    emb = HashEmbedder()
+    emb.embed(market.r1)
+    emb.embed(market.r2)
+    embed_tokens = emb.tokens_read
+    assert res.ledger.prompt_tokens > embed_tokens > 0
+
+
+def test_prefilter_decode_fallback_matches_scoring(market):
+    mk = lambda: OracleLLM(market.predicate, context_limit=100_000)
+    scored = prefilter_join(market.r1, market.r2, market.condition, mk(),
+                            k=4)
+    decoded = prefilter_join(market.r1, market.r2, market.condition, mk(),
+                             k=4, scoring=False, max_answer_tokens=4)
+    assert decoded.pairs == scored.pairs
+    assert decoded.ledger.completion_tokens > 0
+    assert decoded.ledger.scored_tokens == 0
+
+
+def test_prefilter_cascade_over_candidates(market):
+    noisy = OracleLLM(market.predicate, context_limit=100_000,
+                      fn_rate=0.3, fp_rate=0.3, noise_seed=11)
+    exact = OracleLLM(market.predicate, context_limit=100_000)
+    res = prefilter_join(market.r1, market.r2, market.condition, noisy,
+                         k=60, large=exact, threshold=0.5)
+    # wrong noisy decisions sit below threshold: escalation corrects them
+    assert res.pairs == market.truth
+    assert res.meta["escalated"] > 0
+    assert res.meta["tiers"]["large"]["calls"] == res.meta["escalated"]
+
+
+def test_prefilter_validation(market):
+    oracle = OracleLLM(market.predicate)
+    with pytest.raises(ValueError):
+        prefilter_join(market.r1, market.r2, "", oracle, mode="r3")
+    with pytest.raises(ValueError):
+        prefilter_join(market.r1, market.r2, "", oracle, k=0)
+    with pytest.raises(ValueError):
+        prefilter_join(market.r1, market.r2, "", oracle,
+                       large=oracle, threshold=1.5)
+
+
+# ---------------------------------------------------------------------------
+# EngineEmbedder serving path
+# ---------------------------------------------------------------------------
+
+
+def test_engine_embedder_determinism_and_accounting(engine_setup):
+    cfg, params, tok = engine_setup
+    eng = Engine(cfg, params, tok, max_seq=128, slots=4)
+    texts = ["hello world", "a longer text to embed right here",
+             "x", "hello world"] * 2
+    emb = EngineEmbedder(eng)
+    vecs = np.asarray(emb.embed(texts))
+    assert vecs.shape == (len(texts), cfg.d_model)
+    assert emb.batches == 2  # 8 texts through 4 slots
+    assert emb.tokens_read == sum(len(tok.encode(t)) for t in texts)
+    np.testing.assert_allclose(np.linalg.norm(vecs, axis=1), 1.0, atol=1e-9)
+    # identical texts embed identically, across different batches
+    np.testing.assert_array_equal(vecs[0], vecs[3])
+    np.testing.assert_array_equal(vecs[:4], vecs[4:])
+    # a second pass reproduces the vectors exactly
+    np.testing.assert_array_equal(np.asarray(emb.embed(texts)), vecs)
+
+
+def test_engine_embedder_bucket_independence(engine_setup):
+    """The same text embeds identically alone (small bucket) and next to
+    a long neighbour (large bucket): right-padding never leaks in."""
+    cfg, params, tok = engine_setup
+    eng = Engine(cfg, params, tok, max_seq=128, slots=4)
+    short = "tiny"
+    alone, _ = eng.embed_rows([short])
+    padded, _ = eng.embed_rows([short, "a much longer companion text " * 3])
+    np.testing.assert_allclose(alone[0], padded[0], atol=1e-5)
+
+
+def test_engine_embedder_backend_validation(engine_setup):
+    cfg, params, tok = engine_setup
+    eng = Engine(cfg, params, tok, max_seq=128, slots=2)
+    assert EngineEmbedder(EngineClient(eng)).dim == cfg.d_model
+    with pytest.raises(TypeError):
+        EngineEmbedder(object())
+    with pytest.raises(ValueError):
+        eng.embed_rows([])
+    with pytest.raises(ValueError):
+        eng.embed_rows(["a"] * 3)  # > slots
+    with pytest.raises(ValueError):
+        eng.embed_rows(["x" * 500])  # > max_seq
+
+
+def test_prefilter_engine_end_to_end(engine_setup):
+    """Marketplace through the serving tier: engine embeddings for
+    candidates, teacher-forced engine scoring for verification."""
+    cfg, params, tok = engine_setup
+    sc = marketplace_scenario(n1=24, n2=12, n_products=3, n_cities=2, seed=5)
+    eng = Engine(cfg, params, tok, max_seq=512, slots=4)
+    client = EngineClient(
+        eng, oracle=OracleLLM(sc.predicate, context_limit=100_000))
+    emb = EngineEmbedder(client)
+    res = prefilter_join(sc.r1, sc.r2, sc.condition, client, emb, k=3)
+    assert client.executor.stats.decode_steps == 0
+    assert res.ledger.calls == 2 + res.meta["candidates"]
+    assert res.ledger.scored_tokens > 0
+    # oracle-forced verification: no false positives whatever the
+    # random-weight embeddings propose
+    assert res.pairs <= sc.truth
+    assert res.precision(sc.truth) == 1.0 if res.pairs else True
