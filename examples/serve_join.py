@@ -23,12 +23,21 @@ data-parallel serving cluster (DESIGN.md §12): N engine replicas behind
 the prefix-affinity router, one replica killed mid-join to demonstrate
 failover, merged accounting printed per replica.
 
+With ``--tp N`` every engine (single and cluster replicas alike) runs
+tensor-parallel over its own contiguous slice of N devices, optionally
+int8-weight-resident via ``REPRO_QUANT=1`` — the cluster becomes DP
+replicas × TP shards (DESIGN.md §15).  Token outputs are identical to
+``--tp 1``; on CPU force host devices first.
+
     PYTHONPATH=src python examples/serve_join.py
     PYTHONPATH=src python examples/serve_join.py --spec-decode   # DESIGN.md §11
     PYTHONPATH=src python examples/serve_join.py --replicas 2    # DESIGN.md §12
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_join.py --replicas 2 --tp 2
 """
 
 import argparse
+import os
 import threading
 import time
 
@@ -52,14 +61,23 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=1,
                     help="also run the block join through a cluster of N "
                          "engine replicas with failover (DESIGN.md §12)")
+    ap.add_argument("--tp", type=int,
+                    default=int(os.environ.get("REPRO_TP", "1")),
+                    help="tensor-parallel degree per engine (DESIGN.md §15; "
+                         "default from REPRO_TP)")
     args = ap.parse_args()
 
     sc = ads_scenario()
     cfg = get_smoke_config("granite-3-2b")
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0), jnp.float32)
     tok = ByteTokenizer(cfg.vocab_size)
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(jax.devices()[:args.tp], tp=args.tp)
     engine = Engine(cfg, params, tok, max_seq=1024, slots=4,
-                    spec_decode=args.spec_decode)
+                    spec_decode=args.spec_decode, mesh=mesh)
     oracle = OracleLLM(sc.predicate, context_limit=1024)
     client = EngineClient(engine, oracle=oracle)
 
@@ -107,7 +125,7 @@ def main() -> None:
         print(f"\n=== serving cluster: {args.replicas} replicas, "
               f"prefix-affinity routing, one killed mid-join ===")
         with Cluster.replicate(cfg, params, tok, args.replicas,
-                               max_seq=1024, slots=4,
+                               tp=args.tp, max_seq=1024, slots=4,
                                spec_decode=args.spec_decode) as cluster:
             cclient = ClusterClient(cluster, oracle=oracle)
             cluster.hold()  # gang submission: deterministic routing

@@ -78,7 +78,10 @@ def topk_candidates(
     if not len(i1) or not len(i2):
         return cands
 
-    if use_kernel:
+    from repro.sharding.logical import mesh_active
+
+    # same kernel-vs-XLA mesh policy as the model blocks (DESIGN.md §15)
+    if use_kernel and not mesh_active():
         from repro.kernels import ops as kops
 
         tk = lambda a, b, kk: kops.topk_similarity(a, b, k=kk)

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, ARCH_IDS, InputShape, ModelConfig, cells, get_config
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_serving_mesh
 from repro.models import cache_specs, decode_step, model_specs, prefill
 from repro.models.params import abstract_params, param_count
 from repro.sharding.logical import axes_to_sharding, use_mesh
@@ -236,18 +236,30 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "", rule_overrides: Optional[Dict[str, Any]] = None,
              quant: bool = False, accum: Optional[int] = None,
              cfg_overrides: Optional[Dict[str, Any]] = None,
-             probes: bool = True) -> Dict[str, Any]:
+             probes: bool = True,
+             serving_tp: Optional[int] = None) -> Dict[str, Any]:
     cfg = get_config(arch)
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
     shape = SHAPES[shape_name]
-    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if serving_tp is not None:
+        # serving topology (DESIGN.md §15): one replica's TP-only mesh —
+        # no "data" axis, so FSDP rules drop to replication and the
+        # compile proves the collective-free weight-residency layout
+        if shape.kind == "train":
+            raise ValueError("--serving-tp is a serving topology; "
+                             "use a prefill/decode shape")
+        mesh_name = f"serve_tp{serving_tp}"
+    else:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     os.makedirs(out_dir, exist_ok=True)
     suffix = f"__{variant}" if variant else ""
     out_path = os.path.join(out_dir,
                             f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = (make_serving_mesh(jax.devices()[:serving_tp], tp=serving_tp)
+            if serving_tp is not None
+            else make_production_mesh(multi_pod=multi_pod))
     n_chips = mesh.devices.size
     if accum is None:
         accum = TRAIN_ACCUM[arch] if shape.kind == "train" else 1
@@ -339,6 +351,9 @@ def main() -> None:
                          "batch=data+model, act_seq=model")
     ap.add_argument("--quant", action="store_true",
                     help="int8 weight-only params (serving cells)")
+    ap.add_argument("--serving-tp", type=int, default=None,
+                    help="compile on a TP-only serving mesh of this degree "
+                         "instead of the production pod (DESIGN.md §15)")
     ap.add_argument("--accum", type=int, default=None)
     ap.add_argument("--no-probes", action="store_true",
                     help="full compile only (memory-footprint iterations)")
@@ -399,7 +414,7 @@ def main() -> None:
     run_cell(args.arch, args.shape, args.multi_pod, args.out_dir,
              variant=args.variant, rule_overrides=overrides,
              quant=args.quant, accum=args.accum, cfg_overrides=cfg_overrides,
-             probes=not args.no_probes)
+             probes=not args.no_probes, serving_tp=args.serving_tp)
 
 
 if __name__ == "__main__":

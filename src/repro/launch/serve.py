@@ -7,6 +7,13 @@
   # router (DESIGN.md §12); also via REPRO_REPLICAS=N
   python -m repro.launch.serve --arch granite-3-2b --smoke --replicas 2
 
+  # DP x TP: each replica tensor-parallel over its own contiguous slice
+  # of tp devices, optionally int8-weight-resident (DESIGN.md §15); also
+  # via REPRO_TP=N / REPRO_QUANT=1
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.serve --arch granite-3-2b --smoke \
+      --replicas 2 --tp 2
+
 Production notes: on a TPU slice the engine compiles per prefill bucket
 once at startup; the executor's token-budget admission (paper Eq. 1)
 bounds in-flight HBM while freed cache slots are refilled mid-decode
@@ -54,6 +61,10 @@ def main() -> None:
     ap.add_argument("--router", default="affinity",
                     choices=["affinity", "round_robin"],
                     help="cluster routing policy (replicas > 1)")
+    ap.add_argument("--tp", type=int,
+                    default=int(os.environ.get("REPRO_TP", "1")),
+                    help="tensor-parallel degree per replica (DESIGN.md "
+                         "§15; default from REPRO_TP, 1 = no mesh)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -67,11 +78,16 @@ def main() -> None:
     if args.replicas > 1:
         cluster = Cluster.replicate(
             cfg, params, tok, args.replicas, router=make_router(args.router),
-            max_seq=args.max_seq, slots=args.slots)
+            tp=args.tp, max_seq=args.max_seq, slots=args.slots)
         client = ClusterClient(cluster, oracle=oracle)
     else:
+        mesh = None
+        if args.tp > 1:
+            from repro.launch.mesh import make_serving_mesh
+
+            mesh = make_serving_mesh(tp=args.tp)
         engine = Engine(cfg, params, tok, max_seq=args.max_seq,
-                        slots=args.slots)
+                        slots=args.slots, mesh=mesh)
         client = EngineClient(engine, oracle=oracle)
 
     try:

@@ -12,7 +12,14 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.params import Spec
 from repro.models.quant import deq
-from repro.sharding.logical import shard
+from repro.sharding.logical import mesh_active, shard
+
+# Kernel-vs-XLA policy under a mesh (DESIGN.md §15): the Pallas wrappers
+# carry no sharding annotations, so every `cfg.use_pallas` gate below also
+# requires no active mesh — TP engines fall back to the bit-identical XLA
+# layers (parity pinned in tests/test_kernels.py) and GSPMD partitions
+# them like any other op.  `mesh_active()` is a trace-time check: the gate
+# resolves while jit-tracing under `use_mesh`, not per step.
 
 
 # ---------------------------------------------------------------------------
@@ -67,7 +74,7 @@ def attn_apply(
     q, k, v = _qkv(cfg, p, x, positions)
     kf = _repeat_kv(k, cfg.padded_heads)
     vf = _repeat_kv(v, cfg.padded_heads)
-    if cfg.use_pallas:
+    if cfg.use_pallas and not mesh_active():
         from repro.kernels import ops as kops
 
         o = kops.flash_attention(q, kf, vf, chunk=cfg.attn_chunk)
@@ -100,7 +107,7 @@ def attn_apply_chunked(
     q, k, v = _qkv(cfg, p, x, positions)
     kp = k_prefix.astype(k.dtype)
     vp = v_prefix.astype(v.dtype)
-    if cfg.use_pallas:
+    if cfg.use_pallas and not mesh_active():
         from repro.kernels import ops as kops
 
         o = kops.chunked_prefill_attention(q, k, v, kp, vp, prefix_len,
@@ -137,7 +144,7 @@ def attn_decode(
 
     k_cache = jax.vmap(_write)(k_cache, k.astype(k_cache.dtype), cache_len)
     v_cache = jax.vmap(_write)(v_cache, v.astype(v_cache.dtype), cache_len)
-    if cfg.use_pallas:
+    if cfg.use_pallas and not mesh_active():
         from repro.kernels import ops as kops
 
         o = kops.decode_attention(q, k_cache, v_cache, cache_len + 1)
@@ -172,7 +179,7 @@ def attn_decode_paged(
     q = shard(q, "batch", None, None, None)
     k_pool = k_pool.at[write_page, write_off].set(k[:, 0].astype(k_pool.dtype))
     v_pool = v_pool.at[write_page, write_off].set(v[:, 0].astype(v_pool.dtype))
-    if cfg.use_pallas:
+    if cfg.use_pallas and not mesh_active():
         from repro.kernels import ops as kops
 
         o = kops.paged_decode_attention(q, k_pool, v_pool, page_table,
@@ -210,7 +217,7 @@ def attn_verify(
                                               mode="drop")
     v_cache = v_cache.at[rows, positions].set(v.astype(v_cache.dtype),
                                               mode="drop")
-    if cfg.use_pallas:
+    if cfg.use_pallas and not mesh_active():
         # greedy parity requires verification logits to match the
         # *sequential decode this engine would otherwise run* — which on
         # a Pallas engine is the decode kernel.  A static loop of that
@@ -256,7 +263,7 @@ def attn_verify_paged(
                                                     mode="drop")
     v_pool = v_pool.at[write_pages, write_offs].set(v.astype(v_pool.dtype),
                                                     mode="drop")
-    if cfg.use_pallas:
+    if cfg.use_pallas and not mesh_active():
         from repro.kernels import ops as kops
 
         o = kops.spec_verify_attention(q, k_pool, v_pool, page_table,

@@ -24,7 +24,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.params import Spec
 from repro.models.quant import deq
-from repro.sharding.logical import shard
+from repro.sharding.logical import mesh_active, shard
 
 
 def mamba_specs(cfg: ModelConfig) -> Dict[str, Spec]:
@@ -143,7 +143,8 @@ def mamba_apply(cfg: ModelConfig, p, x: jax.Array, *, chunk: int = 0) -> jax.Arr
     xi = shard(xi.reshape(B, S, H, P), "batch", "seq", "ssm_heads", None)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(p["a_log"].astype(jnp.float32))
-    if cfg.use_pallas:
+    # same kernel-vs-XLA mesh policy as blocks.py (DESIGN.md §15)
+    if cfg.use_pallas and not mesh_active():
         from repro.kernels import ops as kops
 
         y = kops.ssd_scan(xi, dt, A, b, c, chunk=chunk)

@@ -17,10 +17,11 @@ touch point.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.params import Spec, is_spec
 from repro.sharding.logical import axes_to_sharding
@@ -44,9 +45,19 @@ class QuantizedTensor:
         return self.q.shape
 
 
-def deq(w, dtype=jnp.bfloat16):
-    """Dequantize if quantized; identity otherwise (model-code shim)."""
+def deq(w, dtype=None):
+    """Dequantize if quantized; identity otherwise (model-code shim).
+
+    ``dtype`` is the *activation* dtype of the consuming matmul — every
+    model call site passes it (``deq(p["wq"], xn.dtype)``) so W8A16
+    matmuls run in whatever precision the activations carry.  With no
+    dtype the scales' own (fp32) precision is kept: the old hardcoded
+    ``bfloat16`` default silently downcast fp32-activation engines when
+    a call site forgot the argument.
+    """
     if isinstance(w, QuantizedTensor):
+        if dtype is None:
+            dtype = w.scale.dtype
         return (w.q.astype(dtype) * w.scale.astype(dtype))
     return w
 
@@ -72,14 +83,67 @@ def _quantizable(spec: Spec) -> bool:
     return len(spec.shape) >= 2 and spec.init == "normal" and spec.scale is None
 
 
+def _scale_layout(spec: Spec) -> Tuple[Tuple[int, ...], Tuple[Optional[str], ...]]:
+    """Shape + logical storage axes of a quantizable spec's scale tensor
+    (all-but-last axes reduced to 1; the leading scan-stacked layer dim,
+    if any, keeps per-layer scales)."""
+    lead = 1 if spec.axes[0] == "layers" else 0
+    shape = tuple(
+        list(spec.shape[:lead])
+        + [1] * (len(spec.shape) - 1 - lead)
+        + [spec.shape[-1]]
+    )
+    axes = tuple(
+        list(spec.fsdp_axes()[:lead])
+        + [None] * (len(spec.shape) - 1 - lead)
+        + [spec.fsdp_axes()[-1]]
+    )
+    return shape, axes
+
+
 def quantize_params(params, specs) -> Any:
-    """Real-array quantization (serving engines with materialized weights)."""
+    """Real-array quantization (serving engines with materialized weights).
+
+    Idempotent: already-quantized leaves pass through, so a cluster can
+    hand the same tree to several engine replicas that each default
+    ``REPRO_QUANT=1`` without double-quantizing.
+    """
     return jax.tree.map(
         lambda p, s: (
             quantize(p, keep_leading=s.axes[0] == "layers")
-            if _quantizable(s) else p
+            if _quantizable(s) and not isinstance(p, QuantizedTensor) else p
         ),
         params, specs,
+        is_leaf=lambda x: is_spec(x) or isinstance(x, QuantizedTensor),
+    )
+
+
+def serving_param_shardings(params, specs, mesh, rules=None):
+    """NamedSharding tree matching ``params`` (quantized or not) for
+    placing one replica's weights onto its serving mesh.
+
+    Mirrors :func:`repro.models.params.param_shardings` but follows the
+    *materialized* tree: a ``QuantizedTensor`` leaf gets a
+    ``QuantizedTensor(q_sharding, scale_sharding)`` node so
+    ``jax.device_put(params, shardings)`` maps leaf-for-leaf.  On a
+    TP-only serving mesh the FSDP axis (``embed_fsdp → "data"``) doesn't
+    exist, so embeddings/norms replicate and matmul weights shard on
+    ``"model"`` — collective-free residency.
+    """
+
+    def mk(p, s):
+        w_sh = axes_to_sharding(s.fsdp_axes(), mesh, rules, shape=s.shape)
+        if isinstance(p, QuantizedTensor):
+            scale_shape, scale_axes = _scale_layout(s)
+            return QuantizedTensor(
+                q=w_sh,
+                scale=axes_to_sharding(scale_axes, mesh, rules,
+                                       shape=scale_shape),
+            )
+        return w_sh
+
+    return jax.tree.map(
+        mk, params, specs,
         is_leaf=lambda x: is_spec(x) or isinstance(x, QuantizedTensor),
     )
 
@@ -97,17 +161,7 @@ def abstract_quantized_params(
             sharding = None
         if not _quantizable(spec):
             return jax.ShapeDtypeStruct(spec.shape, dtype, sharding=sharding)
-        lead = 1 if spec.axes[0] == "layers" else 0
-        scale_shape = tuple(
-            list(spec.shape[:lead])
-            + [1] * (len(spec.shape) - 1 - lead)
-            + [spec.shape[-1]]
-        )
-        scale_axes = tuple(
-            list(spec.fsdp_axes()[:lead])
-            + [None] * (len(spec.shape) - 1 - lead)
-            + [spec.fsdp_axes()[-1]]
-        )
+        scale_shape, scale_axes = _scale_layout(spec)
         scale_sh = None
         if mesh is not None:
             scale_sh = axes_to_sharding(scale_axes, mesh, rules,
@@ -119,3 +173,29 @@ def abstract_quantized_params(
         )
 
     return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def shard_residency_bytes(
+    specs, *, tp: int, rules=None, quant: bool = True, dtype=jnp.bfloat16,
+) -> int:
+    """Per-shard weight-residency bytes of one TP shard — the number a
+    chip's HBM budget is checked against (DESIGN.md §15).
+
+    Built over a ``jax.sharding.AbstractMesh`` with a single ``tp``-wide
+    ``"model"`` axis, so it needs **zero** devices (the large-config smoke
+    test and the ``tp_serving`` benchmark both run it on a 1-CPU
+    container).  Sums each leaf's ``sharding.shard_shape`` bytes — the
+    same divisibility-aware resolution the real serving mesh uses, so a
+    dim the axis can't tile is honestly counted as replicated.
+    """
+    from repro.models.params import abstract_params
+
+    mesh = jax.sharding.AbstractMesh((("model", int(tp)),))
+    tree = (abstract_quantized_params(specs, mesh, rules, dtype=dtype)
+            if quant else abstract_params(specs, dtype, mesh, rules))
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = (leaf.sharding.shard_shape(leaf.shape)
+                 if leaf.sharding is not None else leaf.shape)
+        total += int(np.prod(shape, dtype=np.int64)) * jnp.dtype(leaf.dtype).itemsize
+    return total

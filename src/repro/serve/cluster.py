@@ -54,6 +54,7 @@ the two levels never form a cycle.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
@@ -194,19 +195,47 @@ class Cluster:
         router: Optional[Router] = None,
         max_retries: int = 2,
         devices: Optional[Sequence[Any]] = None,
+        tp: Optional[int] = None,
         **engine_kwargs,
     ) -> "Cluster":
-        """Build ``n`` identical engine replicas over shared weights.
+        """Build ``n`` identical engine replicas over shared weights —
+        the cluster is DP replicas × TP shards (DESIGN.md §15).
 
-        With more than one XLA device visible (``devices=None`` →
-        ``jax.devices()``), each replica's parameters are ``device_put``
-        onto its own device round-robin, so its jitted prefill/decode
-        run there (computations follow their committed operands) and
-        replicas execute device work concurrently.  On a single device
-        the weights are shared by reference — replicas still isolate
-        their KV pools, caches, and executors.
+        ``tp`` (default ``REPRO_TP``, 1) is the tensor-parallel degree
+        *per replica*.  With ``tp > 1`` each replica gets a contiguous
+        slice of ``tp`` devices and its own serving mesh; the Engine
+        shards the weights onto the slice (and int8-quantizes them first
+        under ``REPRO_QUANT=1``).  Slices never overlap — ``n * tp``
+        devices must be visible.
+
+        With ``tp == 1`` (no mesh — the baseline engine), each replica's
+        parameters are ``device_put`` onto its own device round-robin,
+        so its jitted prefill/decode run there (computations follow
+        their committed operands) and replicas execute device work
+        concurrently.  On a single device the weights are shared by
+        reference — replicas still isolate their KV pools, caches, and
+        executors.
         """
         import jax
+
+        if tp is None:
+            tp = int(os.environ.get("REPRO_TP", "1"))
+        if tp > 1:
+            from repro.launch.mesh import make_serving_mesh
+
+            devs = list(devices) if devices is not None else jax.devices()
+            if len(devs) < n * tp:
+                raise ValueError(
+                    f"{n} replicas x tp={tp} need {n * tp} devices, "
+                    f"got {len(devs)} — force host devices via XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N")
+            engines = []
+            for i in range(n):
+                mesh = make_serving_mesh(devs[i * tp:(i + 1) * tp], tp=tp)
+                engines.append(
+                    Engine(cfg, params, tokenizer, mesh=mesh,
+                           **engine_kwargs))
+            return cls(engines, router=router, max_retries=max_retries)
 
         if devices is None:
             devs = jax.devices()

@@ -57,9 +57,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.llm_client import cancel_unfinished
 from repro.models import chunked_prefill, decode_step, encode, prefill, verify_step
-from repro.models.model import KV_ONLY_FAMILIES, cache_specs
+from repro.models.model import KV_ONLY_FAMILIES, cache_specs, model_specs
 from repro.models.params import Spec, is_spec
+from repro.models.quant import quantize_params, serving_param_shardings
 from repro.serve.prefix_cache import PagedKVPool, RadixPrefixCache
+from repro.sharding.logical import use_mesh
 
 _ID_BYTES = 4  # int32 token ids in the packed speculative context
 
@@ -258,12 +260,44 @@ class Engine:
         spec_decode: Optional[bool] = None,
         spec_k: int = 8,
         spec_ngram: Tuple[int, int] = (3, 1),
+        mesh: Any = None,
+        rules: Any = None,
+        quant: Optional[bool] = None,
     ):
         self.cfg = cfg
-        self.params = params
         self.tokenizer = tokenizer
         self.max_seq = max_seq
         self.slots = slots
+
+        # Tensor parallelism + int8 residency (DESIGN.md §15).  ``mesh``
+        # is this replica's serving mesh (make_serving_mesh over its
+        # contiguous device slice); ``rules`` merge over the config's own
+        # sharding_overrides (which merge over DEFAULT_RULES inside
+        # use_mesh).  No mesh → the exact single-device engine as before.
+        self.mesh = mesh
+        merged_rules = dict(cfg.rules())
+        if rules:
+            merged_rules.update(rules)
+        self.rules = merged_rules
+        if quant is None:
+            quant = os.environ.get("REPRO_QUANT", "0") == "1"
+        self.quant = bool(quant)
+        if self.quant:
+            # idempotent: a cluster may pass an already-quantized tree
+            params = quantize_params(params, model_specs(cfg))
+        if mesh is not None:
+            # Commit every weight to its TP-resident sharding up front.
+            # The jitted entry points then see *committed* operands, so
+            # GSPMD propagates from them plus the model code's shard()
+            # constraints — no per-closure in_shardings needed, and the
+            # serving mesh has no "data" axis so there are no FSDP
+            # all-gathers on the prefill/decode path.
+            params = jax.device_put(
+                params,
+                serving_param_shardings(params, model_specs(cfg), mesh,
+                                        self.rules),
+            )
+        self.params = params
 
         # Self-speculative decoding (DESIGN.md §11): greedy-parity prompt
         # n-gram drafting + multi-token verification.  Off by default
@@ -346,7 +380,7 @@ class Engine:
             if 0 < b <= max_seq and b % pg == 0
         }) or [max_seq]
 
-        self._prefill = jax.jit(
+        self._prefill = self._mjit(
             lambda p, toks, vlen: prefill(
                 cfg, p, {"tokens": toks}, max_seq=self.max_seq, valid_len=vlen
             )
@@ -354,18 +388,18 @@ class Engine:
         # paged prefill: no max_seq padding — K/V come back bucket-length
         # and are page-scattered into the pool (shape-specialized per
         # bucket, exactly like the dense prefill)
-        self._prefill_bucket = jax.jit(
+        self._prefill_bucket = self._mjit(
             lambda p, toks, vlen: prefill(
                 cfg, p, {"tokens": toks}, max_seq=toks.shape[1], valid_len=vlen
             )
         )
-        self._chunked_prefill = jax.jit(
+        self._chunked_prefill = self._mjit(
             lambda p, toks, vlen, kp, vp, plen: chunked_prefill(
                 cfg, p, {"tokens": toks}, max_seq=self.max_seq,
                 valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
             )
         )
-        self._chunked_prefill_paged = jax.jit(
+        self._chunked_prefill_paged = self._mjit(
             lambda p, toks, vlen, kp, vp, plen: chunked_prefill(
                 cfg, p, {"tokens": toks}, max_seq=self.max_seq,
                 valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
@@ -378,20 +412,20 @@ class Engine:
         # plain variant is bucket-length (score rows never join the decode
         # batch, so no max_seq padding) and serves dense, paged, and SSM
         # engines alike.
-        self._prefill_bucket_all = jax.jit(
+        self._prefill_bucket_all = self._mjit(
             lambda p, toks, vlen: prefill(
                 cfg, p, {"tokens": toks}, max_seq=toks.shape[1],
                 valid_len=vlen, all_logits=True,
             )
         )
-        self._chunked_prefill_all = jax.jit(
+        self._chunked_prefill_all = self._mjit(
             lambda p, toks, vlen, kp, vp, plen: chunked_prefill(
                 cfg, p, {"tokens": toks}, max_seq=self.max_seq,
                 valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
                 all_logits=True,
             )
         )
-        self._chunked_prefill_all_paged = jax.jit(
+        self._chunked_prefill_all_paged = self._mjit(
             lambda p, toks, vlen, kp, vp, plen: chunked_prefill(
                 cfg, p, {"tokens": toks}, max_seq=self.max_seq,
                 valid_len=vlen, prefix_k=kp, prefix_v=vp, prefix_len=plen,
@@ -400,7 +434,7 @@ class Engine:
         )
         # per-position log-prob gather: select each row's continuation
         # -predicting positions, log-softmax, take the target token ids
-        self._score_gather = jax.jit(
+        self._score_gather = self._mjit(
             lambda lg, idx, tgt: jnp.take_along_axis(
                 jax.nn.log_softmax(
                     jnp.take_along_axis(lg, idx[:, :, None], axis=1),
@@ -411,18 +445,18 @@ class Engine:
         # backbone's final-norm hidden states come back mean-pooled per
         # row.  Shape-specialized per (slots, bucket) like every other
         # closure here.
-        self._encode = jax.jit(
+        self._encode = self._mjit(
             lambda p, toks, vlen: encode(
                 cfg, p, {"tokens": toks}, valid_len=vlen
             )
         )
-        self._decode = jax.jit(
+        self._decode = self._mjit(
             lambda p, cache, toks, act: decode_step(cfg, p, cache, toks, active=act)
         )
         # paged decode donates the cache tree: the page pool (GiB-scale
         # at real configs) must be appended to in place, not copied per
         # token — the engine rebinds pool.k/v from the outputs
-        self._decode_paged = jax.jit(
+        self._decode_paged = self._mjit(
             lambda p, cache, toks, act: decode_step(cfg, p, cache, toks,
                                                     active=act),
             donate_argnums=(1,),
@@ -430,15 +464,15 @@ class Engine:
         # speculative verification (DESIGN.md §11): one model call scores
         # a spec_k+1-token window per slot; the paged variant donates the
         # pool exactly like _decode_paged
-        self._verify = jax.jit(
+        self._verify = self._mjit(
             lambda p, cache, toks: verify_step(cfg, p, cache, toks))
-        self._verify_paged = jax.jit(
+        self._verify_paged = self._mjit(
             lambda p, cache, toks: verify_step(cfg, p, cache, toks),
             donate_argnums=(1,),
         )
         # post-verify logits select: row r keeps the logits of its last
         # accepted window position (counts[r]-1)
-        self._select_logits = jax.jit(
+        self._select_logits = self._mjit(
             lambda lg, sel: jnp.take_along_axis(
                 lg, sel[:, None, None], axis=1)[:, 0])
         # Per-leaf batch axis of the cache tree, derived from the logical
@@ -449,12 +483,39 @@ class Engine:
             cache_specs(cfg, slots, max_seq),
             is_leaf=is_spec,
         )
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0, 1))
-        self._insert_logits = jax.jit(
+        self._insert = self._mjit(self._insert_impl, donate_argnums=(0, 1))
+        self._insert_logits = self._mjit(
             lambda dst, src, row, slot: dst.at[slot].set(src[row]),
             donate_argnums=(0,),
         )
         self._default_executor = None  # lazy, for the generate() facade
+
+    # ------------------------------------------------------------------
+    def _mjit(self, fn, **jit_kwargs):
+        """``jax.jit`` + this replica's mesh context.
+
+        Without a mesh this IS ``jax.jit`` — byte-for-byte the old
+        engine.  With one, every call runs under ``use_mesh(self.mesh,
+        self.rules)`` so (a) the model code's ``shard()`` constraints
+        resolve against this replica's mesh at trace time and (b) the
+        Pallas gates in the model blocks see ``mesh_active()`` and take
+        the XLA fallbacks.  The context is thread-local, and cluster
+        worker threads make the first (tracing) call — which is exactly
+        why the wrapper re-enters per call instead of tracing eagerly
+        here.  Weights were committed by ``device_put`` at load, so no
+        explicit in/out shardings are needed: GSPMD propagates from
+        committed operands (donated caches keep their layout).
+        """
+        jf = jax.jit(fn, **jit_kwargs)
+        if self.mesh is None:
+            return jf
+        mesh, rules = self.mesh, self.rules
+
+        def call(*args):
+            with use_mesh(mesh, rules):
+                return jf(*args)
+
+        return call
 
     # ------------------------------------------------------------------
     def count_tokens(self, text: str) -> int:

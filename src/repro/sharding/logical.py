@@ -28,6 +28,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+from collections.abc import Mapping
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
@@ -90,7 +91,14 @@ class MeshContext:
         shows up honestly in the roofline terms.
         """
         mesh_axis_names = set(self.mesh.axis_names)
-        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        # jax.sharding.Mesh and AbstractMesh both expose .shape as a
+        # name → size mapping; AbstractMesh has no .devices, which lets
+        # dry-run residency math run without any real device grid
+        shape_map = getattr(self.mesh, "shape", None)
+        if isinstance(shape_map, Mapping):
+            sizes = dict(shape_map)
+        else:
+            sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         used = set()
         spec = []
         for d, ax in enumerate(logical):
@@ -136,9 +144,26 @@ def current_context() -> Optional[MeshContext]:
     return getattr(_local, "ctx", None)
 
 
+def mesh_active() -> bool:
+    """True inside a :func:`use_mesh` region (trace-time check).
+
+    The Pallas kernel wrappers don't carry sharding annotations, so the
+    model blocks gate on this: under an active mesh every ``use_pallas``
+    path falls back to its bit-identical XLA layer and GSPMD partitions
+    it like any other op (DESIGN.md §15).  Outside a mesh nothing
+    changes — single-device engines keep their kernels.
+    """
+    return current_context() is not None
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh, rules: Optional[Rules] = None, **overrides):
-    """Activate a mesh + rules for model code executed in this thread."""
+    """Activate a mesh + rules for model code executed in this thread.
+
+    Works with ``jax.sharding.AbstractMesh`` too (dry-run residency and
+    rule-resolution paths): an abstract mesh has no device grid to enter,
+    so only the thread-local rules context is installed.
+    """
     merged = dict(DEFAULT_RULES)
     if rules:
         merged.update(rules)
@@ -146,7 +171,9 @@ def use_mesh(mesh: Mesh, rules: Optional[Rules] = None, **overrides):
     prev = current_context()
     _local.ctx = MeshContext(mesh=mesh, rules=merged)
     try:
-        with mesh:
+        with contextlib.ExitStack() as stack:
+            if not isinstance(mesh, jax.sharding.AbstractMesh):
+                stack.enter_context(mesh)
             yield _local.ctx
     finally:
         _local.ctx = prev

@@ -72,6 +72,54 @@ def test_abstract_quantized_tree_structure():
     assert wq.scale.shape[0] == cfg.n_layers
 
 
+def test_deq_default_dtype_follows_scale():
+    """deq() with no dtype keeps the scales' precision — the old hardcoded
+    bfloat16 default silently downcast fp32-activation engines whenever a
+    call site forgot the argument."""
+    w = jax.random.normal(KEY, (8, 16), jnp.float32)
+    qt = quantize(w)
+    assert qt.scale.dtype == jnp.float32
+    assert deq(qt).dtype == jnp.float32
+    bf = QuantizedTensor(q=qt.q, scale=qt.scale.astype(jnp.bfloat16))
+    assert deq(bf).dtype == jnp.bfloat16
+    # explicit dtype still wins (the W8A16 matmul path)
+    assert deq(qt, jnp.bfloat16).dtype == jnp.bfloat16
+    # identity shim: plain leaves pass through untouched
+    assert deq(w) is w
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_per_channel_scales_bound_error_per_channel(seed):
+    """Channels spanning six decades: each channel's round-trip error must
+    respect its *own* amax/127 bound — a single per-tensor scale would blow
+    the small channels' bound by orders of magnitude."""
+    mags = jnp.float32(10.0) ** jnp.arange(-3, 3)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 6), jnp.float32) * mags
+    qt = quantize(w)
+    assert qt.scale.shape == (1, 6)
+    back = deq(qt, jnp.float32)
+    per_ch_amax = jnp.max(jnp.abs(w), axis=0)
+    per_ch_err = jnp.max(jnp.abs(back - w), axis=0)
+    assert bool(jnp.all(per_ch_err <= per_ch_amax / 127.0 * 1.01))
+    # sanity: the global bound would be ~1e3x looser for channel 0
+    assert float(per_ch_err[0]) < float(jnp.max(per_ch_amax)) / 127.0 * 1e-2
+
+
+def test_keep_leading_gives_independent_per_layer_scales():
+    """Scan-stacked (layers, in, out) weights: layer 2 scaled 100x must not
+    inflate layers 0-1's quantization error."""
+    w = jax.random.normal(KEY, (3, 8, 16), jnp.float32)
+    w = w.at[2].multiply(100.0)
+    qt = quantize(w, keep_leading=True)
+    assert qt.scale.shape == (3, 1, 16)
+    back = deq(qt, jnp.float32)
+    for layer in range(3):
+        amax = float(jnp.max(jnp.abs(w[layer])))
+        err = float(jnp.max(jnp.abs(back[layer] - w[layer])))
+        assert err <= amax / 127.0 * 1.01
+
+
 def test_fp8_kv_cache_decode_drift():
     """fp8 (e4m3) KV storage: decode logits stay within ~1σ of bf16-cache
     logits; SSM states are never quantized (prefill asserts dtype)."""

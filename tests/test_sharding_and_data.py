@@ -57,6 +57,64 @@ def test_per_arch_overrides():
     assert spec == P(None, "data", "model")
 
 
+def test_grok_overrides_merge_over_default_rules():
+    """use_mesh(mesh, cfg.rules()) merges per-arch overrides on top of
+    DEFAULT_RULES: grok moves `experts` off "model" and puts `expert_mlp`
+    on it (8 experts can't tile a wide TP axis), while untouched defaults
+    (heads → "model") survive the merge."""
+    from repro.configs import get_smoke_config
+    from repro.sharding.logical import mesh_active, use_mesh
+
+    am = jax.sharding.AbstractMesh((("model", 32),))
+    grok_rules = get_smoke_config("grok-1-314b").rules()
+    assert grok_rules == {"experts": None, "expert_mlp": "model"}
+    assert not mesh_active()
+    with use_mesh(am, grok_rules) as ctx:
+        assert mesh_active()
+        assert ctx.rules["experts"] is None
+        assert ctx.rules["expert_mlp"] == "model"
+        assert ctx.rules["heads"] == "model"  # default retained
+        spec = ctx.resolve(("experts", "expert_mlp"), (8, 32768))
+        assert spec == P(None, "model")
+    assert not mesh_active()
+
+
+def test_shard_is_noop_outside_mesh():
+    from repro.sharding.logical import shard, use_mesh
+
+    x = jax.numpy.ones((4, 8))
+    assert shard(x, "batch", "embed") is x
+    with pytest.raises(ValueError, match="rank mismatch"):
+        with use_mesh(jax.sharding.AbstractMesh((("model", 2),))):
+            shard(x, "batch")
+
+
+def test_abstract_mesh_resolution_matches_fake_mesh():
+    """AbstractMesh exposes .shape as a name→size Mapping (no .devices);
+    MeshContext.resolve must agree with the devices-backed path on both
+    plain resolution and divisibility-driven axis dropping."""
+    am = jax.sharding.AbstractMesh((("data", 4), ("model", 4)))
+    ctx = MeshContext(mesh=am, rules=dict(DEFAULT_RULES))
+    for axes in [("batch", "seq", "embed"), ("embed_fsdp", "mlp"),
+                 ("vocab", "embed")]:
+        assert ctx.resolve(axes) == _resolve(axes)
+    # 36 heads tile a 4-way axis; 30 don't → dropped to replication,
+    # identically on both paths
+    assert ctx.resolve(("heads",), (36,)) == P("model")
+    assert ctx.resolve(("heads",), (30,)) == P(None)
+    for n in (36, 30):
+        assert ctx.resolve(("heads",), (n,)) == _resolve_shaped(("heads",), (n,))
+
+
+def _resolve_shaped(axes, shape, rules=None):
+    merged = dict(DEFAULT_RULES)
+    merged.update(rules or {})
+    ctx = MeshContext.__new__(MeshContext)
+    ctx.mesh = FakeMesh()
+    ctx.rules = merged
+    return ctx.resolve(axes, shape)
+
+
 # ---------------------------------------------------------------------------
 # tokenizer / loader
 # ---------------------------------------------------------------------------
