@@ -1,0 +1,197 @@
+"""Chaos resilience of the serving cluster on the block-join workload
+(DESIGN.md §16).
+
+The robustness PR's core claim is that fault handling is *corrective,
+not creative*: under any transient-fault schedule the join completes
+token-identical to the fault-free run, and the only cost is retries plus
+backoff.  This benchmark runs the SAME block join (same weights,
+teacher-forced oracle answers, greedy decode) through a fault-free
+cluster and through chaos clusters with seeded :class:`FaultPlan`s at
+increasing fault rates, then through a mid-join replica kill with
+post-join resurrection, and reports:
+
+* **token identity** — result pairs, LLM calls, prompt tokens and
+  completion tokens must match the fault-free reference exactly on
+  every leg (cached prompt tokens may differ: failover legitimately
+  changes which replica's radix tree serves a prefix);
+* **retry overhead** — injected transient errors all surface as
+  executor retries (one backoff sleep each, on the cluster's shared
+  VirtualClock so the sleeps are deterministic and free);
+* **recovery** — the kill leg loses a replica mid-join, completes
+  through the survivor, and ``check_health()`` rebuilds the dead
+  replica from the shared param tree.
+
+Acceptance bars: every leg token-identical to fault-free; retries ==
+errors injected at every fault rate; the kill leg fails over and
+resurrects exactly one replica.
+
+    PYTHONPATH=src python benchmarks/chaos.py
+    PYTHONPATH=src python benchmarks/chaos.py --smoke   # CI leg
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+# replicas on distinct XLA host devices (must precede the jax import)
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+# this benchmark provides its own explicit FaultPlans; ambient env chaos
+# would double-inject and change the reference leg
+os.environ.pop("REPRO_CHAOS", None)
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import block_join
+from repro.core.oracle import OracleLLM, VirtualClock
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import Cluster, ClusterClient, FaultPlan
+
+from common import emit_json, timed
+
+COLOURS = ["red", "blue", "green", "teal"]
+
+
+def make_tables(r1: int, r2: int):
+    left = [f"item {i} is coloured {COLOURS[i % len(COLOURS)]}"
+            for i in range(r1)]
+    right = [f"want {k} {COLOURS[k % len(COLOURS)]}" for k in range(r2)]
+    pred = lambda a, b: a.split()[-1] == b.split()[-1]
+    return left, right, pred
+
+
+def run_join(params, args, plan):
+    """One block join through a cluster under ``plan`` (None = clean)."""
+    cfg = get_smoke_config(args.arch)
+    left, right, pred = make_tables(args.left_rows, args.right_rows)
+    with Cluster.replicate(
+            cfg, params, ByteTokenizer(cfg.vocab_size), args.replicas,
+            chaos=plan, clock=VirtualClock(),
+            max_retries=None if plan is None else 32,
+            max_seq=args.max_seq, slots=args.slots) as cl:
+        client = ClusterClient(
+            cl, oracle=OracleLLM(pred, context_limit=args.max_seq))
+        res, wall = timed(block_join, left, right, "the colours match",
+                          client, args.b1, args.b2)
+        cl.drain()
+        revived = cl.check_health()
+        errors = sum(r["injector"]["errors"] for r in
+                     cl.summary()["per_replica"]
+                     if r.get("injector") is not None)
+        return res, wall, cl.stats(), cl.summary(), revived, errors
+
+
+def leg_report(name, ref, res, stats, summ, wall, revived, errors):
+    rb = summ["robustness"]
+    identical = (res.pairs == ref.pairs
+                 and res.ledger.calls == ref.ledger.calls
+                 and res.ledger.prompt_tokens == ref.ledger.prompt_tokens
+                 and res.ledger.completion_tokens
+                 == ref.ledger.completion_tokens)
+    print(f"{name:>14}: retries={stats.retries:3d} "
+          f"backoff={stats.backoff_s:7.3f}s(virtual) "
+          f"failovers={rb['failovers']} resurrected={revived} "
+          f"identical={identical} wall={wall:6.2f}s")
+    return {
+        "token_identical": identical,
+        "retries": stats.retries,
+        "errors_injected": errors,
+        "backoff_virtual_s": round(stats.backoff_s, 4),
+        "failovers": rb["failovers"],
+        "resurrections": revived,
+        "decode_steps": stats.decode_steps,
+        "prefill_batches": stats.prefill_batches,
+        "result_pairs": len(res.pairs),
+        "calls": res.ledger.calls,
+        "wall_s": round(wall, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--left-rows", type=int, default=16)
+    ap.add_argument("--right-rows", type=int, default=32)
+    ap.add_argument("--b1", type=int, default=4, help="rows per left block")
+    ap.add_argument("--b2", type=int, default=4, help="rows per right block")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=23, help="FaultPlan seed")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer rows, same assertions)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.left_rows, args.right_rows = 8, 16
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), jnp.float32)
+
+    # fault-free reference: the token-identity baseline for every leg
+    ref, wall_ref, st_ref, sm_ref, _, _ = run_join(params, args, None)
+    calls = ref.ledger.calls
+    print(f"block join: {args.left_rows}x{args.right_rows} rows, "
+          f"b1={args.b1} b2={args.b2} -> {calls} calls, "
+          f"{len(ref.pairs)} result pairs, {args.replicas} replicas")
+
+    legs = {"fault_free": leg_report("fault-free", ref, ref, st_ref,
+                                     sm_ref, wall_ref, 0, 0)}
+
+    # transient-fault sweep: step errors + latency spikes at rising rates
+    for rate in (0.01, 0.05):
+        plan = FaultPlan(seed=args.seed, step_error_rate=rate,
+                         latency_spike_rate=rate, spike_s=0.005)
+        res, wall, st, sm, revived, errors = run_join(params, args, plan)
+        name = f"transient_{int(rate * 100)}pct"
+        legs[name] = leg_report(name, ref, res, st, sm, wall,
+                                revived, errors)
+        assert legs[name]["token_identical"], (
+            f"acceptance: {name} diverged from the fault-free join")
+        assert st.retries == errors, (
+            f"acceptance: {name} retries {st.retries} != injected {errors}")
+
+    # kill leg: one replica dies mid-join; survivors finish the join
+    # token-identically, then check_health() resurrects the corpse
+    kill = FaultPlan(seed=args.seed, step_error_rate=0.01,
+                     latency_spike_rate=0.01, spike_s=0.005,
+                     kill_replica=1, kill_after_ops=20)
+    res_k, wall_k, st_k, sm_k, revived_k, errors_k = run_join(
+        params, args, kill)
+    legs["replica_kill"] = leg_report("replica-kill", ref, res_k, st_k,
+                                      sm_k, wall_k, revived_k, errors_k)
+    assert legs["replica_kill"]["token_identical"], (
+        "acceptance: the kill leg diverged from the fault-free join")
+    assert sm_k["robustness"]["failovers"] > 0, (
+        "acceptance: the kill never fired — no failovers recorded")
+    assert revived_k == 1, (
+        f"acceptance: expected 1 resurrection, got {revived_k}")
+
+    overhead = {name: round(leg["wall_s"] / max(wall_ref, 1e-9), 3)
+                for name, leg in legs.items()}
+    print(f"chaos: all legs token-identical at {args.replicas} replicas; "
+          f"wall overhead vs fault-free: "
+          + ", ".join(f"{n}={v:.2f}x" for n, v in overhead.items()
+                      if n != "fault_free"))
+
+    emit_json("chaos", {
+        "workload": {
+            "left_rows": args.left_rows, "right_rows": args.right_rows,
+            "b1": args.b1, "b2": args.b2, "slots": args.slots,
+            "max_seq": args.max_seq, "replicas": args.replicas,
+            "arch": args.arch, "smoke": args.smoke, "calls": calls,
+            "fault_seed": args.seed,
+        },
+        "legs": legs,
+        "wall_overhead": overhead,
+        "token_identical": True,
+    }, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

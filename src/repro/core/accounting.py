@@ -159,6 +159,15 @@ class Ledger:
     scored_tokens: int = 0         # continuations scored prefill-only (§13)
     overflows: int = 0
     wasted_prompt_tokens: int = 0  # prompt tokens of calls discarded by overflow
+    #: requests cancelled at their deadline (DESIGN.md §16).  They never
+    #: produce a Usage — the executor backs their partial-attempt tokens
+    #: out — so the count is the only trace they leave here.
+    deadline_expired: int = 0
+
+    def record_expiry(self) -> None:
+        """Count one deadline-expired request (no tokens: its attempt's
+        partial work was backed out by the executor's cancel path)."""
+        self.deadline_expired += 1
 
     def record(self, usage: Usage, *, overflow: bool = False) -> None:
         self.calls += 1
@@ -182,6 +191,7 @@ class Ledger:
         self.scored_tokens += other.scored_tokens
         self.overflows += other.overflows
         self.wasted_prompt_tokens += other.wasted_prompt_tokens
+        self.deadline_expired += other.deadline_expired
 
     def __add__(self, other: "Ledger") -> "Ledger":
         """Non-mutating merge — the serving cluster folds per-replica
@@ -215,6 +225,7 @@ class Ledger:
             "scored_tokens": self.scored_tokens,
             "overflows": self.overflows,
             "wasted_prompt_tokens": self.wasted_prompt_tokens,
+            "deadline_expired": self.deadline_expired,
             "cost_usd": self.cost(pricing),
             "pricing": pricing.name,
         }

@@ -87,6 +87,12 @@ def adaptive_join(
     ``prefix_cached=True`` when its engine runs the radix prefix cache.
     The Eq. (1) *feasibility* window is unchanged either way (cached
     tokens still occupy context), so overflow behaviour is identical.
+
+    If the backend dies mid-round (every replica dead), the round's
+    block join returns a degraded partial result instead of overflowing;
+    it propagates here unchanged — ``meta["degraded"]`` is True,
+    ``meta["unresolved"]`` lists the undecided rectangles, and no
+    further rounds run (DESIGN.md §16).
     """
     stats = (stats if stats is not None
              else generate_statistics(r1, r2, j, counter=client.count_tokens))

@@ -6,7 +6,9 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.accounting import Ledger
 from repro.core.join_types import JoinResult, Overflow, Timer
-from repro.core.llm_client import LLMClient, LLMResponse, cancel_unfinished
+from repro.core.llm_client import (
+    BackendUnavailable, LLMClient, LLMResponse, cancel_unfinished,
+)
 from repro.core.prompts import FINISHED, block_prompt, parse_index_pairs
 
 
@@ -93,6 +95,13 @@ def block_join(
     rounds use different batch sizes and when completions arrive out of
     order through the executor: a block is skipped only if a solved
     rectangle fully contains it.
+
+    **Graceful degradation** (DESIGN.md §16): if the backend dies
+    mid-join (:class:`BackendUnavailable` — e.g. every cluster replica
+    is dead), the join does not raise.  It returns a *partial*
+    :class:`JoinResult` whose ``meta`` carries ``degraded=True``, the
+    exact list of ``unresolved`` block rectangles, and the error — with
+    the ledger still exact for every answer that did arrive.
     """
     if b1 < 1 or b2 < 1:
         raise ValueError(f"batch sizes must be >= 1, got {b1=} {b2=}")
@@ -131,17 +140,24 @@ def block_join(
 
         handles = []
         block_of = {}
+        degraded: Optional[BackendUnavailable] = None
+        out_of_range = 0
+        dropped_segments = 0
         try:
             for key, prompt, max_toks in prompts:
                 h = client.submit(prompt, max_tokens=max_toks, stop=FINISHED)
                 handles.append(h)
                 block_of[id(h)] = key
+        except BackendUnavailable as exc:
+            cancel_unfinished(client, handles)
+            degraded = exc
         except Exception:
             cancel_unfinished(client, handles)
             raise
         overflowed = False
         try:
-            for h in client.as_completed(list(handles)):
+            for h in (client.as_completed(list(handles))
+                      if degraded is None else ()):
                 resp = h.result()
                 i, k = block_of[id(h)]
                 complete = _is_complete(resp)
@@ -161,24 +177,40 @@ def block_join(
                 lo1, hi1 = slices1[i]
                 lo2, hi2 = slices2[k]
                 n1, n2 = hi1 - lo1, hi2 - lo2
-                local, _ = parse_index_pairs(resp.text)
-                found = {
-                    (lo1 + x - 1, lo2 + y - 1)
-                    for x, y in local
-                    if 1 <= x <= n1 and 1 <= y <= n2
-                }
+                local, _, dropped = parse_index_pairs(resp.text)
+                dropped_segments += dropped
+                in_range = [(x, y) for x, y in local
+                            if 1 <= x <= n1 and 1 <= y <= n2]
+                out_of_range += len(local) - len(in_range)
+                found = {(lo1 + x - 1, lo2 + y - 1) for x, y in in_range}
                 completed[(lo1, hi1, lo2, hi2)] = found
                 pairs |= found
+        except BackendUnavailable as exc:
+            # every replica is gone: cancel what's left (a no-op on a
+            # fatal cluster) and fall through to the partial result —
+            # the ledger saw exactly the answers that arrived
+            cancel_unfinished(client, handles)
+            degraded = exc
         except Exception:
             cancel_unfinished(client, handles)
             raise
-        if overflowed:
+        if overflowed and degraded is None:
             raise Overflow(ledger, partial=pairs)
 
+    meta = {"operator": "block", "b1": b1, "b2": b2, "calls": ledger.calls,
+            "out_of_range_pairs": out_of_range,
+            "dropped_segments": dropped_segments}
+    if degraded is not None:
+        meta.update({
+            "degraded": True,
+            "error": str(degraded),
+            "unresolved": sorted(
+                slices1[i] + slices2[k] for (i, k) in work
+                if slices1[i] + slices2[k] not in completed),
+        })
     return JoinResult(
         pairs=pairs,
         ledger=ledger,
         wall_time_s=timer.elapsed,
-        meta={"operator": "block", "b1": b1, "b2": b2,
-              "calls": ledger.calls},
+        meta=meta,
     )

@@ -28,11 +28,13 @@ breakdown the benchmark and the serving summary report.
 from __future__ import annotations
 
 import math
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.accounting import Ledger
 from repro.core.join_types import JoinResult, Timer
-from repro.core.llm_client import LLMClient, ScoreResponse, cancel_unfinished
+from repro.core.llm_client import (
+    BackendUnavailable, LLMClient, ScoreResponse, cancel_unfinished,
+)
 from repro.core.prompts import SCORE_CHOICES, tuple_prompt
 
 PairScore = Tuple[bool, float]  # (decision, confidence)
@@ -79,6 +81,11 @@ def score_pairs(
     Shared helper for the scored tuple join and both cascade tiers:
     submits ``window`` Yes/No scoring requests at a time, consumes them
     in completion order, and records every response on ``ledger``.
+
+    On a backend death the re-raised :class:`BackendUnavailable` carries
+    the scores decided so far in ``exc.partial`` — callers degrade to a
+    partial join instead of discarding the tier's paid-for work
+    (DESIGN.md §16); ``ledger`` is exact either way.
     """
     out: Dict[Tuple[int, int], PairScore] = {}
     for start in range(0, len(index), window):
@@ -91,6 +98,11 @@ def score_pairs(
                     tuple_prompt(r1[i], r2[k], j), SCORE_CHOICES)
                 handles.append(h)
                 pair_of[id(h)] = (i, k)
+        except BackendUnavailable as exc:
+            cancel_unfinished(client, handles)
+            if exc.partial is None:
+                exc.partial = dict(out)
+            raise
         except Exception:
             cancel_unfinished(client, handles)
             raise
@@ -99,6 +111,11 @@ def score_pairs(
                 resp = h.result()
                 ledger.record(resp.usage)
                 out[pair_of[id(h)]] = scored_decision(resp)
+        except BackendUnavailable as exc:
+            cancel_unfinished(client, handles)
+            if exc.partial is None:
+                exc.partial = dict(out)
+            raise
         except Exception:
             cancel_unfinished(client, handles)
             raise
@@ -121,6 +138,12 @@ def cascade_tuple_join(
     strictly below ``threshold`` re-score on ``large``, whose decision
     replaces the small model's.  See the module docstring for the
     threshold's endpoint guarantees.
+
+    A backend death in either tier degrades instead of raising: the
+    partial scores the dead tier already produced are kept (an escalated
+    pair that never re-scored keeps its small-tier decision), ``meta``
+    carries ``degraded=True`` plus the never-scored ``undecided`` pairs,
+    and both per-tier ledgers stay exact (DESIGN.md §16).
     """
     if not 0.0 <= threshold <= 1.0:
         raise ValueError(f"threshold must be in [0, 1], got {threshold}")
@@ -131,28 +154,46 @@ def cascade_tuple_join(
     index = [(i, k) for i in range(len(r1)) for k in range(len(r2))]
     small_ledger = Ledger()
     large_ledger = Ledger()
+    degraded: Optional[BackendUnavailable] = None
+    escalated: Sequence[Tuple[int, int]] = []
     with Timer() as timer:
-        scores = score_pairs(index, r1, r2, j, small, small_ledger,
-                             window=window)
-        escalated = sorted(p for p, (_, conf) in scores.items()
-                           if conf < threshold)
-        if escalated:
-            scores.update(score_pairs(escalated, r1, r2, j, large,
-                                      large_ledger, window=window))
+        try:
+            scores = score_pairs(index, r1, r2, j, small, small_ledger,
+                                 window=window)
+        except BackendUnavailable as exc:
+            scores = dict(exc.partial or {})
+            degraded = exc
+        if degraded is None:
+            escalated = sorted(p for p, (_, conf) in scores.items()
+                               if conf < threshold)
+            if escalated:
+                try:
+                    scores.update(score_pairs(escalated, r1, r2, j, large,
+                                              large_ledger, window=window))
+                except BackendUnavailable as exc:
+                    scores.update(exc.partial or {})
+                    degraded = exc
     pairs = {p for p, (dec, _) in scores.items() if dec}
+    meta = {
+        "operator": "cascade_tuple",
+        "threshold": threshold,
+        "pairs_total": len(index),
+        "escalated": len(escalated),
+        "escalated_pairs": list(escalated),
+        "tiers": {
+            "small": small_ledger.summary(),
+            "large": large_ledger.summary(),
+        },
+    }
+    if degraded is not None:
+        meta.update({
+            "degraded": True,
+            "error": str(degraded),
+            "undecided": [p for p in index if p not in scores],
+        })
     return JoinResult(
         pairs=pairs,
         ledger=small_ledger + large_ledger,
         wall_time_s=timer.elapsed,
-        meta={
-            "operator": "cascade_tuple",
-            "threshold": threshold,
-            "pairs_total": len(index),
-            "escalated": len(escalated),
-            "escalated_pairs": escalated,
-            "tiers": {
-                "small": small_ledger.summary(),
-                "large": large_ledger.summary(),
-            },
-        },
+        meta=meta,
     )

@@ -45,6 +45,25 @@ from typing import Iterable, Iterator, List, Optional, Sequence
 from repro.core.accounting import TokenCounter, Usage, count_tokens
 
 
+class BackendUnavailable(RuntimeError):
+    """The backend can no longer make progress (every serving replica is
+    dead and orphaned requests cannot be re-placed).
+
+    Distinct from a per-request failure: retries and failover are already
+    exhausted when this raises.  The join operators catch it to return a
+    *partial* :class:`~repro.core.join_types.JoinResult` — explicit
+    unresolved work plus an exact ledger of what was paid for — instead
+    of discarding completed work (DESIGN.md §16 graceful degradation).
+    ``partial`` optionally carries a payload of already-resolved results
+    for helpers whose return value would otherwise be lost
+    (:func:`repro.core.cascade.score_pairs` attaches its score dict).
+    """
+
+    def __init__(self, message: str, *, partial=None):
+        super().__init__(message)
+        self.partial = partial
+
+
 @dataclasses.dataclass(frozen=True)
 class LLMResponse:
     """One model invocation's result.
@@ -89,10 +108,13 @@ class LLMHandle:
     """
 
     def __init__(self, client: "LLMClient", prompt: str, max_tokens: int,
-                 stop: Optional[str]):
+                 stop: Optional[str], deadline: Optional[float] = None):
         self.prompt = prompt
         self.max_tokens = max_tokens
         self.stop = stop
+        #: absolute time (on the backend's clock) after which the request
+        #: should be cancelled instead of served; None = no deadline
+        self.deadline = deadline
         self._client = client
         self._response: Optional[LLMResponse] = None
         self._cancelled = False
@@ -217,9 +239,17 @@ class LLMClient(abc.ABC):
         *,
         max_tokens: int,
         stop: Optional[str] = None,
+        deadline: Optional[float] = None,
     ) -> LLMHandle:
-        """Enqueue one invocation; returns a future-like handle."""
-        return LLMHandle(self, prompt, max_tokens, stop)
+        """Enqueue one invocation; returns a future-like handle.
+
+        ``deadline`` is an absolute time on the backend's clock after
+        which the request is cancelled and its pages drained instead of
+        served (DESIGN.md §16).  Lazy sequential clients carry the value
+        but never expire on it — only engine-backed executors run a
+        deadline sweep.
+        """
+        return LLMHandle(self, prompt, max_tokens, stop, deadline)
 
     def as_completed(self, handles: Iterable[LLMHandle]) -> Iterator[LLMHandle]:
         """Yield handles as their responses complete.

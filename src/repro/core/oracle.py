@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import hashlib
 import math
+import threading
+import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.accounting import Usage, count_tokens
@@ -42,6 +44,48 @@ class ContextWindowExceeded(ValueError):
     pass
 
 
+class SystemClock:
+    """Real wall-clock: ``now()`` is monotonic seconds, ``sleep()`` blocks.
+
+    The default clock of the serving executor's retry backoff — swap in a
+    :class:`VirtualClock` to make backoff schedules (and fault-injected
+    latency spikes) deterministic and free in tests.
+    """
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+
+class VirtualClock:
+    """Thread-safe simulated clock (DESIGN.md §16).
+
+    One instance can be shared by every actor that models time — the
+    oracle's latency model, the fault injector's latency spikes, the
+    executor's retry backoff, and deadline checks — so "when" something
+    happens is a deterministic function of the event sequence, never of
+    host scheduling.  ``sleep()`` advances the clock instead of blocking,
+    which is what makes chaos test runs both reproducible and fast.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self._mu = threading.Lock()
+
+    def now(self) -> float:
+        with self._mu:
+            return self._now
+
+    def sleep(self, seconds: float) -> None:
+        if seconds < 0:
+            raise ValueError(f"cannot sleep a negative duration {seconds}")
+        with self._mu:
+            self._now += float(seconds)
+
+
 class OracleLLM(LLMClient):
     supports_scoring = True
 
@@ -56,6 +100,7 @@ class OracleLLM(LLMClient):
         latency_base_s: float = 0.5,
         latency_per_in_tok: float = 1e-4,
         latency_per_out_tok: float = 2e-2,
+        clock: Optional[VirtualClock] = None,
     ):
         self.predicate = predicate
         self.context_limit = context_limit
@@ -65,8 +110,14 @@ class OracleLLM(LLMClient):
         self.latency_base_s = latency_base_s
         self.latency_per_in_tok = latency_per_in_tok
         self.latency_per_out_tok = latency_per_out_tok
-        #: simulated wall-clock (sequential invocations; waves take max)
-        self.sim_clock_s = 0.0
+        #: simulated wall-clock (sequential invocations; waves take max) —
+        #: a shared :class:`VirtualClock` lets the serving tier's fault
+        #: injector and backoff schedule advance the *same* timeline
+        self.clock = clock if clock is not None else VirtualClock()
+
+    @property
+    def sim_clock_s(self) -> float:
+        return self.clock.now()
 
     # -- noisy predicate -------------------------------------------------
     def _unit_hash(self, t1: str, t2: str) -> float:
@@ -145,8 +196,8 @@ class OracleLLM(LLMClient):
         """Prefill-only scoring: latency charges input tokens only —
         there are zero generated tokens by construction."""
         resp = self._score_impl(prompt, choices)
-        self.sim_clock_s += (self.latency_base_s
-                             + resp.usage.prompt_tokens * self.latency_per_in_tok)
+        self.clock.sleep(self.latency_base_s
+                         + resp.usage.prompt_tokens * self.latency_per_in_tok)
         return resp
 
     def _answer_block(
@@ -178,7 +229,7 @@ class OracleLLM(LLMClient):
         self, prompt: str, *, max_tokens: int, stop: Optional[str] = None
     ) -> LLMResponse:
         resp = self._invoke_impl(prompt, max_tokens=max_tokens, stop=stop)
-        self.sim_clock_s += self._latency(resp.usage)
+        self.clock.sleep(self._latency(resp.usage))
         return resp
 
     def invoke_many(
@@ -194,7 +245,7 @@ class OracleLLM(LLMClient):
             self._invoke_impl(p, max_tokens=max_tokens, stop=stop) for p in prompts
         ]
         if responses:
-            self.sim_clock_s += max(self._latency(r.usage) for r in responses)
+            self.clock.sleep(max(self._latency(r.usage) for r in responses))
         return responses
 
     def _invoke_impl(

@@ -7,7 +7,7 @@ functions live here so the two directions are tested against each other.
 from __future__ import annotations
 
 import re
-from typing import List, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 from repro.core.accounting import count_tokens
 
@@ -207,17 +207,41 @@ def render_index_pairs(pairs: Sequence[Tuple[int, int]], finished: bool = True) 
 _PAIR_RE = re.compile(r"(\d+)\s*,\s*(\d+)")
 
 
-def parse_index_pairs(answer: str) -> Tuple[List[Tuple[int, int]], bool]:
-    """Extract ``(pairs, finished)`` from a block-join answer.
+class ParsedPairs(NamedTuple):
+    """Result of :func:`parse_index_pairs`.
+
+    ``dropped`` counts malformed ``;``-separated segments — non-empty
+    answer segments that are neither an index pair nor the sentinel.
+    A well-behaved model emits zero; a chaos-corrupted completion shows
+    up here instead of silently vanishing (DESIGN.md §16)."""
+
+    pairs: List[Tuple[int, int]]
+    finished: bool
+    dropped: int
+
+
+def parse_index_pairs(answer: str) -> ParsedPairs:
+    """Extract ``(pairs, finished, dropped)`` from a block-join answer.
 
     ``finished`` is True iff the answer's final word is the sentinel
     (Algorithm 2 line: ``if A[-1] != Finished then return <Overflow>``).
     Robust to truncated trailing pairs (a pair cut mid-digits is dropped —
-    ExtractTuples in the paper).
+    ExtractTuples in the paper) and to garbage segments, both counted in
+    ``dropped``.
     """
     finished = answer.rstrip().endswith(FINISHED)
-    pairs = [(int(a), int(b)) for a, b in _PAIR_RE.findall(answer)]
-    return pairs, finished
+    pairs: List[Tuple[int, int]] = []
+    dropped = 0
+    for seg in answer.split(";"):
+        seg = seg.strip()
+        if not seg:
+            continue
+        found = _PAIR_RE.findall(seg)
+        if found:
+            pairs.extend((int(a), int(b)) for a, b in found)
+        elif seg != FINISHED:
+            dropped += 1
+    return ParsedPairs(pairs, finished, dropped)
 
 
 def static_prompt_tokens(j: str) -> int:

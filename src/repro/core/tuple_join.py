@@ -9,7 +9,9 @@ from typing import Optional, Sequence
 from repro.core.accounting import Ledger
 from repro.core.cascade import score_pairs
 from repro.core.join_types import JoinResult, Timer
-from repro.core.llm_client import LLMClient, cancel_unfinished
+from repro.core.llm_client import (
+    BackendUnavailable, LLMClient, cancel_unfinished,
+)
 from repro.core.prompts import parse_yes_no, tuple_prompt
 
 
@@ -46,6 +48,11 @@ def tuple_join(
     steps, ``max_answer_tokens`` unused.  Defaults to the
     ``REPRO_SCORE_JOIN=1`` env switch, and only when the client supports
     scoring (decode otherwise).
+
+    **Graceful degradation** (DESIGN.md §16): a backend death mid-join
+    (:class:`BackendUnavailable`) returns the partial result instead of
+    raising — ``meta`` carries ``degraded=True`` and the exact list of
+    ``undecided`` pairs; the ledger saw every answer that arrived.
     """
     if scoring is None:
         scoring = (os.environ.get("REPRO_SCORE_JOIN", "0") == "1"
@@ -54,9 +61,12 @@ def tuple_join(
         return _tuple_join_scored(r1, r2, j, client, window=window)
     ledger = Ledger()
     pairs = set()
-    index = ((i, k) for i in range(len(r1)) for k in range(len(r2)))
+    decided = set()
+    all_pairs = [(i, k) for i in range(len(r1)) for k in range(len(r2))]
+    index = iter(all_pairs)
+    degraded: Optional[BackendUnavailable] = None
     with Timer() as timer:
-        while True:
+        while degraded is None:
             chunk = list(itertools.islice(index, window))
             if not chunk:
                 break
@@ -68,6 +78,10 @@ def tuple_join(
                                       max_tokens=max_answer_tokens)
                     handles.append(h)
                     pair_of[id(h)] = (i, k)
+            except BackendUnavailable as exc:
+                cancel_unfinished(client, handles)
+                degraded = exc
+                break
             except Exception:
                 cancel_unfinished(client, handles)
                 raise
@@ -75,13 +89,24 @@ def tuple_join(
                 for h in client.as_completed(handles):
                     resp = h.result()
                     ledger.record(resp.usage)
+                    decided.add(pair_of[id(h)])
                     if parse_yes_no(resp.text):
                         pairs.add(pair_of[id(h)])
+            except BackendUnavailable as exc:
+                cancel_unfinished(client, handles)
+                degraded = exc
             except Exception:
                 cancel_unfinished(client, handles)
                 raise
+    meta = {"operator": "tuple"}
+    if degraded is not None:
+        meta.update({
+            "degraded": True,
+            "error": str(degraded),
+            "undecided": [p for p in all_pairs if p not in decided],
+        })
     return JoinResult(pairs=pairs, ledger=ledger, wall_time_s=timer.elapsed,
-                      meta={"operator": "tuple"})
+                      meta=meta)
 
 
 def _tuple_join_scored(
@@ -94,8 +119,21 @@ def _tuple_join_scored(
 ) -> JoinResult:
     index = [(i, k) for i in range(len(r1)) for k in range(len(r2))]
     ledger = Ledger()
+    degraded: Optional[BackendUnavailable] = None
     with Timer() as timer:
-        scores = score_pairs(index, r1, r2, j, client, ledger, window=window)
+        try:
+            scores = score_pairs(index, r1, r2, j, client, ledger,
+                                 window=window)
+        except BackendUnavailable as exc:
+            scores = dict(exc.partial or {})
+            degraded = exc
     pairs = {p for p, (dec, _) in scores.items() if dec}
+    meta = {"operator": "tuple", "scoring": True}
+    if degraded is not None:
+        meta.update({
+            "degraded": True,
+            "error": str(degraded),
+            "undecided": [p for p in index if p not in scores],
+        })
     return JoinResult(pairs=pairs, ledger=ledger, wall_time_s=timer.elapsed,
-                      meta={"operator": "tuple", "scoring": True})
+                      meta=meta)

@@ -24,6 +24,16 @@ from repro.serve.cluster import (
     ClusterHandle,
     ClusterScoreHandle,
 )
+from repro.serve.faults import (
+    ChaosOracle,
+    FaultInjector,
+    FaultPlan,
+    FaultyEngine,
+    ReplicaKilled,
+    TransientFault,
+    corrupt_response,
+    maybe_chaos_engine,
+)
 from repro.serve.prefix_cache import (
     PagedKVPool,
     PrefixCacheStats,
@@ -39,6 +49,7 @@ from repro.serve.router import (
 )
 
 __all__ = [
+    "ChaosOracle",
     "Cluster",
     "ClusterClient",
     "ClusterClientHandle",
@@ -47,6 +58,11 @@ __all__ = [
     "ContinuousBatchingExecutor",
     "DecodeState",
     "Engine",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultyEngine",
+    "ReplicaKilled",
+    "TransientFault",
     "EngineClient",
     "EngineEmbedder",
     "EngineHandle",
@@ -65,5 +81,7 @@ __all__ = [
     "ServeHandle",
     "StopMatcher",
     "affinity_key",
+    "corrupt_response",
     "make_router",
+    "maybe_chaos_engine",
 ]

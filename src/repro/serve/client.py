@@ -151,10 +151,12 @@ class EngineClient(LLMClient):
         *,
         max_tokens: int,
         stop: Optional[str] = None,
+        deadline: Optional[float] = None,
     ) -> EngineHandle:
         serve = self.executor.submit(
             prompt, max_tokens=max_tokens, stop=stop,
             expected=self._expected(prompt, max_tokens, stop),
+            deadline=deadline,
         )
         return EngineHandle(self, serve)
 

@@ -37,6 +37,12 @@ tier:
   ledgers (one :class:`~repro.core.accounting.Ledger` recording each
   replica's finished requests) merge into cluster totals via their
   ``merge``/``__add__``, with the per-replica breakdown preserved.
+* **Chaos hardening** (DESIGN.md §16): deterministic fault injection
+  (``REPRO_CHAOS`` / an explicit :class:`~repro.serve.faults.FaultPlan`)
+  wraps each replica engine; deadlines propagate from ``submit`` to
+  every serve handle a request materializes as; :meth:`check_health`
+  resurrects dead replicas from the shared param tree; ``hedge_after_s``
+  duplicates stragglers on a second replica (first finisher wins).
 
 :class:`ClusterClient` wraps a cluster in the standard
 :class:`~repro.core.llm_client.LLMClient` submission surface, so
@@ -56,21 +62,25 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
-from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+import time
+from typing import (
+    Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple,
+)
 
 import numpy as np
 
 from repro.core.accounting import Ledger, Usage
 from repro.core.llm_client import (
-    LLMClient, LLMHandle, ScoreHandle, ScoreResponse,
+    BackendUnavailable, LLMClient, LLMHandle, ScoreHandle, ScoreResponse,
 )
-from repro.core.oracle import OracleLLM
+from repro.core.oracle import OracleLLM, SystemClock, VirtualClock
 from repro.serve.client import _to_response
 from repro.serve.engine import Engine, GenResult
 from repro.serve.executor import (
     CANCELLED, FINISHED, ContinuousBatchingExecutor, ExecutorStats,
     ServeHandle,
 )
+from repro.serve.faults import FaultPlan, FaultyEngine, maybe_chaos_engine
 from repro.serve.router import (
     PrefixAffinityRouter, Router, RouterView, affinity_key,
 )
@@ -104,7 +114,20 @@ class ClusterHandle:
     result: Optional[GenResult] = None
     replica: int = -1
     failovers: int = 0
+    #: absolute expiry on the cluster clock, propagated to every serve
+    #: handle this request materializes as (primary, hedge, failover)
+    deadline: Optional[float] = None
+    deadline_expired: bool = False
+    #: cluster-clock submit time — the hedge monitor ages requests off it
+    submitted_at: float = 0.0
+    #: a straggler that got a duplicate on a second replica; first
+    #: finisher wins, the loser is cancelled (or its tokens booked to
+    #: ``Cluster.hedge_waste`` when the race finishes both)
+    hedged: bool = False
+    hedge_replica: int = -1
     _serve: Optional[ServeHandle] = dataclasses.field(default=None, repr=False)
+    _hedge_serve: Optional[ServeHandle] = dataclasses.field(
+        default=None, repr=False)
 
     def done(self) -> bool:
         return self.status in (FINISHED, CANCELLED)
@@ -122,13 +145,18 @@ class _Replica:
     """One engine + executor + worker thread; all mutable state guarded
     by ``self.lock`` (see the module docstring's lock discipline)."""
 
-    def __init__(self, idx: int, engine: Engine, *, max_retries: int):
+    def __init__(self, idx: int, engine: Engine, *,
+                 max_retries: Optional[int], clock=None):
         self.idx = idx
         self.engine = engine
         self.executor = ContinuousBatchingExecutor(
-            engine, max_retries=max_retries)
+            engine, max_retries=max_retries, clock=clock)
         self.lock = threading.Lock()
         self.alive = True
+        #: incarnation counter — bumped by check_health() resurrection;
+        #: chaos injectors are keyed on it so a scheduled kill fires
+        #: once per plan, not once per revival
+        self.gen = 0
         self.error: Optional[BaseException] = None
         self.poison: Optional[BaseException] = None  # injected failure
         #: serve request_id -> ClusterHandle, for every unfinished
@@ -149,19 +177,58 @@ def _usage(r: GenResult) -> Usage:
                  r.accepted_draft_tokens, r.scored_tokens)
 
 
+def _injector_summary(engine) -> Optional[dict]:
+    """Fault-injection counters for the replica summary (None when the
+    replica's engine is not chaos-wrapped).  A resurrected replica's
+    counters restart with its new injector incarnation."""
+    inj = getattr(engine, "injector", None)
+    if inj is None:
+        return None
+    return {
+        "ops": inj.ops,
+        "errors": inj.errors_injected,
+        "spikes": inj.spikes_injected,
+        "killed": inj.killed,
+        "generation": inj.generation,
+    }
+
+
 class Cluster:
     def __init__(
         self,
         engines: Sequence[Engine],
         *,
         router: Optional[Router] = None,
-        max_retries: int = 2,
+        max_retries: Optional[int] = None,
+        chaos: Optional[FaultPlan] = None,
+        clock=None,
+        engine_factory: Optional[Callable[[int], Engine]] = None,
+        hedge_after_s: Optional[float] = None,
     ):
+        """``chaos`` (default: ``FaultPlan.from_env()``) wraps every
+        replica engine in a deterministic fault injector keyed by its
+        replica index; under chaos the cluster runs on a shared
+        :class:`~repro.core.oracle.VirtualClock` so latency spikes and
+        retry backoff are simulated, not slept.  ``engine_factory``
+        (replica idx -> fresh Engine over the shared param tree) arms
+        :meth:`check_health` resurrection.  ``hedge_after_s`` starts the
+        hedge monitor: pending decode requests older than that get a
+        duplicate on a second replica, first finisher wins."""
         if not engines:
             raise ValueError("a cluster needs at least one engine replica")
+        plan = chaos if chaos is not None else FaultPlan.from_env()
+        self.chaos_plan = plan
+        if clock is None:
+            clock = VirtualClock() if plan is not None else SystemClock()
+        self.clock = clock
+        engines = [maybe_chaos_engine(e, replica=i, plan=plan, clock=clock)
+                   for i, e in enumerate(engines)]
         self.router = router if router is not None else PrefixAffinityRouter()
+        self._max_retries = max_retries
+        self._engine_factory = engine_factory
+        self.hedge_after_s = hedge_after_s
         self._replicas = [
-            _Replica(i, e, max_retries=max_retries)
+            _Replica(i, e, max_retries=max_retries, clock=clock)
             for i, e in enumerate(engines)
         ]
         self._mu = threading.Lock()
@@ -175,11 +242,25 @@ class Cluster:
         #: completion surfaces must count them explicitly
         self._limbo: List[ClusterHandle] = []
         self._next_id = 0
+        # -- robustness counters (guarded by _mu), DESIGN.md §16 --------
+        self.failovers = 0        # requests re-placed off a dead replica
+        self.resurrections = 0    # replicas rebuilt by check_health()
+        self.hedges_launched = 0
+        self.hedges_won = 0       # the duplicate finished first
+        self.hedges_lost = 0      # the primary finished first
+        #: tokens of hedge losers that finished before their cancel
+        #: landed — real work the cluster paid for but didn't use
+        self.hedge_waste = Ledger()
         for rep in self._replicas:
             rep.thread = threading.Thread(
                 target=self._worker, args=(rep,),
                 name=f"cluster-replica-{rep.idx}", daemon=True)
             rep.thread.start()
+        self._hedge_thread: Optional[threading.Thread] = None
+        if hedge_after_s is not None:
+            self._hedge_thread = threading.Thread(
+                target=self._hedge_monitor, name="cluster-hedge", daemon=True)
+            self._hedge_thread.start()
 
     # ------------------------------------------------------------------
     # Construction convenience
@@ -193,9 +274,12 @@ class Cluster:
         n: int,
         *,
         router: Optional[Router] = None,
-        max_retries: int = 2,
+        max_retries: Optional[int] = None,
         devices: Optional[Sequence[Any]] = None,
         tp: Optional[int] = None,
+        chaos: Optional[FaultPlan] = None,
+        clock=None,
+        hedge_after_s: Optional[float] = None,
         **engine_kwargs,
     ) -> "Cluster":
         """Build ``n`` identical engine replicas over shared weights —
@@ -215,6 +299,10 @@ class Cluster:
         concurrently.  On a single device the weights are shared by
         reference — replicas still isolate their KV pools, caches, and
         executors.
+
+        The construction recipe is kept as an ``engine_factory`` closure
+        over the shared param tree, which is what lets
+        :meth:`Cluster.check_health` rebuild a dead replica in place.
         """
         import jax
 
@@ -229,24 +317,29 @@ class Cluster:
                     f"{n} replicas x tp={tp} need {n * tp} devices, "
                     f"got {len(devs)} — force host devices via XLA_FLAGS="
                     "--xla_force_host_platform_device_count=N")
-            engines = []
-            for i in range(n):
+
+            def factory(i: int) -> Engine:
                 mesh = make_serving_mesh(devs[i * tp:(i + 1) * tp], tp=tp)
-                engines.append(
-                    Engine(cfg, params, tokenizer, mesh=mesh,
-                           **engine_kwargs))
-            return cls(engines, router=router, max_retries=max_retries)
+                return Engine(cfg, params, tokenizer, mesh=mesh,
+                              **engine_kwargs)
+
+            return cls([factory(i) for i in range(n)], router=router,
+                       max_retries=max_retries, engine_factory=factory,
+                       chaos=chaos, clock=clock, hedge_after_s=hedge_after_s)
 
         if devices is None:
             devs = jax.devices()
             devices = ([devs[i % len(devs)] for i in range(n)]
                        if len(devs) > 1 else [None] * n)
-        engines = []
-        for i in range(n):
+
+        def factory(i: int) -> Engine:
             p = (params if devices[i] is None
                  else jax.device_put(params, devices[i]))
-            engines.append(Engine(cfg, p, tokenizer, **engine_kwargs))
-        return cls(engines, router=router, max_retries=max_retries)
+            return Engine(cfg, p, tokenizer, **engine_kwargs)
+
+        return cls([factory(i) for i in range(n)], router=router,
+                   max_retries=max_retries, engine_factory=factory,
+                   chaos=chaos, clock=clock, hedge_after_s=hedge_after_s)
 
     @property
     def engines(self) -> List[Engine]:
@@ -265,22 +358,29 @@ class Cluster:
         alive replicas, each batch one :meth:`Engine.embed_rows` call
         made under that replica's lock (workers hold it only
         transiently, so a direct engine call is safe and serializes
-        against in-flight decode steps).  Embedding is synchronous and
-        outside the failover machinery — a replica failure mid-batch
-        propagates to the caller.
+        against in-flight decode steps).  A replica failure mid-batch
+        goes through the ordinary failover path — the replica is torn
+        down (its queued decode work re-places on survivors) and the
+        failed chunk retries on the remaining alive replicas; only when
+        none are left does :class:`BackendUnavailable` reach the caller.
         """
-        alive = [rep for rep in self._replicas if rep.alive]
-        if not alive:
-            raise RuntimeError("embed_rows: no alive replicas")
         vecs: List[np.ndarray] = []
         lens: List[int] = []
         start, turn = 0, 0
         while start < len(texts):
+            alive = [rep for rep in self._replicas if rep.alive]
+            if not alive:
+                raise BackendUnavailable(
+                    "embed_rows: no alive replicas") from self._fatal
             rep = alive[turn % len(alive)]
             turn += 1
             chunk = list(texts[start:start + rep.engine.slots])
-            with rep.lock:
-                v, l = rep.engine.embed_rows(chunk)
+            try:
+                with rep.lock:
+                    v, l = rep.engine.embed_rows(chunk)
+            except Exception as exc:
+                self._on_replica_failure(rep, exc)
+                continue  # re-place this chunk on a survivor
             vecs.append(v)
             lens.extend(l)
             start += len(chunk)
@@ -296,8 +396,15 @@ class Cluster:
         max_tokens: int,
         stop: Optional[str] = None,
         expected: Optional[str] = None,
+        deadline: Optional[float] = None,
     ) -> ClusterHandle:
-        """Route one request to a replica; returns immediately."""
+        """Route one request to a replica; returns immediately.
+
+        ``deadline`` is an absolute time on :attr:`clock`; it rides
+        along to every serve handle the request materializes as, so an
+        overdue request is cancelled (pages drained, partial work backed
+        out) wherever it currently lives — including after failover or
+        hedging."""
         with self._mu:
             rid = self._next_id
             self._next_id += 1
@@ -305,7 +412,9 @@ class Cluster:
             request_id=rid, prompt=prompt, max_tokens=max_tokens, stop=stop,
             expected=expected,
             prompt_tokens=self._replicas[0].engine.count_tokens(prompt),
+            deadline=deadline,
         )
+        ch.submitted_at = self.clock.now()
         self._place(ch)
         return ch
 
@@ -335,6 +444,7 @@ class Cluster:
             expected=None, prompt_tokens=seq_tokens,
             score=continuation, expected_score=expected_logprob,
         )
+        ch.submitted_at = self.clock.now()
         self._place(ch)
         return ch
 
@@ -361,7 +471,7 @@ class Cluster:
                 if self._fatal is not None or not view.alive:
                     # the last replica may have flipped dead while its
                     # failover is still publishing the fatal flag
-                    raise RuntimeError(
+                    raise BackendUnavailable(
                         "cluster has no live replicas") from self._fatal
                 idx = self.router.pick(key, cost, view)
             rep = self._replicas[idx]
@@ -375,7 +485,7 @@ class Cluster:
                 else:
                     serve = rep.executor.submit(
                         ch.prompt, max_tokens=ch.max_tokens, stop=ch.stop,
-                        expected=ch.expected)
+                        expected=ch.expected, deadline=ch.deadline)
                 ch._serve = serve
                 ch.replica = rep.idx
                 rep.handles[serve.request_id] = ch
@@ -434,6 +544,15 @@ class Cluster:
                 if ok:
                     del rep.handles[serve.request_id]
             if ok:
+                twin = ch._hedge_serve
+                if twin is not None and 0 <= ch.hedge_replica:
+                    # a hedged straggler lives on two replicas — kill
+                    # the duplicate too, or it would finish as waste
+                    hrep = self._replicas[ch.hedge_replica]
+                    with hrep.lock:
+                        hrep.handles.pop(twin.request_id, None)
+                        if hrep.alive and not twin.done():
+                            hrep.executor.cancel(twin)
                 with self._mu:
                     ch.status = CANCELLED
                     self._done.notify_all()
@@ -451,7 +570,7 @@ class Cluster:
         return sorted(set(seen), key=lambda c: c.request_id)
 
     def _raise_fatal(self) -> None:
-        raise RuntimeError(
+        raise BackendUnavailable(
             "cluster failed: every replica is dead and the remaining "
             "requests cannot be re-placed") from self._fatal
 
@@ -494,6 +613,9 @@ class Cluster:
                     self._raise_fatal()
                 self._done.wait()
         if ch.status == CANCELLED:
+            if ch.deadline_expired:
+                raise RuntimeError(
+                    f"request {ch.request_id} missed its deadline")
             raise RuntimeError(f"request {ch.request_id} was cancelled")
         return ch.result
 
@@ -536,17 +658,64 @@ class Cluster:
                 for serve in finished:
                     ch = rep.handles.pop(serve.request_id, None)
                     if ch is not None:
-                        rep.ledger.record(_usage(serve.result))
                         completions.append((serve, ch))
             if failure is not None:
                 self._on_replica_failure(rep, failure)
                 return
             if completions:
-                with self._mu:
-                    for serve, ch in completions:
-                        ch.result = serve.result
-                        ch.status = FINISHED
-                    self._done.notify_all()
+                self._resolve(rep, completions)
+
+    def _resolve(self, rep: _Replica,
+                 completions: List[tuple]) -> None:
+        """Publish one step's retired serves to their cluster handles.
+
+        Winner/loser/expiry decisions happen under ``_mu`` (the hedge
+        twin may retire on another replica concurrently); the replica
+        ledger is booked *before* consumers are notified, so accounting
+        is already exact when ``drain()`` returns.
+        """
+        winners: List[GenResult] = []
+        expiries = 0
+        losers: List[Tuple[int, ServeHandle]] = []
+        with self._mu:
+            for serve, ch in completions:
+                if ch.done():
+                    # hedge race: the twin copy resolved this handle
+                    # first — book the loser's finished tokens as waste
+                    if serve.status == FINISHED:
+                        self.hedge_waste.record(_usage(serve.result))
+                    continue
+                if serve.status == CANCELLED:   # deadline expiry
+                    ch.deadline_expired = True
+                    ch.status = CANCELLED
+                    expiries += 1
+                    continue
+                ch.result = serve.result
+                if ch.hedged:
+                    if serve is ch._hedge_serve:
+                        self.hedges_won += 1
+                        loser, loser_rep = ch._serve, ch.replica
+                    else:
+                        self.hedges_lost += 1
+                        loser, loser_rep = ch._hedge_serve, ch.hedge_replica
+                    if (loser is not None and 0 <= loser_rep
+                            and loser_rep != rep.idx):
+                        losers.append((loser_rep, loser))
+                ch.status = FINISHED
+                winners.append(serve.result)
+        with rep.lock:
+            for result in winners:
+                rep.ledger.record(_usage(result))
+            for _ in range(expiries):
+                rep.ledger.record_expiry()
+        for loser_rep, loser in losers:
+            lrep = self._replicas[loser_rep]
+            with lrep.lock:
+                lrep.handles.pop(loser.request_id, None)
+                if lrep.alive and not loser.done():
+                    lrep.executor.cancel(loser)
+        with self._mu:
+            self._done.notify_all()
 
     def _on_replica_failure(self, rep: _Replica, exc: BaseException) -> None:
         """Kill ``rep`` and re-place its unfinished requests elsewhere.
@@ -557,30 +726,53 @@ class Cluster:
         the prompts can be resubmitted — same text, same budgets — on
         surviving replicas.  With no survivor left the cluster goes
         fatal and every waiter raises.
+
+        Idempotent and thread-safe: both the replica's own worker and a
+        synchronous caller (``embed_rows``) may report the same death;
+        the second call is a no-op.
         """
         with rep.lock:
+            if not rep.alive:
+                return  # a concurrent reporter already tore it down
             rep.alive = False
             rep.error = exc
             victims = rep.executor.evacuate()
-            orphans = [rep.handles.pop(s.request_id)
-                       for s in victims if s.request_id in rep.handles]
+            orphans = []
+            for s in victims:
+                ch = rep.handles.pop(s.request_id, None)
+                if ch is None:
+                    continue
+                if s is ch._hedge_serve:
+                    # only the duplicate died; the primary still runs
+                    ch._hedge_serve = None
+                    ch.hedge_replica = -1
+                    continue
+                if ch._hedge_serve is not None:
+                    # the primary died but its hedge twin survives
+                    # elsewhere — promote the twin instead of re-placing
+                    ch._serve = ch._hedge_serve
+                    ch.replica = ch.hedge_replica
+                    ch._hedge_serve = None
+                    ch.hedge_replica = -1
+                    continue
+                orphans.append(ch)
             rep.handles.clear()
         with self._mu:
             # limbo makes the orphans visible to drain/_pending_handles/
             # cancel while they belong to no replica's handle map
             self._limbo.extend(orphans)
             self.router.forget(rep.idx)
+            self._work.notify_all()  # the dead replica's worker exits
             survivors = any(r.alive for r in self._replicas)
             if not survivors:
                 self._fatal = exc
                 self._done.notify_all()
-                self._work.notify_all()
                 return
         for ch in orphans:
             ch.failovers += 1
             try:
                 self._place(ch)
-            except RuntimeError:
+            except BackendUnavailable:
                 return  # a concurrent failure took the last survivor;
                 # remaining orphans stay in limbo and waiters see _fatal
             except Exception:
@@ -595,6 +787,7 @@ class Cluster:
                 continue
             with self._mu:
                 self._limbo.remove(ch)
+                self.failovers += 1
         with self._mu:
             self._done.notify_all()  # waiters re-check liveness
 
@@ -610,6 +803,154 @@ class Cluster:
         with self._mu:
             self._work.notify_all()
 
+    # ------------------------------------------------------------------
+    # Resurrection + hedging (DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def check_health(self) -> int:
+        """Rebuild every dead replica from the shared param tree.
+
+        Requires an ``engine_factory`` (``replicate()`` installs one).
+        For each dead replica: a fresh :class:`Engine` — the crash took
+        its KV pool, prefix cache, and executor, but the weights are the
+        shared (device-resident) param tree, so rebuilding is cheap —
+        then a fresh executor carrying over the dead incarnation's
+        stats, the router re-admits the index (affinity keys re-home on
+        the next pick), and a new worker thread starts.  Under chaos the
+        revived engine gets a next-generation injector, so a scheduled
+        ``kill_replica`` fires once per plan, not once per revival.  A
+        cluster that went fatal comes back: the fatal flag clears and
+        limbo orphans re-place onto the revived replicas.  Returns the
+        number of replicas revived.
+        """
+        if self._engine_factory is None:
+            return 0
+        revived = 0
+        for rep in self._replicas:
+            if rep.alive:
+                continue
+            engine = self._engine_factory(rep.idx)
+            gen = rep.gen + 1
+            if (self.chaos_plan is not None
+                    and not isinstance(engine, FaultyEngine)):
+                engine = FaultyEngine(
+                    engine,
+                    self.chaos_plan.injector(
+                        rep.idx, clock=self.clock, generation=gen))
+            executor = ContinuousBatchingExecutor(
+                engine, max_retries=self._max_retries, clock=self.clock)
+            with rep.lock:
+                # the dead incarnation's counters stay part of cluster
+                # totals — resurrection must not un-count work
+                executor.stats.merge(rep.executor.stats)
+                rep.gen = gen
+                rep.engine = engine
+                rep.executor = executor
+                rep.handles.clear()
+                rep.error = None
+                rep.poison = None
+                rep.alive = True
+            with self._mu:
+                self.router.admit(rep.idx)
+                self.resurrections += 1
+                rep.thread = threading.Thread(
+                    target=self._worker, args=(rep,),
+                    name=f"cluster-replica-{rep.idx}-gen{gen}", daemon=True)
+                rep.thread.start()
+            revived += 1
+        if revived:
+            self._replace_limbo()
+        return revived
+
+    def _replace_limbo(self) -> None:
+        """After a revival, clear the fatal flag and re-place the
+        orphans that were stranded when the last replica died."""
+        with self._mu:
+            self._fatal = None
+            for ch in [c for c in self._limbo if c.done()]:
+                self._limbo.remove(ch)
+            orphans = list(self._limbo)
+            self._work.notify_all()
+        for ch in orphans:
+            ch.failovers += 1
+            try:
+                self._place(ch)
+            except BackendUnavailable:
+                return  # died again already; orphans stay in limbo
+            except Exception:
+                with self._mu:
+                    ch.status = CANCELLED
+                    self._limbo.remove(ch)
+                    self._done.notify_all()
+                continue
+            with self._mu:
+                self._limbo.remove(ch)
+                self.failovers += 1
+        with self._mu:
+            self._done.notify_all()
+
+    def _hedge_monitor(self) -> None:
+        """Background scan that duplicates stragglers (hedged requests).
+
+        The scan cadence is real time (the monitor is a poll loop), but
+        request *age* is measured on the cluster clock — under chaos the
+        virtual clock only advances through injected latency spikes, so
+        exactly the spiked requests age past the threshold.
+        """
+        interval = max(0.005, float(self.hedge_after_s) / 4.0)
+        while True:
+            with self._mu:
+                if not self._running:
+                    return
+            try:
+                self._maybe_hedge()
+            except BackendUnavailable:
+                pass  # cluster went fatal mid-scan; waiters handle it
+            time.sleep(interval)
+
+    def _maybe_hedge(self) -> None:
+        """Duplicate every pending decode request older than
+        ``hedge_after_s`` onto a second alive replica.  First finisher
+        wins (:meth:`_resolve` decides under ``_mu``); the loser is
+        cancelled, or its tokens are booked to :attr:`hedge_waste` when
+        the race finishes both copies."""
+        if self.hedge_after_s is None:
+            return
+        now = self.clock.now()
+        stale: List[ClusterHandle] = []
+        for rep in self._replicas:
+            if not rep.alive:
+                continue
+            with rep.lock:
+                stale.extend(
+                    ch for ch in rep.handles.values()
+                    if (not ch.hedged and ch.score is None and not ch.done()
+                        and now - ch.submitted_at >= self.hedge_after_s))
+        for ch in stale:
+            with self._mu:
+                if self._fatal is not None:
+                    return
+                view = self._view()
+                alts = [i for i in view.alive if i != ch.replica]
+                if not alts:
+                    return  # nowhere to hedge to
+                idx = min(alts, key=lambda i: (view.outstanding[i], i))
+            rep = self._replicas[idx]
+            with rep.lock:
+                if not rep.alive:
+                    continue
+                if ch.done() or ch.hedged:
+                    continue  # resolved (or hedged) while we scanned
+                serve = rep.executor.submit(
+                    ch.prompt, max_tokens=ch.max_tokens, stop=ch.stop,
+                    expected=ch.expected, deadline=ch.deadline)
+                ch._hedge_serve = serve
+                ch.hedge_replica = idx
+                ch.hedged = True
+                rep.handles[serve.request_id] = ch
+            with self._mu:
+                self.hedges_launched += 1
+                self._work.notify_all()
+
     def shutdown(self) -> None:
         """Stop the worker threads (idempotent).  Pending requests are
         left unresolved — call :meth:`drain` first if they matter."""
@@ -620,6 +961,8 @@ class Cluster:
         for rep in self._replicas:
             if rep.thread is not None and rep.thread.is_alive():
                 rep.thread.join(timeout=60)
+        if self._hedge_thread is not None and self._hedge_thread.is_alive():
+            self._hedge_thread.join(timeout=5)
 
     def __enter__(self) -> "Cluster":
         return self
@@ -679,12 +1022,25 @@ class Cluster:
             "ledger": self.ledger().summary(),
             "router": self.router.stats.summary(),
             "prefix_cache": self.prefix_cache_stats(),
+            "robustness": {
+                "failovers": self.failovers,
+                "resurrections": self.resurrections,
+                "hedges_launched": self.hedges_launched,
+                "hedges_won": self.hedges_won,
+                "hedges_lost": self.hedges_lost,
+                "hedge_waste_tokens": (self.hedge_waste.prompt_tokens
+                                       + self.hedge_waste.completion_tokens),
+                "deadline_expired": merged.deadline_expired,
+                "chaos": (dataclasses.asdict(self.chaos_plan)
+                          if self.chaos_plan is not None else None),
+            },
             "per_replica": [
                 {
                     "replica": rep.idx,
                     "alive": rep.alive,
                     "stats": dataclasses.asdict(rep.executor.stats),
                     "ledger": rep.ledger.summary(),
+                    "injector": _injector_summary(rep.engine),
                 }
                 for rep in self._replicas
             ],
@@ -802,10 +1158,12 @@ class ClusterClient(LLMClient):
         *,
         max_tokens: int,
         stop: Optional[str] = None,
+        deadline: Optional[float] = None,
     ) -> ClusterClientHandle:
         ch = self.cluster.submit(
             prompt, max_tokens=max_tokens, stop=stop,
             expected=self._expected(prompt, max_tokens, stop),
+            deadline=deadline,
         )
         return ClusterClientHandle(self, ch)
 

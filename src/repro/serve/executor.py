@@ -21,7 +21,10 @@ receive future-like handles; the executor:
 * enforces ``max_tokens`` / stop strings / EOS **per row** with O(1)
   incremental stop matching (:class:`repro.serve.engine.StopMatcher`),
 * **re-queues** in-flight requests on engine failure (block-join prompts
-  are idempotent — the paper's overflow path) up to ``max_retries``.
+  are idempotent — the paper's overflow path) up to ``max_retries``,
+  sleeping an exponential jittered backoff on a pluggable clock between
+  attempts, and cancels requests whose ``deadline`` passed before any
+  further work is spent on them (DESIGN.md §16).
 
 The synchronous drive model: every call to :meth:`step` performs one
 refill+decode round; :meth:`as_completed` / :meth:`drain` / :meth:`result`
@@ -31,15 +34,18 @@ loop over :meth:`step` until the requests a caller cares about resolve.
 from __future__ import annotations
 
 import dataclasses
+import random
 from collections import deque
 from typing import Deque, Dict, Iterable, Iterator, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.oracle import SystemClock
 from repro.serve.engine import (
     DecodeState, Engine, GenResult, StopMatcher, pack_id, pack_ids,
 )
+from repro.serve.faults import FaultyEngine, maybe_chaos_engine
 
 QUEUED, ACTIVE, FINISHED, CANCELLED = "queued", "active", "finished", "cancelled"
 
@@ -58,6 +64,11 @@ class ServeHandle:
     status: str = QUEUED
     result: Optional[GenResult] = None
     retries: int = 0
+    #: absolute time on the executor's clock after which the request is
+    #: cancelled and its pages drained instead of served (DESIGN.md §16)
+    deadline: Optional[float] = None
+    #: True when the cancellation was a deadline expiry, not a caller's
+    deadline_expired: bool = False
     #: prefill-only scoring (DESIGN.md §13): the candidate continuation to
     #: score after ``prompt`` (None for generation requests).  Score
     #: requests carry ``max_tokens=0`` and ``prompt_tokens`` = the FULL
@@ -118,6 +129,13 @@ class ExecutorStats:
     #: the whole point of the path
     score_requests: int = 0
     scored_tokens: int = 0
+    #: robustness counters (DESIGN.md §16): failed steps retried after
+    #: backoff, total backoff slept (seconds on the executor's clock —
+    #: a float, summed exactly like every other field by merge), and
+    #: requests cancelled because their deadline passed
+    retries: int = 0
+    backoff_s: float = 0.0
+    deadline_expired: int = 0
 
     @property
     def model_passes(self) -> int:
@@ -143,9 +161,44 @@ class ExecutorStats:
 
 
 class ContinuousBatchingExecutor:
-    def __init__(self, engine: Engine, *, max_retries: int = 2):
+    def __init__(
+        self,
+        engine: Engine,
+        *,
+        max_retries: Optional[int] = None,
+        clock=None,
+        backoff_base_s: float = 0.02,
+        backoff_factor: float = 2.0,
+        backoff_max_s: float = 2.0,
+        backoff_jitter: float = 0.5,
+        backoff_seed: int = 0,
+    ):
+        # REPRO_CHAOS=<seed> arms deterministic fault injection at the
+        # engine seam (no-op when unset or when the cluster already
+        # wrapped this engine with a per-replica injector)
+        engine = maybe_chaos_engine(engine)
         self.engine = engine
+        if max_retries is None:
+            # env-armed chaos injects ~1% step errors; per-request retry
+            # counters accumulate over a request's whole lifetime, so the
+            # default ceiling must sit well above the expected draw count
+            max_retries = 8 if isinstance(engine, FaultyEngine) else 2
         self.max_retries = max_retries
+        #: the clock backoff sleeps on and deadlines are checked against.
+        #: Defaults to the fault injector's (virtual) clock under chaos —
+        #: retry schedules stay deterministic and free — and to the real
+        #: wall clock otherwise.
+        if clock is None:
+            clock = (engine.injector.clock
+                     if isinstance(engine, FaultyEngine) else SystemClock())
+        self.clock = clock
+        self.backoff_base_s = backoff_base_s
+        self.backoff_factor = backoff_factor
+        self.backoff_max_s = backoff_max_s
+        self.backoff_jitter = backoff_jitter
+        self._rng = random.Random(backoff_seed)
+        self._failstreak = 0  # consecutive failed steps; reset on success
+        self._any_deadline = False  # sweep guard: no deadlines, no scans
         self.stats = ExecutorStats()
         self._queue: Deque[ServeHandle] = deque()
         self._slots: List[Optional[ServeHandle]] = [None] * engine.slots
@@ -168,8 +221,18 @@ class ContinuousBatchingExecutor:
         max_tokens: int,
         stop: Optional[str] = None,
         expected: Optional[str] = None,
+        deadline: Optional[float] = None,
     ) -> ServeHandle:
-        """Enqueue one request; returns immediately with a handle."""
+        """Enqueue one request; returns immediately with a handle.
+
+        ``deadline`` is an absolute time on :attr:`clock`; at each step
+        the executor cancels overdue requests (queued or active) before
+        doing any work — their pages drain through the ordinary cancel
+        path and their partial-attempt stats are backed out, so an
+        expired request costs exactly what it consumed and conserves
+        accounting.  Expired handles resolve as cancelled with
+        ``deadline_expired=True``.
+        """
         ntok = self.engine.count_tokens(prompt)
         if ntok > self.engine.max_seq - 1:
             raise ValueError(
@@ -187,8 +250,11 @@ class ContinuousBatchingExecutor:
         handle = ServeHandle(
             request_id=self._next_id, prompt=prompt, max_tokens=max_tokens,
             stop=stop, expected=expected, prompt_tokens=ntok, _owner=self,
+            deadline=deadline,
         )
         self._next_id += 1
+        if deadline is not None:
+            self._any_deadline = True
         self._queue.append(handle)
         self._queued_tokens += self._need(handle)
         return handle
@@ -286,13 +352,17 @@ class ContinuousBatchingExecutor:
     # Drive side
     # ------------------------------------------------------------------
     def step(self) -> List[ServeHandle]:
-        """One refill + decode round; returns handles finished during it.
+        """One refill + decode round; returns handles *resolved* during
+        it — finished requests plus any whose deadline expired (the
+        latter are CANCELLED; completion surfaces filter on status).
 
         Engine failures re-queue the in-flight requests (idempotent
-        prompts) and count a retry against each; the failure is swallowed —
-        the next :meth:`step` starts them over on a fresh state — unless a
-        request has exhausted ``max_retries``.
+        prompts) and count a retry against each; the failure is swallowed
+        — the executor sleeps an exponentially-growing jittered backoff
+        on its clock and the next :meth:`step` starts them over on a
+        fresh state — unless a request has exhausted ``max_retries``.
         """
+        expired = self._expire_deadlines()
         try:
             finished = self._step_inner()
         except Exception:
@@ -300,7 +370,9 @@ class ContinuousBatchingExecutor:
             self._score_exhausted = False
             if exhausted:
                 raise
-            return []
+            self._backoff()
+            return expired
+        self._failstreak = 0
         if self._state is not None and not self.pending:
             # fully idle: release the dense slots × max_seq cache
             # (GiB-scale at real configs) — init_state rebuilds it on the
@@ -308,7 +380,38 @@ class ContinuousBatchingExecutor:
             # _free_slot, so the paged release is a no-op backstop.
             self.engine.release_state(self._state)
             self._state = None
-        return finished
+        return expired + finished
+
+    def _expire_deadlines(self) -> List[ServeHandle]:
+        """Cancel every pending request whose deadline has passed.
+
+        Runs before any refill or decode work, so an overdue request
+        never consumes another model pass; the cancel path drains its
+        pages and backs out its partial-attempt stats.
+        """
+        if not self._any_deadline:
+            return []
+        now = self.clock.now()
+        expired = [h for h in self._all_pending()
+                   if h.deadline is not None and now >= h.deadline]
+        for h in expired:
+            self.cancel(h)
+            h.deadline_expired = True
+            self.stats.deadline_expired += 1
+        return expired
+
+    def _backoff(self) -> None:
+        """Sleep before the next retry: exponential in the consecutive
+        -failure streak, multiplicatively jittered (deterministic per
+        executor via ``backoff_seed``), capped at ``backoff_max_s``."""
+        self._failstreak += 1
+        delay = min(self.backoff_max_s,
+                    self.backoff_base_s
+                    * self.backoff_factor ** (self._failstreak - 1))
+        delay *= 1.0 + self.backoff_jitter * self._rng.random()
+        self.stats.retries += 1
+        self.stats.backoff_s += delay
+        self.clock.sleep(delay)
 
     def _next_token(self, h: ServeHandle, nxt: Optional[np.ndarray],
                     slot: int, eos: int) -> int:
@@ -458,7 +561,8 @@ class ContinuousBatchingExecutor:
             for h in self.step():
                 if h.request_id in remaining:
                     del remaining[h.request_id]
-                    yield h
+                    if h.status == FINISHED:  # deadline expiries drop out
+                        yield h
             # resolved outside this loop (another consumer's step, or
             # cancelled by an overflow consumer) — settle or drop
             for rid, h in [(r, h) for r, h in remaining.items() if h.done()]:
@@ -472,6 +576,9 @@ class ContinuousBatchingExecutor:
         while not handle.done():
             self.step()
         if handle.status == CANCELLED:
+            if handle.deadline_expired:
+                raise RuntimeError(
+                    f"request {handle.request_id} missed its deadline")
             raise RuntimeError(f"request {handle.request_id} was cancelled")
         return handle.result
 

@@ -91,6 +91,15 @@ class Router:
     def forget(self, replica: int) -> None:
         """A replica died — drop any state pinning work to it."""
 
+    def admit(self, replica: int) -> None:
+        """A replica (re)joined the alive set — resurrection calls this.
+
+        Routing is alive-set-driven: ``pick`` only ever returns members
+        of ``view.alive``, so a revived replica becomes routable the
+        moment the cluster marks it alive again.  The hook exists for
+        policies keeping eager per-replica state (none of the built-ins
+        do; affinity re-pins lazily, exactly as after a death)."""
+
 
 class PrefixAffinityRouter(Router):
     """Prefix-sticky routing with a least-outstanding-tokens spill valve.

@@ -1,0 +1,718 @@
+"""Chaos hardening (DESIGN.md §16): deterministic fault injection,
+retry + backoff, deadlines, replica resurrection, hedged requests, and
+degraded-mode joins.
+
+The core invariant pinned here: under any *transient* fault schedule
+(step errors, latency spikes, replica kills with >= 1 survivor) a join
+completes **token-identical** to the fault-free run — same pair set,
+same call count, same prompt/completion token totals — and accounting
+stays exactly conserved.  Faults are drawn from a seeded
+:class:`~repro.serve.faults.FaultPlan`, so every failing schedule is
+replayable.
+
+The property over random fault plans runs twice: a seeded stdlib-random
+sweep that always runs, and a hypothesis-driven variant when hypothesis
+is installed (it is a dev-only dependency).
+"""
+
+import os
+import random
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    OracleLLM, Overflow, adaptive_join, block_join, cascade_tuple_join,
+    tuple_join,
+)
+from repro.core.accounting import Usage, ZERO_USAGE
+from repro.core.llm_client import BackendUnavailable, LLMResponse
+from repro.core.oracle import SystemClock, VirtualClock
+from repro.core.prompts import (
+    FINISHED, block_prompt, parse_index_pairs, tuple_prompt,
+)
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_params, model_specs
+from repro.serve import (
+    ChaosOracle,
+    Cluster,
+    ClusterClient,
+    ContinuousBatchingExecutor,
+    Engine,
+    EngineClient,
+    FaultPlan,
+    FaultyEngine,
+    ReplicaKilled,
+    TransientFault,
+    corrupt_response,
+    maybe_chaos_engine,
+)
+
+KEY = jax.random.PRNGKey(7)
+REPLICAS = max(2, int(os.environ.get("REPRO_REPLICAS", "2")))
+ENGINE_KW = dict(max_seq=512, slots=4, prefix_cache=True, spec_decode=True)
+
+
+def make_tables(n1=8, n2=16):
+    colours = ["red", "blue"]
+    left = [f"item {i} in {colours[i % 2]}" for i in range(n1)]
+    right = [f"want {k} {colours[k % 2]}" for k in range(n2)]
+    pred = lambda a, b: a.split()[-1] == b.split()[-1]
+    truth = {(i, k) for i, a in enumerate(left)
+             for k, b in enumerate(right) if pred(a, b)}
+    return left, right, pred, truth
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_smoke_config("granite-3-2b")
+    return cfg, init_params(model_specs(cfg), KEY, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def single_engine(params):
+    cfg, p = params
+    return Engine(cfg, p, ByteTokenizer(cfg.vocab_size), **ENGINE_KW)
+
+
+@pytest.fixture(scope="module")
+def reference_join(params, single_engine):
+    """Fault-free single-engine block join — the token-identity anchor."""
+    left, right, pred, truth = make_tables()
+    ref = block_join(left, right, "the colours match",
+                     EngineClient(single_engine,
+                                  oracle=OracleLLM(pred, context_limit=512)),
+                     4, 2)
+    assert ref.pairs == truth
+    return left, right, pred, truth, ref
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultInjector determinism (host-side, no engines)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_draws_are_deterministic():
+    a = FaultPlan(seed=11, step_error_rate=0.5)
+    b = FaultPlan(seed=11, step_error_rate=0.5)
+    assert a.unit("error", 0, 0, "decode_active", 3) == \
+        b.unit("error", 0, 0, "decode_active", 3)
+    # distinct keys give distinct draws; distinct seeds too
+    assert a.unit("error", 0, 0, "decode_active", 3) != \
+        a.unit("error", 0, 0, "decode_active", 4)
+    assert a.unit("x") != FaultPlan(seed=12).unit("x")
+    assert all(0.0 <= a.unit("u", i) < 1.0 for i in range(100))
+
+
+def _schedule(plan, replica, seams, generation=0):
+    """Replay ``seams`` through a fresh injector; record what fired."""
+    inj = plan.injector(replica, clock=VirtualClock(), generation=generation)
+    events = []
+    for s in seams:
+        try:
+            inj.before(s)
+            events.append("ok")
+        except TransientFault:
+            events.append("error")
+        except ReplicaKilled:
+            events.append("killed")
+    return events, inj
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_injector_schedule_is_replayable(seed):
+    rng = random.Random(seed)
+    plan = FaultPlan(seed=seed, step_error_rate=rng.uniform(0.05, 0.4),
+                     latency_spike_rate=rng.uniform(0.0, 0.3),
+                     spike_s=0.01)
+    seams = [rng.choice(("prefill_rows", "decode_active", "verify_active",
+                         "score_rows", "embed_rows")) for _ in range(200)]
+    ev1, inj1 = _schedule(plan, replica=0, seams=seams)
+    ev2, inj2 = _schedule(plan, replica=0, seams=seams)
+    assert ev1 == ev2
+    assert inj1.errors_injected == inj2.errors_injected
+    assert inj1.spikes_injected == inj2.spikes_injected
+    assert inj1.clock.now() == inj2.clock.now()
+    # a different replica (or a resurrected generation) draws a
+    # different stream from the same plan
+    ev_other, _ = _schedule(plan, replica=1, seams=seams)
+    ev_gen1, _ = _schedule(plan, replica=0, seams=seams, generation=1)
+    if plan.step_error_rate > 0.2:
+        assert ev_other != ev1 or ev_gen1 != ev1
+
+
+def test_injector_kill_latch_and_generation():
+    plan = FaultPlan(seed=1, kill_replica=0, kill_after_ops=3)
+    seams = ["decode_active"] * 8
+    events, inj = _schedule(plan, replica=0, seams=seams)
+    assert events == ["ok"] * 3 + ["killed"] * 5  # latch: dead stays dead
+    assert inj.killed
+    # the kill targets one replica and one generation only
+    assert _schedule(plan, replica=1, seams=seams)[0] == ["ok"] * 8
+    assert _schedule(plan, replica=0, seams=seams,
+                     generation=1)[0] == ["ok"] * 8
+
+
+def test_from_env_is_transient_only(monkeypatch):
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)
+    assert FaultPlan.from_env() is None
+    monkeypatch.setenv("REPRO_CHAOS", "42")
+    plan = FaultPlan.from_env()
+    assert plan.seed == 42
+    assert plan.step_error_rate > 0 and plan.latency_spike_rate > 0
+    # token-identity by construction: no kills, no output corruption
+    assert plan.kill_replica is None
+    assert plan.garbage_rate == 0.0 and plan.truncate_rate == 0.0
+
+
+def test_maybe_chaos_engine_is_idempotent(monkeypatch):
+    class Dummy:
+        pass
+
+    eng = Dummy()
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)
+    assert maybe_chaos_engine(eng) is eng  # chaos off: untouched
+    plan = FaultPlan(seed=9, step_error_rate=0.1)
+    wrapped = maybe_chaos_engine(eng, replica=0, plan=plan)
+    assert isinstance(wrapped, FaultyEngine)
+    # already wrapped: never double-injected
+    assert maybe_chaos_engine(wrapped, replica=0, plan=plan) is wrapped
+    monkeypatch.setenv("REPRO_CHAOS", "5")
+    assert isinstance(maybe_chaos_engine(eng), FaultyEngine)
+
+
+def test_virtual_clock_semantics():
+    c = VirtualClock()
+    assert c.now() == 0.0
+    c.sleep(0.25)
+    c.sleep(0.5)
+    assert c.now() == pytest.approx(0.75)
+    r = SystemClock()
+    t0 = r.now()
+    assert r.now() >= t0
+
+
+# ---------------------------------------------------------------------------
+# completion corruption (oracle seam) + answer-quality counters
+# ---------------------------------------------------------------------------
+
+
+def test_parse_index_pairs_counts_malformed_segments():
+    # (also covered in test_joins.py, which is hypothesis-gated — this
+    # copy always runs)
+    parsed, finished, dropped = parse_index_pairs(
+        "1,2; maybe row four-ish; 3,4; Unclear; Finished")
+    assert parsed == [(1, 2), (3, 4)]
+    assert finished and dropped == 2
+    parsed, finished, dropped = parse_index_pairs("1,2; 3,")
+    assert parsed == [(1, 2)] and not finished and dropped == 1
+    parsed, finished, dropped = parse_index_pairs("1,2; 3,4; Finished")
+    assert parsed == [(1, 2), (3, 4)] and finished and dropped == 0
+
+
+def test_corrupt_response_is_prompt_keyed_and_typed():
+    plan = FaultPlan(seed=3, garbage_rate=1.0)
+    bp = block_prompt(["a", "b"], ["c"], "match")
+    clean = LLMResponse("1,1; " + FINISHED, Usage(10, 4), "stop")
+    g1 = corrupt_response(plan, bp, clean)
+    g2 = corrupt_response(plan, bp, clean)
+    assert g1.text == g2.text  # keyed on the prompt: replayable anywhere
+    assert "997,998" in g1.text and g1.text.rstrip().endswith(FINISHED)
+    pairs, finished, dropped = parse_index_pairs(g1.text)
+    assert (997, 998) in pairs and finished and dropped >= 1
+    # tuple answers corrupt into an unparseable word
+    tp = tuple_prompt("x", "y", "match")
+    t = corrupt_response(plan, tp, LLMResponse("Yes", Usage(5, 1), "stop"))
+    assert t.text == "Unclear"
+    # non-join prompts pass through untouched
+    other = LLMResponse("hello", Usage(2, 1), "stop")
+    assert corrupt_response(plan, "free-form prompt", other) is other
+    # truncation: block answers cut mid-stream with the overflow signal
+    from repro.core.accounting import count_tokens
+
+    tplan = FaultPlan(seed=3, truncate_rate=1.0)
+    full = "1,1; 1,2; 2,1; 2,2; " + FINISHED
+    big = LLMResponse(full, Usage(10, count_tokens(full)), "stop")
+    cut = corrupt_response(tplan, bp, big)
+    assert cut.finish_reason == "length"
+    assert not cut.text.rstrip().endswith(FINISHED)
+    assert cut.usage.completion_tokens < big.usage.completion_tokens
+
+
+def test_chaos_oracle_garbage_surfaces_in_join_meta():
+    """Garbage completions (out-of-range + malformed pairs) must be
+    counted by the join's answer-quality meta — and filtered, so the
+    pair set itself stays correct."""
+    left, right, pred, truth = make_tables()
+    plan = FaultPlan(seed=13, garbage_rate=1.0)
+    res = block_join(left, right, "the colours match",
+                     ChaosOracle(plan, pred, context_limit=100_000), 4, 4)
+    assert res.pairs == truth  # 997 > b1: every garbage pair is range-checked
+    assert res.meta["out_of_range_pairs"] == res.ledger.calls
+    assert res.meta["dropped_segments"] >= res.ledger.calls
+    # a clean run keeps the counters present and zero
+    clean = block_join(left, right, "the colours match",
+                       OracleLLM(pred, context_limit=100_000), 4, 4)
+    assert clean.meta["out_of_range_pairs"] == 0
+    assert clean.meta["dropped_segments"] == 0
+
+
+def test_chaos_oracle_truncation_is_the_overflow_signal():
+    left, right, pred, truth = make_tables()
+    plan = FaultPlan(seed=13, truncate_rate=1.0)
+    with pytest.raises(Overflow):
+        block_join(left, right, "the colours match",
+                   ChaosOracle(plan, pred, context_limit=100_000), 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# executor hardening: retry + backoff, deadlines
+# ---------------------------------------------------------------------------
+
+
+def _chaos_executor(engine, plan, **kw):
+    fe = FaultyEngine(engine, plan.injector(0, clock=VirtualClock()))
+    return ContinuousBatchingExecutor(fe, **kw)
+
+
+def test_executor_retries_with_deterministic_backoff(single_engine):
+    plan = FaultPlan(seed=2, step_error_rate=0.3)
+    prompts = [f"backoff probe {i}:" for i in range(4)]
+    expected = [f"answer {i}" for i in range(4)]
+
+    def run():
+        ex = _chaos_executor(single_engine, plan, max_retries=64)
+        handles = [ex.submit(p, max_tokens=8, expected=e)
+                   for p, e in zip(prompts, expected)]
+        texts = [ex.result(h).text for h in handles]
+        return ex, texts
+
+    ex1, texts1 = run()
+    assert texts1 == expected  # transient faults never change a token
+    assert ex1.stats.retries > 0
+    assert ex1.stats.backoff_s > 0.0
+    # every injected error cost exactly one retry + one backoff sleep,
+    # all on the virtual clock — no real time was spent
+    inj1 = ex1.engine.injector
+    assert ex1.stats.retries == inj1.errors_injected
+    assert ex1.clock.now() >= ex1.stats.backoff_s
+    # the whole schedule — faults, retries, backoff — replays exactly
+    ex2, texts2 = run()
+    assert texts2 == texts1
+    assert ex2.stats.retries == ex1.stats.retries
+    assert ex2.stats.backoff_s == pytest.approx(ex1.stats.backoff_s)
+    assert ex2.clock.now() == pytest.approx(ex1.clock.now())
+
+
+def test_executor_backoff_grows_exponentially():
+    """The sleep sequence for consecutive failures is exponential in the
+    streak, jittered, and capped — measured on a virtual clock."""
+
+    class FailingEngine:
+        slots, max_seq, paged, spec_decode, total_kv_pages = \
+            1, 64, False, False, 0
+
+        def count_tokens(self, text):
+            return 1
+
+        def request_pages(self, *a):
+            return 0
+
+    clock = VirtualClock()
+    ex = ContinuousBatchingExecutor(
+        FailingEngine(), max_retries=1000, clock=clock,
+        backoff_base_s=0.01, backoff_factor=2.0, backoff_max_s=0.1,
+        backoff_jitter=0.0)
+    sleeps = []
+    for _ in range(6):
+        before = clock.now()
+        ex._backoff()
+        sleeps.append(clock.now() - before)
+    assert sleeps[:4] == pytest.approx([0.01, 0.02, 0.04, 0.08])
+    assert sleeps[4] == sleeps[5] == pytest.approx(0.1)  # capped
+    ex._failstreak = 0  # a success resets the streak
+    ex._backoff()
+    assert clock.now() - sum(sleeps) == pytest.approx(0.01)
+    assert ex.stats.retries == 7
+    assert ex.stats.backoff_s == pytest.approx(sum(sleeps) + 0.01)
+
+
+def test_executor_deadline_expiry(single_engine, monkeypatch):
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)  # own faults only
+    clock = VirtualClock()
+    ex = ContinuousBatchingExecutor(single_engine, clock=clock)
+    ok = ex.submit("deadline probe ok:", max_tokens=8, expected="fine")
+    doomed = ex.submit("deadline probe doomed:", max_tokens=8,
+                       expected="never", deadline=clock.now())
+    assert ex.result(ok).text == "fine"
+    assert doomed.status == "cancelled" and doomed.deadline_expired
+    with pytest.raises(RuntimeError, match="missed its deadline"):
+        ex.result(doomed)
+    assert ex.stats.deadline_expired == 1
+    # an ACTIVE request expires too: its pages drain and its partial
+    # tokens are backed out, so later work is unaffected
+    h = ex.submit("deadline probe active:", max_tokens=64,
+                  expected="x " * 60, deadline=clock.now() + 1.0)
+    ex.step()  # admit + first decode
+    assert h.status == "active"
+    gen_before = ex.stats.generated_tokens
+    clock.sleep(2.0)
+    expired = ex.step()
+    assert h in expired and h.deadline_expired
+    assert ex.stats.generated_tokens < gen_before  # partial attempt backed out
+    assert ex.stats.deadline_expired == 2
+    after = ex.submit("deadline probe after:", max_tokens=8, expected="clean")
+    assert ex.result(after).text == "clean"
+
+
+def test_cluster_deadline_propagates_and_books_expiry(params, monkeypatch):
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)  # own faults only
+    cfg, p = params
+    clock = VirtualClock()
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), REPLICAS,
+                           clock=clock, **ENGINE_KW) as cl:
+        cl.hold()
+        fine = cl.submit("cluster deadline ok:", max_tokens=8,
+                         expected="good")
+        doomed = cl.submit("cluster deadline doomed:", max_tokens=8,
+                           expected="never", deadline=clock.now())
+        cl.release()
+        assert cl.result(fine).text == "good"
+        with pytest.raises(RuntimeError, match="missed its deadline"):
+            cl.result(doomed)
+        assert doomed.deadline_expired
+        cl.drain()
+        assert cl.stats().deadline_expired == 1
+        assert cl.ledger().deadline_expired == 1
+        assert cl.summary()["robustness"]["deadline_expired"] == 1
+        # the expiry booked no tokens: only the finished request did
+        assert cl.ledger().calls == 1
+
+
+# ---------------------------------------------------------------------------
+# THE invariant: transient chaos leaves joins token-identical
+# ---------------------------------------------------------------------------
+
+
+def _assert_token_identical(res, ref, truth):
+    assert res.pairs == ref.pairs == truth
+    assert res.ledger.calls == ref.ledger.calls
+    assert res.ledger.prompt_tokens == ref.ledger.prompt_tokens
+    assert res.ledger.completion_tokens == ref.ledger.completion_tokens
+    assert res.meta.get("degraded") is None
+
+
+def _chaos_join_roundtrip(params, reference_join, plan):
+    """Run the reference block join on a chaos cluster; assert token
+    identity, exact conservation, and (if a replica died) that
+    check_health restores the fleet."""
+    left, right, pred, truth, ref = reference_join
+    cfg, p = params
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), REPLICAS,
+                           chaos=plan, max_retries=32, **ENGINE_KW) as cl:
+        assert isinstance(cl.clock, VirtualClock)  # chaos never sleeps
+        client = ClusterClient(cl, oracle=OracleLLM(pred, context_limit=512))
+        res = block_join(left, right, "the colours match", client, 4, 2)
+        cl.drain()
+        _assert_token_identical(res, ref, truth)
+        # conservation: the join's ledger is exactly what the replicas
+        # finished, which is exactly the sum of the per-replica ledgers
+        assert cl.ledger().usage == res.ledger.usage
+        assert cl.ledger().usage == sum(
+            (l.usage for l in cl.replica_ledgers()), ZERO_USAGE)
+        alive_before = cl.replicas_alive
+        revived = cl.check_health()
+        assert revived == REPLICAS - alive_before
+        assert cl.replicas_alive == REPLICAS
+        assert cl.resurrections == revived
+        if plan.kill_replica is not None and revived:
+            # the revived replica serves: a fresh join still completes
+            # token-identical (its injector runs at generation 1 — the
+            # scheduled kill fires once per plan, not once per revival)
+            probe = [cl.submit(f"revival probe {i}:", max_tokens=4,
+                               expected="ok") for i in range(4)]
+            for h in probe:
+                assert cl.result(h).text == "ok"
+            assert cl.replicas_alive == REPLICAS
+        return cl.stats()
+
+
+def test_transient_chaos_token_identity(params, reference_join):
+    """Step errors + latency spikes at 5%: retries fire, backoff is
+    slept (virtually), and not one token changes."""
+    plan = FaultPlan(seed=23, step_error_rate=0.05,
+                     latency_spike_rate=0.05, spike_s=0.01)
+    stats = _chaos_join_roundtrip(params, reference_join, plan)
+    assert stats.retries > 0  # the plan actually fired
+    assert stats.backoff_s > 0.0
+
+
+def _random_plan(seed):
+    rng = random.Random(seed)
+    return FaultPlan(
+        seed=seed,
+        step_error_rate=rng.uniform(0.005, 0.03),
+        latency_spike_rate=rng.uniform(0.0, 0.03),
+        spike_s=0.005,
+        kill_replica=rng.choice([None, 1]),  # >= 1 survivor: replica 0 lives
+        kill_after_ops=rng.randint(3, 40),
+    )
+
+
+@pytest.mark.parametrize("seed", [101, 202])
+def test_property_random_fault_plans_seeded(params, reference_join, seed):
+    """Always-run property sweep: random transient plans (possibly one
+    replica kill, >= 1 survivor) never change the join's tokens, and
+    resurrection restores the fleet."""
+    _chaos_join_roundtrip(params, reference_join, _random_plan(seed))
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=3, deadline=None)
+    def test_property_random_fault_plans_hypothesis(
+            params, reference_join, seed):
+        _chaos_join_roundtrip(params, reference_join, _random_plan(seed))
+
+
+# ---------------------------------------------------------------------------
+# resurrection from total loss + hedged stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_check_health_resurrects_a_fatal_cluster(params, monkeypatch):
+    """All replicas die with work queued: the cluster goes fatal, the
+    orphans sit in limbo — then check_health rebuilds every replica
+    from the shared param tree and the stranded requests complete."""
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)  # own faults only
+    cfg, p = params
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), 2,
+                           **ENGINE_KW) as cl:
+        cl.hold()  # keep the requests queued so both deaths orphan them
+        handles = [cl.submit(f"lazarus {i}:", max_tokens=8,
+                             expected=f"back {i}") for i in range(4)]
+        cl.fail_replica(0)
+        cl.fail_replica(1)
+        deadline = time.time() + 60
+        while cl.replicas_alive and time.time() < deadline:
+            time.sleep(0.01)
+        assert cl.replicas_alive == 0
+        with pytest.raises(BackendUnavailable):
+            cl.submit("too late:", max_tokens=4)
+        assert cl.check_health() == 2
+        assert cl.replicas_alive == 2
+        assert cl.resurrections == 2
+        for i, h in enumerate(handles):
+            assert cl.result(h).text == f"back {i}"
+        cl.drain()
+        assert cl.ledger().calls == 4
+        assert cl.summary()["robustness"]["resurrections"] == 2
+        # without a factory there is nothing to rebuild from
+        bare = Cluster([Engine(cfg, p, ByteTokenizer(cfg.vocab_size),
+                               **ENGINE_KW)])
+        try:
+            bare.fail_replica(0)
+            while bare.replicas_alive:
+                time.sleep(0.01)
+            assert bare.check_health() == 0
+        finally:
+            bare.shutdown()
+
+
+def test_hedged_requests_first_finisher_wins(params, monkeypatch):
+    """Requests pending longer than hedge_after_s get a duplicate on a
+    second replica; exactly one copy resolves the handle and the hedge
+    ledger invariant holds: won + lost == launched."""
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)  # real-clock aging
+    cfg, p = params
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), 2,
+                           hedge_after_s=0.15, **ENGINE_KW) as cl:
+        cl.hold()  # pin the requests in the queue until they age
+        handles = [cl.submit(f"straggler {i}:", max_tokens=8,
+                             expected=f"slow {i}") for i in range(3)]
+        deadline = time.time() + 30
+        while cl.hedges_launched < len(handles) and time.time() < deadline:
+            time.sleep(0.02)
+        assert cl.hedges_launched == len(handles)
+        cl.release()
+        for i, h in enumerate(handles):
+            assert cl.result(h).text == f"slow {i}"  # tokens unchanged
+        cl.drain()
+        assert cl.hedges_won + cl.hedges_lost == cl.hedges_launched
+        rob = cl.summary()["robustness"]
+        assert rob["hedges_launched"] == len(handles)
+        # every handle resolved exactly once; losers were cancelled or
+        # booked as waste — never double-counted into the ledger
+        assert cl.ledger().calls == len(handles)
+        assert cl.ledger().usage == sum(
+            (l.usage for l in cl.replica_ledgers()), ZERO_USAGE)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: partial joins with exact ledgers
+# ---------------------------------------------------------------------------
+
+
+def _rect_pairs(rect):
+    lo1, hi1, lo2, hi2 = rect
+    return {(i, k) for i in range(lo1, hi1) for k in range(lo2, hi2)}
+
+
+def test_degraded_joins_when_every_replica_dies(params):
+    """A mid-join total loss returns a *partial* JoinResult: explicit
+    unresolved rectangles, exact ledger, no exception — and after
+    check_health the same join completes in full."""
+    left, right, pred, truth = make_tables()
+    cfg, p = params
+    plan = FaultPlan(seed=5, kill_replica=0, kill_after_ops=35)
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), 1,
+                           chaos=plan, max_retries=1, **ENGINE_KW) as cl:
+        client = ClusterClient(cl, oracle=OracleLLM(pred, context_limit=512))
+        res = block_join(left, right, "the colours match", client, 4, 2)
+        assert res.meta["degraded"] is True
+        assert res.meta["error"]  # the cause rides along, human-readable
+        unresolved = res.meta["unresolved"]
+        assert unresolved  # the kill struck mid-join
+        # the unresolved rectangles are exact: the found pairs are the
+        # truth restricted to the resolved region, nothing more
+        undecided = set()
+        for rect in unresolved:
+            undecided |= _rect_pairs(rect)
+        assert res.pairs == truth - undecided
+        assert res.pairs.isdisjoint(undecided)
+        # the ledger saw exactly the answers that arrived — which is
+        # exactly what the (dead) replica finished
+        assert res.ledger.usage == cl.ledger().usage
+        assert res.ledger.calls == cl.ledger().calls
+
+        # on the now-fatal cluster every operator degrades, none raises
+        res2 = tuple_join(left[:2], right[:2], "the colours match", client,
+                          max_answer_tokens=4)
+        assert res2.meta["degraded"] is True
+        assert set(res2.meta["undecided"]) == {(i, k) for i in range(2)
+                                               for k in range(2)}
+        assert res2.pairs == set() and res2.ledger.calls == 0
+        res3 = adaptive_join(left[:2], right[:2], "the colours match",
+                             client, initial_estimate=1e-3)
+        assert res3.meta["degraded"] is True and res3.pairs == set()
+        res4 = cascade_tuple_join(left[:2], right[:2], "the colours match",
+                                  client, client, threshold=0.5)
+        assert res4.meta["degraded"] is True
+        assert len(res4.meta["undecided"]) == 4
+
+        # resurrection clears the fatal state; the retried join completes
+        assert cl.check_health() == 1
+        full = block_join(left, right, "the colours match", client, 4, 2)
+        assert full.pairs == truth
+        assert full.meta.get("degraded") is None
+
+
+# ---------------------------------------------------------------------------
+# satellites: embed_rows failover, scoring evacuated mid-cascade
+# ---------------------------------------------------------------------------
+
+
+def test_embed_rows_fails_over_mid_batch(params, single_engine, monkeypatch):
+    """Regression: Cluster.embed_rows used to bypass the failover path —
+    a replica death mid-embed must retry the chunk on survivors and
+    produce the same vectors as a lone engine."""
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)  # own faults only
+    cfg, p = params
+    texts = [f"embed row {i} payload" for i in range(10)]
+    chunks = [texts[i:i + 4] for i in range(0, len(texts), 4)]
+    ref_parts = [single_engine.embed_rows(c) for c in chunks]
+    ref = np.concatenate([v for v, _ in ref_parts], axis=0)
+    ref_lens = [n for _, l in ref_parts for n in l]
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), 2,
+                           **ENGINE_KW) as cl:
+        down = lambda *a, **k: (_ for _ in ()).throw(
+            RuntimeError("embed replica down"))
+        monkeypatch.setattr(cl.engines[1], "embed_rows", down)
+        vecs, lens = cl.embed_rows(texts)
+        assert cl.replicas_alive == 1  # the failure tore the replica down
+        assert lens == ref_lens
+        np.testing.assert_allclose(vecs, ref, rtol=1e-5, atol=1e-5)
+        # total loss surfaces as BackendUnavailable, not a hang
+        cl.fail_replica(0)
+        deadline = time.time() + 60
+        while cl.replicas_alive and time.time() < deadline:
+            time.sleep(0.01)
+        with pytest.raises(BackendUnavailable):
+            cl.embed_rows(texts[:2])
+
+
+def test_scoring_requests_evacuate_mid_cascade(params, single_engine,
+                                               monkeypatch):
+    """A replica killed mid-cascade evacuates its queued scoring
+    requests onto the survivor; the cascade completes with decisions and
+    per-tier ledgers identical to the fault-free run."""
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)  # own faults only
+    left, right, pred, truth = make_tables(6, 8)
+    mk = lambda c: ClusterClient(c, oracle=OracleLLM(pred, context_limit=512))
+    ref_client = EngineClient(single_engine,
+                              oracle=OracleLLM(pred, context_limit=512))
+    ref = cascade_tuple_join(left, right, "the colours match",
+                             ref_client, ref_client, threshold=0.5)
+    cfg, p = params
+    with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), REPLICAS,
+                           **ENGINE_KW) as cl:
+        client = mk(cl)
+        killer = threading.Timer(0.2, cl.fail_replica, args=(1,))
+        killer.start()
+        try:
+            res = cascade_tuple_join(left, right, "the colours match",
+                                     client, client, threshold=0.5)
+        finally:
+            killer.cancel()
+        cl.fail_replica(1)  # idempotent if the cascade outran the timer
+        cl.drain()
+        assert res.pairs == ref.pairs == truth
+        assert res.meta["escalated"] == ref.meta["escalated"]
+        assert res.meta.get("degraded") is None
+        # per-tier ledgers conserved exactly despite the evacuation
+        for tier in ("small", "large"):
+            for fld in ("calls", "prompt_tokens", "scored_tokens"):
+                assert res.meta["tiers"][tier][fld] == \
+                    ref.meta["tiers"][tier][fld]
+        assert cl.ledger().usage == res.ledger.usage
+        assert cl.ledger().usage == sum(
+            (l.usage for l in cl.replica_ledgers()), ZERO_USAGE)
+
+
+# ---------------------------------------------------------------------------
+# REPRO_CHAOS env arming end to end
+# ---------------------------------------------------------------------------
+
+
+def test_env_armed_chaos_executor_token_identity(
+        params, single_engine, monkeypatch):
+    """REPRO_CHAOS=<seed> wraps the engine with the transient-only plan
+    at the executor seam with no code changes — and the ordinary
+    workload still produces identical tokens."""
+    prompts = [f"env chaos {i}:" for i in range(6)]
+    expected = [f"out {i % 3}" for i in range(6)]
+    clean = single_engine.generate(prompts, max_tokens=8, expected=expected)
+    monkeypatch.setenv("REPRO_CHAOS", "11")
+    ex = ContinuousBatchingExecutor(single_engine)
+    assert isinstance(ex.engine, FaultyEngine)
+    assert ex.max_retries == 8  # chaos default: room for the 1% error draws
+    assert isinstance(ex.clock, VirtualClock)  # injected spikes are free
+    handles = [ex.submit(p, max_tokens=8, expected=e)
+               for p, e in zip(prompts, expected)]
+    for h, c in zip(handles, clean):
+        r = ex.result(h)
+        assert r.text == c.text
+        assert r.prompt_tokens == c.prompt_tokens
+        assert r.completion_tokens == c.completion_tokens

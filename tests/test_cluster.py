@@ -304,6 +304,9 @@ def test_replica_failure_mid_join_completes_token_identical(
 def test_engine_exception_triggers_failover(params, monkeypatch):
     """A replica whose engine keeps raising (executor retries exhausted)
     is torn down by its own worker and its work completes elsewhere."""
+    # this test injects its own deterministic fault and pins max_retries=1;
+    # ambient chaos would exhaust retries on the *good* replica too
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)
     cfg, p = params
     with Cluster.replicate(cfg, p, ByteTokenizer(cfg.vocab_size), 2,
                            max_retries=1, **ENGINE_KW) as cl:

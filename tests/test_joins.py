@@ -63,11 +63,25 @@ def test_tuple_prompt_roundtrip(t1, t2):
 @settings(max_examples=50, deadline=None)
 def test_index_pairs_roundtrip(pairs):
     text = render_index_pairs(pairs)
-    parsed, finished = parse_index_pairs(text)
-    assert finished and parsed == pairs
+    parsed, finished, dropped = parse_index_pairs(text)
+    assert finished and parsed == pairs and dropped == 0
     text_trunc = render_index_pairs(pairs, finished=False)
-    parsed, finished = parse_index_pairs(text_trunc)
+    parsed, finished, dropped = parse_index_pairs(text_trunc)
     assert parsed == pairs and (not finished or not pairs)
+    assert dropped == 0
+
+
+def test_parse_index_pairs_counts_malformed_segments():
+    parsed, finished, dropped = parse_index_pairs(
+        "1,2; maybe row four-ish; 3,4; Unclear; Finished")
+    assert parsed == [(1, 2), (3, 4)]
+    assert finished
+    assert dropped == 2
+    # a pair truncated mid-digits is dropped and counted
+    parsed, finished, dropped = parse_index_pairs("1,2; 3,")
+    assert parsed == [(1, 2)]
+    assert not finished
+    assert dropped == 1
 
 
 # ---------------------------------------------------------------------------
