@@ -173,13 +173,11 @@ def main() -> None:
           f"round-robin {hit_rr:.2f}")
 
     def leg(summ, res, wall):
+        # merged ExecutorStats ride along whole via their snapshot()
+        # surface (serialized by emit_json) instead of field plucking
         return {
             "critical_path_passes": summ["critical_path_passes"],
-            "decode_steps": summ["stats"]["decode_steps"],
-            "prefill_batches": summ["stats"]["prefill_batches"],
-            "generated_tokens": summ["stats"]["generated_tokens"],
-            "computed_prefill_tokens": summ["stats"]["prefill_tokens_computed"],
-            "cached_prefill_tokens": summ["stats"]["prefill_tokens_cached"],
+            "stats": summ["stats"],
             "hit_rate": round(summ["prefix_cache"]["hit_rate"], 4),
             "router": summ["router"],
             "replicas_alive": summ["replicas_alive"],

@@ -24,6 +24,18 @@ def timed(fn: Callable, *args, **kw):
     return out, (time.perf_counter() - t0)
 
 
+def _snapshot_default(obj):
+    """JSON fallback: anything carrying a ``snapshot()`` plain-dict
+    surface (ExecutorStats, Ledger, MetricsRegistry) serializes through
+    it — benchmarks hand the objects over instead of hand-plucking
+    fields, so new stats appear in the artifacts without edits here."""
+    snap = getattr(obj, "snapshot", None)
+    if callable(snap):
+        return snap()
+    raise TypeError(f"Object of type {type(obj).__name__} "
+                    f"is not JSON serializable")
+
+
 def emit_json(name: str, payload: Dict, *, smoke: bool = False) -> str:
     """Write ``BENCH_<name>.json`` next to the benchmark scripts.
 
@@ -33,13 +45,15 @@ def emit_json(name: str, payload: Dict, *, smoke: bool = False) -> str:
     The committed artifacts hold the full-size runs; ``smoke`` runs (CI
     legs) write a separate, gitignored ``.smoke.json`` so they can never
     silently overwrite the tracked evidence.  Keys should stay stable
-    between runs.
+    between runs.  Values may be any object with a ``snapshot()``
+    plain-dict surface (ExecutorStats, Ledger, MetricsRegistry).
     """
     suffix = ".smoke.json" if smoke else ".json"
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         f"BENCH_{name}{suffix}")
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
+        json.dump(payload, f, indent=2, sort_keys=True,
+                  default=_snapshot_default)
         f.write("\n")
     print(f"[bench] wrote {path}")
     return path

@@ -50,6 +50,7 @@ from repro.core.oracle import OracleLLM
 from repro.data import ads_scenario
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_params, model_specs
+from repro.obs import TraceRecorder, write_chrome_trace
 from repro.serve import Cluster, ClusterClient, Engine, EngineClient
 
 
@@ -58,6 +59,11 @@ def main() -> None:
     ap.add_argument("--spec-decode", action="store_true",
                     help="self-speculative decoding: n-gram drafts verified "
                          "in one multi-token pass per step (DESIGN.md §11)")
+    ap.add_argument("--trace", nargs="?", const="serve_join.trace.json",
+                    default=None, metavar="PATH",
+                    help="record a request-lifecycle trace and write "
+                         "Perfetto/Chrome trace_event JSON (DESIGN.md §17; "
+                         "default PATH: serve_join.trace.json)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="also run the block join through a cluster of N "
                          "engine replicas with failover (DESIGN.md §12)")
@@ -79,7 +85,8 @@ def main() -> None:
     engine = Engine(cfg, params, tok, max_seq=1024, slots=4,
                     spec_decode=args.spec_decode, mesh=mesh)
     oracle = OracleLLM(sc.predicate, context_limit=1024)
-    client = EngineClient(engine, oracle=oracle)
+    trace = TraceRecorder() if args.trace else None
+    client = EngineClient(engine, oracle=oracle, trace=trace)
 
     print("=== block join through the serving engine (slot-refill batching) ===")
     res = block_join(sc.r1, sc.r2, sc.condition, client, 4, 4)
@@ -126,7 +133,8 @@ def main() -> None:
               f"prefix-affinity routing, one killed mid-join ===")
         with Cluster.replicate(cfg, params, tok, args.replicas,
                                tp=args.tp, max_seq=1024, slots=4,
-                               spec_decode=args.spec_decode) as cluster:
+                               spec_decode=args.spec_decode,
+                               trace=trace) as cluster:
             cclient = ClusterClient(cluster, oracle=oracle)
             cluster.hold()  # gang submission: deterministic routing
             killer = threading.Timer(
@@ -157,6 +165,11 @@ def main() -> None:
                       f"calls={r_['ledger']['calls']} "
                       f"decode_steps={st['decode_steps']} "
                       f"prefill_batches={st['prefill_batches']}")
+
+    if trace is not None:
+        n = write_chrome_trace(args.trace, trace)
+        print(f"\ntrace: {n} events -> {args.trace} "
+              f"(dropped={trace.dropped}; open in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -211,6 +211,18 @@ class Ledger:
     def cost(self, pricing: Pricing = GPT4_PRICING) -> float:
         return pricing.cost(self.usage)
 
+    def snapshot(self) -> dict:
+        """Plain-dict surface (raw fields + derived token totals, no
+        pricing) shared by the metrics exporter and
+        ``benchmarks/common.emit_json`` — :meth:`summary` layers cost on
+        top of exactly these numbers."""
+        out = dataclasses.asdict(self)
+        out["computed_prompt_tokens"] = (self.prompt_tokens
+                                         - self.cached_prompt_tokens)
+        out["total_tokens"] = self.prompt_tokens + self.completion_tokens
+        out["draft_acceptance_rate"] = self.usage.draft_acceptance_rate
+        return out
+
     def summary(self, pricing: Pricing = GPT4_PRICING) -> dict:
         return {
             "calls": self.calls,

@@ -12,6 +12,8 @@ from repro.core.cost_model import JoinStats
 from repro.core.join_types import JoinResult, Overflow
 from repro.core.llm_client import LLMClient
 from repro.core.prompts import render_index_pairs
+from repro.obs.metrics import registry_of
+from repro.obs.trace import trace_of
 
 
 def generate_statistics(
@@ -94,6 +96,11 @@ def adaptive_join(
     ``meta["unresolved"]`` lists the undecided rectangles, and no
     further rounds run (DESIGN.md §16).
     """
+    trace = trace_of(client)
+    metrics = registry_of(client)
+    if metrics is not None:
+        metrics.counter("join_adaptive_runs").inc()
+    t0 = trace.now() if trace else 0.0
     stats = (stats if stats is not None
              else generate_statistics(r1, r2, j, counter=client.count_tokens))
     if prefix_cached is None:
@@ -120,6 +127,11 @@ def adaptive_join(
         b1, b2 = optimal_batch_sizes(stats, eff_e, t, headroom=stats.s3 + 1,
                                      prefix_cached=prefix_cached)
         schedule.append({"round": rounds, "estimate": eff_e, "b1": b1, "b2": b2})
+        if trace:
+            trace.instant("adaptive_round", "join", round=rounds,
+                          estimate=eff_e, b1=b1, b2=b2)
+        if metrics is not None:
+            metrics.counter("join_adaptive_rounds").inc()
         try:
             result = block_join(
                 r1, r2, j, client, b1, b2,
@@ -134,6 +146,10 @@ def adaptive_join(
                 "resume": resume,
                 "prefix_cached": prefix_cached,
             })
+            if trace:
+                trace.complete("join.adaptive", "join", t0, rounds=rounds,
+                               pairs=len(result.pairs),
+                               degraded=int(bool(result.meta.get("degraded"))))
             return result
         except Overflow:
             if eff_e >= 1.0 and (b1, b2) == (1, 1):

@@ -10,6 +10,8 @@ from repro.core.llm_client import (
     BackendUnavailable, LLMClient, LLMResponse, cancel_unfinished,
 )
 from repro.core.prompts import FINISHED, block_prompt, parse_index_pairs
+from repro.obs.metrics import registry_of
+from repro.obs.trace import trace_of
 
 
 def _batches(n: int, b: int) -> List[Tuple[int, int]]:
@@ -105,6 +107,10 @@ def block_join(
     """
     if b1 < 1 or b2 < 1:
         raise ValueError(f"batch sizes must be >= 1, got {b1=} {b2=}")
+    trace = trace_of(client)
+    metrics = registry_of(client)
+    if metrics is not None:
+        metrics.counter("join_block_runs").inc()
     ledger = ledger if ledger is not None else Ledger()
     completed = completed if completed is not None else {}
     pairs: Set[Tuple[int, int]] = set()
@@ -125,6 +131,7 @@ def block_join(
         if not _covered(slices1[i] + slices2[k], completed)
     ]
 
+    t0 = trace.now() if trace else 0.0
     with Timer() as timer:
         prompts: List[Tuple[Tuple[int, int], str, int]] = []
         for (i, k) in work:
@@ -162,7 +169,17 @@ def block_join(
                 i, k = block_of[id(h)]
                 complete = _is_complete(resp)
                 ledger.record(resp.usage, overflow=not complete)
+                if metrics is not None:
+                    metrics.counter("join_block_model_passes").inc()
                 if not complete:
+                    if trace:
+                        lo1, hi1 = slices1[i]
+                        lo2, hi2 = slices2[k]
+                        trace.instant("block_overflow", "join", lo1=lo1,
+                                      hi1=hi1, lo2=lo2, hi2=hi2,
+                                      tokens=int(resp.usage.completion_tokens))
+                    if metrics is not None:
+                        metrics.counter("join_block_overflows").inc()
                     if not overflowed:
                         overflowed = True
                         # Drop blocks nothing has been paid for yet;
@@ -185,6 +202,9 @@ def block_join(
                 found = {(lo1 + x - 1, lo2 + y - 1) for x, y in in_range}
                 completed[(lo1, hi1, lo2, hi2)] = found
                 pairs |= found
+                if trace:
+                    trace.instant("block_done", "join", lo1=lo1, hi1=hi1,
+                                  lo2=lo2, hi2=hi2, matches=len(found))
         except BackendUnavailable as exc:
             # every replica is gone: cancel what's left (a no-op on a
             # fatal cluster) and fall through to the partial result —
@@ -195,8 +215,16 @@ def block_join(
             cancel_unfinished(client, handles)
             raise
         if overflowed and degraded is None:
+            if trace:
+                trace.complete("join.block", "join", t0, b1=b1, b2=b2,
+                               blocks=len(work), outcome="overflow")
             raise Overflow(ledger, partial=pairs)
 
+    if trace:
+        trace.complete(
+            "join.block", "join", t0, b1=b1, b2=b2, blocks=len(work),
+            outcome="degraded" if degraded is not None else "ok",
+            pairs=len(pairs))
     meta = {"operator": "block", "b1": b1, "b2": b2, "calls": ledger.calls,
             "out_of_range_pairs": out_of_range,
             "dropped_segments": dropped_segments}

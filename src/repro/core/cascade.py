@@ -36,6 +36,8 @@ from repro.core.llm_client import (
     BackendUnavailable, LLMClient, ScoreResponse, cancel_unfinished,
 )
 from repro.core.prompts import SCORE_CHOICES, tuple_prompt
+from repro.obs.metrics import registry_of
+from repro.obs.trace import trace_of
 
 PairScore = Tuple[bool, float]  # (decision, confidence)
 
@@ -152,6 +154,13 @@ def cascade_tuple_join(
     if not getattr(large, "supports_scoring", False):
         raise ValueError("cascade requires a scoring-capable large client")
     index = [(i, k) for i in range(len(r1)) for k in range(len(r2))]
+    # Observability conduit (DESIGN.md §17): either tier may be serving-
+    # backed; NULL_TRACE is falsy, so `or` picks the first live recorder.
+    trace = trace_of(small) or trace_of(large)
+    metrics = registry_of(small) or registry_of(large)
+    if metrics is not None:
+        metrics.counter("join_cascade_runs").inc()
+    t0 = trace.now() if trace else 0.0
     small_ledger = Ledger()
     large_ledger = Ledger()
     degraded: Optional[BackendUnavailable] = None
@@ -166,6 +175,15 @@ def cascade_tuple_join(
         if degraded is None:
             escalated = sorted(p for p, (_, conf) in scores.items()
                                if conf < threshold)
+            # Escalation rate = cascade_escalated / cascade_scored_pairs
+            # (the §13 cost-vs-quality knob, observable per registry).
+            if metrics is not None:
+                metrics.counter("cascade_scored_pairs").inc(len(scores))
+                metrics.counter("cascade_escalated").inc(len(escalated))
+            if trace:
+                trace.instant("cascade_escalate", "join",
+                              scored=len(scores), escalated=len(escalated),
+                              threshold=threshold)
             if escalated:
                 try:
                     scores.update(score_pairs(escalated, r1, r2, j, large,
@@ -174,6 +192,10 @@ def cascade_tuple_join(
                     scores.update(exc.partial or {})
                     degraded = exc
     pairs = {p for p, (dec, _) in scores.items() if dec}
+    if trace:
+        trace.complete("join.cascade", "join", t0, pairs_total=len(index),
+                       escalated=len(escalated), matches=len(pairs),
+                       degraded=int(degraded is not None))
     meta = {
         "operator": "cascade_tuple",
         "threshold": threshold,

@@ -43,6 +43,7 @@ import dataclasses
 from typing import Iterable, Iterator, List, Optional, Sequence
 
 from repro.core.accounting import TokenCounter, Usage, count_tokens
+from repro.obs.trace import NULL_TRACE
 
 
 class BackendUnavailable(RuntimeError):
@@ -212,6 +213,15 @@ class LLMClient(abc.ABC):
     #: surface.  Join operators consult this (plus ``REPRO_SCORE_JOIN``)
     #: before replacing decode-based verification with scoring.
     supports_scoring: bool = False
+
+    #: Observability conduits (DESIGN.md §17).  Serving-backed clients
+    #: (EngineClient, ClusterClient) override these with their
+    #: executor's/cluster's live recorder and metrics registry; the
+    #: class defaults (falsy no-op recorder, no registry) keep every
+    #: other client — oracles, API stubs — zero-cost.  Join operators
+    #: read them via ``trace_of(client)`` / ``registry_of(client)``.
+    trace = NULL_TRACE
+    metrics = None
 
     @abc.abstractmethod
     def invoke(

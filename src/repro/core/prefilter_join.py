@@ -45,6 +45,8 @@ from repro.core.embedding_join import HashEmbedder, _MODES
 from repro.core.join_types import JoinResult, Timer
 from repro.core.llm_client import Embedder, LLMClient, cancel_unfinished
 from repro.core.prompts import parse_yes_no, tuple_prompt
+from repro.obs.metrics import registry_of
+from repro.obs.trace import trace_of
 
 Pair = Tuple[int, int]
 
@@ -184,6 +186,11 @@ def prefilter_join(
         if not getattr(large, "supports_scoring", False):
             raise ValueError("cascade requires a scoring-capable large client")
     embedder = embedder or HashEmbedder()
+    trace = trace_of(client)
+    metrics = registry_of(client)
+    if metrics is not None:
+        metrics.counter("join_prefilter_runs").inc()
+    t0 = trace.now() if trace else 0.0
     ledger = Ledger()
     large_ledger = Ledger()
     escalated: List[Pair] = []
@@ -201,6 +208,14 @@ def prefilter_join(
 
         candidates = sorted(
             topk_candidates(e1, e2, k, mode=mode, use_kernel=use_kernel))
+        if trace:
+            trace.instant("prefilter_candidates", "join", k=k,
+                          candidates=len(candidates),
+                          cross=len(r1) * len(r2))
+        if metrics is not None:
+            metrics.counter("prefilter_candidates").inc(len(candidates))
+            metrics.counter("prefilter_pruned").inc(
+                len(r1) * len(r2) - len(candidates))
 
         if scoring is None:
             scoring = getattr(client, "supports_scoring", False)
@@ -222,6 +237,10 @@ def prefilter_join(
                 candidates, r1, r2, j, client, ledger,
                 window=window, max_answer_tokens=max_answer_tokens)
     cross = len(r1) * len(r2)
+    if trace:
+        trace.complete("join.prefilter", "join", t0, k=k,
+                       candidates=len(candidates), matches=len(pairs),
+                       escalated=len(escalated))
     return JoinResult(
         pairs=pairs,
         ledger=ledger + large_ledger if large is not None else ledger,

@@ -13,6 +13,8 @@ from repro.core.llm_client import (
     BackendUnavailable, LLMClient, cancel_unfinished,
 )
 from repro.core.prompts import parse_yes_no, tuple_prompt
+from repro.obs.metrics import registry_of
+from repro.obs.trace import trace_of
 
 
 def tuple_join(
@@ -59,6 +61,11 @@ def tuple_join(
                    and getattr(client, "supports_scoring", False))
     if scoring:
         return _tuple_join_scored(r1, r2, j, client, window=window)
+    trace = trace_of(client)
+    metrics = registry_of(client)
+    if metrics is not None:
+        metrics.counter("join_tuple_runs").inc()
+    t0 = trace.now() if trace else 0.0
     ledger = Ledger()
     pairs = set()
     decided = set()
@@ -89,6 +96,8 @@ def tuple_join(
                 for h in client.as_completed(handles):
                     resp = h.result()
                     ledger.record(resp.usage)
+                    if metrics is not None:
+                        metrics.counter("join_tuple_model_passes").inc()
                     decided.add(pair_of[id(h)])
                     if parse_yes_no(resp.text):
                         pairs.add(pair_of[id(h)])
@@ -98,6 +107,10 @@ def tuple_join(
             except Exception:
                 cancel_unfinished(client, handles)
                 raise
+    if trace:
+        trace.complete("join.tuple", "join", t0, pairs_checked=len(decided),
+                       matches=len(pairs),
+                       degraded=int(degraded is not None))
     meta = {"operator": "tuple"}
     if degraded is not None:
         meta.update({
@@ -118,6 +131,11 @@ def _tuple_join_scored(
     window: int,
 ) -> JoinResult:
     index = [(i, k) for i in range(len(r1)) for k in range(len(r2))]
+    trace = trace_of(client)
+    metrics = registry_of(client)
+    if metrics is not None:
+        metrics.counter("join_tuple_scored_runs").inc()
+    t0 = trace.now() if trace else 0.0
     ledger = Ledger()
     degraded: Optional[BackendUnavailable] = None
     with Timer() as timer:
@@ -128,6 +146,10 @@ def _tuple_join_scored(
             scores = dict(exc.partial or {})
             degraded = exc
     pairs = {p for p, (dec, _) in scores.items() if dec}
+    if trace:
+        trace.complete("join.tuple", "join", t0, scoring=1,
+                       pairs_checked=len(scores), matches=len(pairs),
+                       degraded=int(degraded is not None))
     meta = {"operator": "tuple", "scoring": True}
     if degraded is not None:
         meta.update({

@@ -40,6 +40,7 @@ from repro.core import adaptive_join, block_join, tuple_join
 from repro.core.oracle import OracleLLM
 from repro.data import all_scenarios
 from repro.data.tokenizer import ByteTokenizer
+from repro.obs import TraceRecorder, write_chrome_trace
 from repro.serve import Cluster, ClusterClient, Engine, EngineClient, make_router
 from repro.models import init_params, model_specs
 
@@ -65,6 +66,11 @@ def main() -> None:
                     default=int(os.environ.get("REPRO_TP", "1")),
                     help="tensor-parallel degree per replica (DESIGN.md "
                          "§15; default from REPRO_TP, 1 = no mesh)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a request-lifecycle trace and write it "
+                         "as Perfetto/Chrome trace_event JSON to PATH "
+                         "(DESIGN.md §17; equivalent to REPRO_TRACE=1 "
+                         "plus an export)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -74,11 +80,13 @@ def main() -> None:
     sc = {s.name: s for s in all_scenarios()}[args.scenario]
     oracle = OracleLLM(sc.predicate, context_limit=args.max_seq)
 
+    trace = TraceRecorder() if args.trace_out else None
+
     cluster = None
     if args.replicas > 1:
         cluster = Cluster.replicate(
             cfg, params, tok, args.replicas, router=make_router(args.router),
-            tp=args.tp, max_seq=args.max_seq, slots=args.slots)
+            tp=args.tp, max_seq=args.max_seq, slots=args.slots, trace=trace)
         client = ClusterClient(cluster, oracle=oracle)
     else:
         mesh = None
@@ -88,7 +96,7 @@ def main() -> None:
             mesh = make_serving_mesh(tp=args.tp)
         engine = Engine(cfg, params, tok, max_seq=args.max_seq,
                         slots=args.slots, mesh=mesh)
-        client = EngineClient(engine, oracle=oracle)
+        client = EngineClient(engine, oracle=oracle, trace=trace)
 
     try:
         if args.operator == "tuple":
@@ -113,6 +121,10 @@ def main() -> None:
                   f"router={summ['router']} "
                   f"per_replica_calls="
                   f"{[r['ledger']['calls'] for r in summ['per_replica']]}")
+        if trace is not None:
+            n = write_chrome_trace(args.trace_out, trace)
+            print(f"trace: {n} events -> {args.trace_out} "
+                  f"(dropped={trace.dropped}; open in ui.perfetto.dev)")
     finally:
         if cluster is not None:
             cluster.shutdown()

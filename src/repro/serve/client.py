@@ -124,10 +124,16 @@ class EngineClient(LLMClient):
         engine: Engine,
         *,
         oracle: Optional[OracleLLM] = None,
+        trace=None,
     ):
         self.engine = engine
         self.oracle = oracle
-        self.executor = ContinuousBatchingExecutor(engine)
+        self.executor = ContinuousBatchingExecutor(engine, trace=trace)
+        #: join-level observability rides the client (DESIGN.md §17):
+        #: operators emit spans on the executor's recorder and book
+        #: per-operator counters into its registry
+        self.trace = self.executor.trace
+        self.metrics = self.executor.metrics
         self.context_limit = engine.max_seq
         #: advertised to the batch-size optimizer: with the radix prefix
         #: cache on, consecutive block prompts sharing their left block

@@ -74,6 +74,9 @@ from repro.core.llm_client import (
     BackendUnavailable, LLMClient, LLMHandle, ScoreHandle, ScoreResponse,
 )
 from repro.core.oracle import OracleLLM, SystemClock, VirtualClock
+from repro.obs.export import CLUSTER_PID
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import adopt_clock, recorder_from_env
 from repro.serve.client import _to_response
 from repro.serve.engine import Engine, GenResult
 from repro.serve.executor import (
@@ -146,11 +149,12 @@ class _Replica:
     by ``self.lock`` (see the module docstring's lock discipline)."""
 
     def __init__(self, idx: int, engine: Engine, *,
-                 max_retries: Optional[int], clock=None):
+                 max_retries: Optional[int], clock=None, trace=None):
         self.idx = idx
         self.engine = engine
         self.executor = ContinuousBatchingExecutor(
-            engine, max_retries=max_retries, clock=clock)
+            engine, max_retries=max_retries, clock=clock,
+            trace=trace, trace_pid=idx)
         self.lock = threading.Lock()
         self.alive = True
         #: incarnation counter — bumped by check_health() resurrection;
@@ -204,6 +208,7 @@ class Cluster:
         clock=None,
         engine_factory: Optional[Callable[[int], Engine]] = None,
         hedge_after_s: Optional[float] = None,
+        trace=None,
     ):
         """``chaos`` (default: ``FaultPlan.from_env()``) wraps every
         replica engine in a deterministic fault injector keyed by its
@@ -227,8 +232,20 @@ class Cluster:
         self._max_retries = max_retries
         self._engine_factory = engine_factory
         self.hedge_after_s = hedge_after_s
+        #: one shared recorder across every replica (DESIGN.md §17) —
+        #: pid = replica index, CLUSTER_PID for cluster-scope events —
+        #: stamped from the cluster clock (virtual under chaos)
+        if trace is None:
+            trace = recorder_from_env(clock=clock)
+        else:
+            adopt_clock(trace, clock)
+        self.trace = trace
+        self.router.trace = trace
+        #: cluster-scope metrics (join operators book through
+        #: ClusterClient here); metrics() merges it with the replicas'
+        self.op_metrics = MetricsRegistry()
         self._replicas = [
-            _Replica(i, e, max_retries=max_retries, clock=clock)
+            _Replica(i, e, max_retries=max_retries, clock=clock, trace=trace)
             for i, e in enumerate(engines)
         ]
         self._mu = threading.Lock()
@@ -280,6 +297,7 @@ class Cluster:
         chaos: Optional[FaultPlan] = None,
         clock=None,
         hedge_after_s: Optional[float] = None,
+        trace=None,
         **engine_kwargs,
     ) -> "Cluster":
         """Build ``n`` identical engine replicas over shared weights —
@@ -325,7 +343,8 @@ class Cluster:
 
             return cls([factory(i) for i in range(n)], router=router,
                        max_retries=max_retries, engine_factory=factory,
-                       chaos=chaos, clock=clock, hedge_after_s=hedge_after_s)
+                       chaos=chaos, clock=clock, hedge_after_s=hedge_after_s,
+                       trace=trace)
 
         if devices is None:
             devs = jax.devices()
@@ -339,7 +358,8 @@ class Cluster:
 
         return cls([factory(i) for i in range(n)], router=router,
                    max_retries=max_retries, engine_factory=factory,
-                   chaos=chaos, clock=clock, hedge_after_s=hedge_after_s)
+                   chaos=chaos, clock=clock, hedge_after_s=hedge_after_s,
+                   trace=trace)
 
     @property
     def engines(self) -> List[Engine]:
@@ -698,6 +718,12 @@ class Cluster:
                     else:
                         self.hedges_lost += 1
                         loser, loser_rep = ch._hedge_serve, ch.hedge_replica
+                    if self.trace:
+                        self.trace.instant(
+                            "hedge_win" if serve is ch._hedge_serve
+                            else "hedge_lose", "cluster", pid=CLUSTER_PID,
+                            request=ch.request_id, winner=rep.idx,
+                            loser=loser_rep)
                     if (loser is not None and 0 <= loser_rep
                             and loser_rep != rep.idx):
                         losers.append((loser_rep, loser))
@@ -757,6 +783,9 @@ class Cluster:
                     continue
                 orphans.append(ch)
             rep.handles.clear()
+        if self.trace:
+            self.trace.instant("failover", "cluster", pid=CLUSTER_PID,
+                               replica=rep.idx, orphans=len(orphans))
         with self._mu:
             # limbo makes the orphans visible to drain/_pending_handles/
             # cancel while they belong to no replica's handle map
@@ -837,11 +866,15 @@ class Cluster:
                     self.chaos_plan.injector(
                         rep.idx, clock=self.clock, generation=gen))
             executor = ContinuousBatchingExecutor(
-                engine, max_retries=self._max_retries, clock=self.clock)
+                engine, max_retries=self._max_retries, clock=self.clock,
+                trace=self.trace if self.trace else None, trace_pid=rep.idx)
             with rep.lock:
                 # the dead incarnation's counters stay part of cluster
-                # totals — resurrection must not un-count work
+                # totals — resurrection must not un-count work.  The
+                # latency histograms carry over the same way (bucket
+                # -wise merge conserves counts across incarnations).
                 executor.stats.merge(rep.executor.stats)
+                executor.metrics.merge(rep.executor.metrics)
                 rep.gen = gen
                 rep.engine = engine
                 rep.executor = executor
@@ -849,6 +882,9 @@ class Cluster:
                 rep.error = None
                 rep.poison = None
                 rep.alive = True
+            if self.trace:
+                self.trace.instant("resurrect", "cluster", pid=CLUSTER_PID,
+                                   replica=rep.idx, generation=gen)
             with self._mu:
                 self.router.admit(rep.idx)
                 self.resurrections += 1
@@ -947,6 +983,10 @@ class Cluster:
                 ch.hedge_replica = idx
                 ch.hedged = True
                 rep.handles[serve.request_id] = ch
+            if self.trace:
+                self.trace.instant("hedge_launch", "cluster", pid=CLUSTER_PID,
+                                   request=ch.request_id,
+                                   primary=ch.replica, duplicate=idx)
             with self._mu:
                 self.hedges_launched += 1
                 self._work.notify_all()
@@ -996,6 +1036,14 @@ class Cluster:
         return max(rep.executor.stats.model_passes
                    for rep in self._replicas)
 
+    def metrics(self) -> MetricsRegistry:
+        """Cluster-level latency/SLO metrics: the bucket-wise merge of
+        every replica's registry plus the cluster-scope one (join
+        operators book there through ClusterClient).  Counts conserve
+        exactly across replicas and incarnations."""
+        return sum((rep.executor.metrics for rep in self._replicas),
+                   MetricsRegistry() + self.op_metrics)
+
     def prefix_cache_stats(self) -> Optional[dict]:
         """Field-wise sum of the replicas' radix-cache counters (None
         when no replica runs a prefix cache); ``hit_rate`` is recomputed
@@ -1017,11 +1065,15 @@ class Cluster:
         return {
             "replicas": len(self._replicas),
             "replicas_alive": self.replicas_alive,
-            "stats": dataclasses.asdict(merged),
+            "stats": merged.snapshot(),
             "critical_path_passes": self.critical_path_passes(),
             "ledger": self.ledger().summary(),
             "router": self.router.stats.summary(),
             "prefix_cache": self.prefix_cache_stats(),
+            "metrics": self.metrics().snapshot(),
+            "trace": ({"events": len(self.trace),
+                       "dropped": self.trace.dropped}
+                      if self.trace else None),
             "robustness": {
                 "failovers": self.failovers,
                 "resurrections": self.resurrections,
@@ -1038,7 +1090,7 @@ class Cluster:
                 {
                     "replica": rep.idx,
                     "alive": rep.alive,
-                    "stats": dataclasses.asdict(rep.executor.stats),
+                    "stats": rep.executor.stats.snapshot(),
                     "ledger": rep.ledger.summary(),
                     "injector": _injector_summary(rep.engine),
                 }
@@ -1135,6 +1187,11 @@ class ClusterClient(LLMClient):
     def __init__(self, cluster: Cluster, *, oracle: Optional[OracleLLM] = None):
         self.cluster = cluster
         self.oracle = oracle
+        #: join-level observability rides the client (DESIGN.md §17):
+        #: operators emit spans on the cluster's shared recorder and book
+        #: per-operator counters into the cluster-scope registry
+        self.trace = cluster.trace
+        self.metrics = cluster.op_metrics
         self.context_limit = min(e.max_seq for e in cluster.engines)
         #: advertised to the batch-size optimizer exactly like
         #: EngineClient.prefix_cached: with affinity routing, a shared

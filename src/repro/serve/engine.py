@@ -60,6 +60,7 @@ from repro.models import chunked_prefill, decode_step, encode, prefill, verify_s
 from repro.models.model import KV_ONLY_FAMILIES, cache_specs, model_specs
 from repro.models.params import Spec, is_spec
 from repro.models.quant import quantize_params, serving_param_shardings
+from repro.obs.trace import NULL_TRACE
 from repro.serve.prefix_cache import PagedKVPool, RadixPrefixCache
 from repro.sharding.logical import use_mesh
 
@@ -242,6 +243,20 @@ def _bucket(n: int, buckets: Sequence[int]) -> int:
 
 
 class Engine:
+    #: request-lifecycle tracing (DESIGN.md §17) — class attributes so an
+    #: untraced engine pays nothing per instance; an executor or cluster
+    #: installs a live recorder via :meth:`set_trace` (which resolves
+    #: through FaultyEngine's ``__getattr__`` delegation, so the chaos
+    #: proxy needs no changes)
+    trace = NULL_TRACE
+    trace_pid = 0
+
+    def set_trace(self, recorder, pid: int = 0) -> None:
+        """Attach a :class:`~repro.obs.trace.TraceRecorder` for engine
+        -level spans (radix lookups, page alloc/CoW, bucketed prefill)."""
+        self.trace = recorder
+        self.trace_pid = pid
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -575,13 +590,19 @@ class Engine:
         if n == 0:
             return []
         pages = self.pool.alloc(n)
+        evicted = 0
         while pages is None:
             if self.prefix_cache is None or not self.prefix_cache._evict_one():
                 raise RuntimeError(
                     f"KV page pool exhausted: need {n} pages, "
                     f"{self.pool.free_pages} free and nothing evictable"
                 )
+            evicted += 1
             pages = self.pool.alloc(n)
+        if self.trace:
+            self.trace.instant("page_alloc", "engine", pid=self.trace_pid,
+                               pages=n, evicted=evicted,
+                               free=int(self.pool.free_pages))
         return pages
 
     def _cow_page(self, page: int) -> int:
@@ -591,6 +612,9 @@ class Engine:
             if self.prefix_cache is None or not self.prefix_cache._evict_one():
                 raise RuntimeError("KV page pool exhausted during copy-on-write")
             new = self.pool.copy_page(page)
+        if self.trace:
+            self.trace.instant("cow", "engine", pid=self.trace_pid,
+                               page=int(page), new=int(new))
         return new
 
     def release_slot(self, state: Any, slot: int) -> None:
@@ -669,9 +693,18 @@ class Engine:
             raise ValueError(
                 f"prompt of {max(lens)} tokens exceeds engine max_seq {self.max_seq}"
             )
+        t0 = self.trace.now() if self.trace else 0.0
         if self.paged:
-            return self._prefill_rows_paged(ids, lens)
-        return self._prefill_rows_dense(ids, lens)
+            out = self._prefill_rows_paged(ids, lens)
+        else:
+            out = self._prefill_rows_dense(ids, lens)
+        if self.trace:
+            self.trace.complete(
+                "engine.prefill", "engine", t0, pid=self.trace_pid,
+                rows=len(prompts),
+                bucket=int(_bucket(max(lens), self.prefill_buckets)),
+                cached=int(sum(out[3])))
+        return out
 
     def score_rows(
         self, pairs: Sequence[Tuple[str, str]]
@@ -707,6 +740,7 @@ class Engine:
                 f"prompt+continuation of {max(lens)} tokens exceeds "
                 f"engine max_seq {self.max_seq}")
         limits = [len(p) - 1 for p in prompt_ids]
+        t0 = self.trace.now() if self.trace else 0.0
         if self.paged:
             cache, logits, _, cached = self._prefill_rows_paged(
                 seqs, lens, limits=limits, all_logits=True)
@@ -740,6 +774,10 @@ class Engine:
             for t in tables:
                 if t:
                     self.pool.decref(t)
+        if self.trace:
+            self.trace.complete(
+                "engine.score", "engine", t0, pid=self.trace_pid,
+                rows=len(pairs), cached=int(sum(cached)))
         return rows
 
     def embed_rows(
@@ -767,6 +805,7 @@ class Engine:
             raise ValueError(
                 f"text of {max(lens)} tokens exceeds engine max_seq "
                 f"{self.max_seq}")
+        t0 = self.trace.now() if self.trace else 0.0
         L = _bucket(max(lens), self.prefill_buckets)
         toks = np.zeros((self.slots, L), np.int32)
         vlen = np.zeros((self.slots,), np.int32)
@@ -775,6 +814,10 @@ class Engine:
             vlen[r] = len(seq)
         vecs = np.asarray(self._encode(
             self.params, jnp.asarray(toks), jnp.asarray(vlen)))
+        if self.trace:
+            self.trace.complete("engine.embed", "engine", t0,
+                                pid=self.trace_pid, rows=len(texts),
+                                bucket=int(L))
         return vecs[:len(texts)], lens
     def _prefill_rows_dense(self, ids: List[List[int]], lens: List[int],
                             limits: Optional[List[int]] = None,
@@ -790,6 +833,11 @@ class Engine:
             matches = [pc.match(seq, limit=cap)
                        for seq, cap in zip(ids, caps)]
             cached = [m.length for m in matches]
+            if self.trace:
+                self.trace.instant(
+                    "radix_lookup", "engine", pid=self.trace_pid,
+                    rows=len(ids), hit_tokens=int(sum(cached)),
+                    total_tokens=int(sum(lens)))
 
         try:
             if any(cached):
@@ -894,6 +942,11 @@ class Engine:
             matches = [pc.match(seq, limit=cap)
                        for seq, cap in zip(ids, caps)]
             cached = [m.length for m in matches]
+            if self.trace:
+                self.trace.instant(
+                    "radix_lookup", "engine", pid=self.trace_pid,
+                    rows=len(ids), hit_tokens=int(sum(cached)),
+                    total_tokens=int(sum(lens)))
 
         row_own: List[List[int]] = []     # pages this row allocated (writer)
         row_reuse: List[List[int]] = []   # in-batch deduped pages, in order

@@ -42,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.oracle import SystemClock
+from repro.obs.metrics import COUNT_BOUNDS, MetricsRegistry
+from repro.obs.trace import adopt_clock, recorder_from_env
 from repro.serve.engine import (
     DecodeState, Engine, GenResult, StopMatcher, pack_id, pack_ids,
 )
@@ -100,6 +102,14 @@ class ServeHandle:
         default=None, repr=False)
     _drafted: int = 0
     _accepted: int = 0
+    # latency observability (DESIGN.md §17): timestamps on the executor's
+    # clock.  _first_tok_ts / _gaps describe the *successful* attempt —
+    # a requeue resets them alongside the token backout, so the TTFT and
+    # inter-token histograms conserve exactly against the stats counters
+    _submit_ts: float = 0.0
+    _first_tok_ts: float = 0.0
+    _last_tok_ts: float = 0.0
+    _gaps: List[float] = dataclasses.field(default_factory=list, repr=False)
 
     def done(self) -> bool:
         return self.status in (FINISHED, CANCELLED)
@@ -136,6 +146,11 @@ class ExecutorStats:
     retries: int = 0
     backoff_s: float = 0.0
     deadline_expired: int = 0
+    #: requests retired FINISHED (generation and score alike) — the
+    #: conservation anchor for the latency histograms: ttft_s.count +
+    #: score_e2e_s.count == requests_finished, exactly, on any replica
+    #: merge (benchmarks/serving_latency.py asserts this)
+    requests_finished: int = 0
 
     @property
     def model_passes(self) -> int:
@@ -159,6 +174,13 @@ class ExecutorStats:
         out.merge(other)
         return out
 
+    def snapshot(self) -> dict:
+        """Plain-dict surface (fields + derived ``model_passes``) shared
+        by the metrics exporter and ``benchmarks/common.emit_json``."""
+        out = dataclasses.asdict(self)
+        out["model_passes"] = self.model_passes
+        return out
+
 
 class ContinuousBatchingExecutor:
     def __init__(
@@ -172,6 +194,9 @@ class ContinuousBatchingExecutor:
         backoff_max_s: float = 2.0,
         backoff_jitter: float = 0.5,
         backoff_seed: int = 0,
+        trace=None,
+        metrics: Optional[MetricsRegistry] = None,
+        trace_pid: int = 0,
     ):
         # REPRO_CHAOS=<seed> arms deterministic fault injection at the
         # engine seam (no-op when unset or when the cluster already
@@ -200,6 +225,23 @@ class ContinuousBatchingExecutor:
         self._failstreak = 0  # consecutive failed steps; reset on success
         self._any_deadline = False  # sweep guard: no deadlines, no scans
         self.stats = ExecutorStats()
+        #: request-lifecycle tracing (DESIGN.md §17) — the falsy no-op
+        #: recorder unless REPRO_TRACE is set or the owner (cluster,
+        #: client, launcher) handed one in.  Stamped from the executor's
+        #: clock so traces are deterministic under chaos's VirtualClock.
+        self.trace_pid = trace_pid
+        if trace is None:
+            trace = recorder_from_env(clock=self.clock)
+        else:
+            adopt_clock(trace, self.clock)
+        self.trace = trace
+        if self.trace:
+            # hand the engine the same recorder for its page/radix spans
+            # (set_trace resolves through FaultyEngine's delegation)
+            self.engine.set_trace(self.trace, pid=trace_pid)
+        #: always-on latency/SLO metrics, mergeable across replicas and
+        #: incarnations like Ledger (check_health carries them over)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._queue: Deque[ServeHandle] = deque()
         self._slots: List[Optional[ServeHandle]] = [None] * engine.slots
         self._state: Optional[DecodeState] = None
@@ -255,8 +297,14 @@ class ContinuousBatchingExecutor:
         self._next_id += 1
         if deadline is not None:
             self._any_deadline = True
+        handle._submit_ts = self.clock.now()
         self._queue.append(handle)
         self._queued_tokens += self._need(handle)
+        if self.trace:
+            self.trace.instant(
+                "submit", "request", pid=self.trace_pid,
+                request=handle.request_id, prompt_tokens=ntok,
+                max_tokens=max_tokens, queued=len(self._queue))
         return handle
 
     def submit_score(
@@ -296,8 +344,14 @@ class ContinuousBatchingExecutor:
             score=continuation, expected_score=expected_logprob,
         )
         self._next_id += 1
+        handle._submit_ts = self.clock.now()
         self._queue.append(handle)
         self._queued_tokens += self._need(handle)
+        if self.trace:
+            self.trace.instant(
+                "submit_score", "request", pid=self.trace_pid,
+                request=handle.request_id, prompt_tokens=seq_tok,
+                queued=len(self._queue))
         return handle
 
     def _check_owned(self, handle: ServeHandle) -> None:
@@ -319,6 +373,9 @@ class ContinuousBatchingExecutor:
             self._queue.remove(handle)
             self._queued_tokens -= self._need(handle)
             handle.status = CANCELLED
+            if self.trace:
+                self.trace.instant("cancel", "request", pid=self.trace_pid,
+                                   request=handle.request_id, was="queued")
             return True
         if handle.status == ACTIVE:
             self._free_slot(handle)
@@ -332,6 +389,9 @@ class ContinuousBatchingExecutor:
                 self.stats.prefill_tokens_cached -= handle._cached_prompt
                 handle._prefill_counted = False
             handle.status = CANCELLED
+            if self.trace:
+                self.trace.instant("cancel", "request", pid=self.trace_pid,
+                                   request=handle.request_id, was="active")
             return True
         return False
 
@@ -362,6 +422,18 @@ class ContinuousBatchingExecutor:
         on its clock and the next :meth:`step` starts them over on a
         fresh state — unless a request has exhausted ``max_retries``.
         """
+        m = self.metrics
+        depth = len(self._queue)
+        m.histogram("queue_depth", COUNT_BOUNDS).record(depth)
+        m.gauge("queue_depth_now").set(depth)
+        m.gauge("outstanding_tokens").set(self.outstanding_tokens)
+        if self.engine.paged:
+            m.gauge("free_pages").set(
+                self.engine.total_kv_pages - self._used_pages)
+        if self.trace:
+            self.trace.counter("queue_depth", depth, pid=self.trace_pid)
+            self.trace.counter("outstanding_tokens", self.outstanding_tokens,
+                               pid=self.trace_pid)
         expired = self._expire_deadlines()
         try:
             finished = self._step_inner()
@@ -398,6 +470,10 @@ class ContinuousBatchingExecutor:
             self.cancel(h)
             h.deadline_expired = True
             self.stats.deadline_expired += 1
+            if self.trace:
+                self.trace.instant("deadline_expired", "request",
+                                   pid=self.trace_pid,
+                                   request=h.request_id)
         return expired
 
     def _backoff(self) -> None:
@@ -411,6 +487,10 @@ class ContinuousBatchingExecutor:
         delay *= 1.0 + self.backoff_jitter * self._rng.random()
         self.stats.retries += 1
         self.stats.backoff_s += delay
+        self.metrics.histogram("backoff_s").record(delay)
+        if self.trace:
+            self.trace.instant("backoff", "executor", pid=self.trace_pid,
+                               delay_s=delay, streak=self._failstreak)
         self.clock.sleep(delay)
 
     def _next_token(self, h: ServeHandle, nxt: Optional[np.ndarray],
@@ -429,6 +509,12 @@ class ContinuousBatchingExecutor:
             h._spec_ctx += pack_id(tok)
         h._emitted += 1
         self.stats.generated_tokens += 1
+        now = self.clock.now()
+        if h._emitted == 1:
+            h._first_tok_ts = now
+        else:
+            h._gaps.append(now - h._last_tok_ts)
+        h._last_tok_ts = now
         piece = self.engine.tokenizer.decode([tok])
         if h._matcher.push(piece):
             self._retire(h, "stop", finished)
@@ -464,8 +550,13 @@ class ContinuousBatchingExecutor:
             tokens[slot] = tok
             active[slot] = True
         if active.any():
+            t0 = self.trace.now() if self.trace else 0.0
             self.engine.decode_active(self._state, tokens, active)
             self.stats.decode_steps += 1
+            if self.trace:
+                self.trace.complete("decode_step", "executor", t0,
+                                    pid=self.trace_pid,
+                                    rows=int(active.sum()))
         return finished
 
     def _spec_step(self, occupied, finished: List[ServeHandle]
@@ -502,8 +593,14 @@ class ContinuousBatchingExecutor:
             active[slot] = True
         if not active.any():
             return finished
+        t0 = self.trace.now() if self.trace else 0.0
         vlogits = eng.verify_active(self._state, tokens, n_tok, active)
         self.stats.decode_steps += 1  # one model pass, however many tokens
+        if self.trace:
+            self.trace.complete("spec_verify", "executor", t0,
+                                pid=self.trace_pid,
+                                rows=int(active.sum()),
+                                drafted=int(n_tok.sum() - active.sum()))
         nxt2 = None
         if any(active[s] and h._forced is None for s, h in occupied):
             nxt2 = np.asarray(jnp.argmax(vlogits, axis=-1), np.int32)
@@ -599,6 +696,9 @@ class ContinuousBatchingExecutor:
         state is never touched beyond dropping page references.
         """
         victims = self._all_pending()
+        if self.trace and victims:
+            self.trace.instant("evacuate", "executor", pid=self.trace_pid,
+                               requests=len(victims))
         for h in victims:
             self.cancel(h)
         return victims
@@ -636,6 +736,29 @@ class ContinuousBatchingExecutor:
         h.status = FINISHED
         self._free_slot(h)
         finished.append(h)
+        self._observe_finish(h, reason)
+
+    def _observe_finish(self, h: ServeHandle, reason: str) -> None:
+        """Book one finished generation request into the latency
+        histograms — exactly once per FINISHED request, so histogram
+        counts conserve against ``requests_finished`` by construction.
+        A request that retired with zero tokens records its retire time
+        as TTFT (the caller-visible first-response latency)."""
+        now = self.clock.now()
+        self.stats.requests_finished += 1
+        m = self.metrics
+        first = h._first_tok_ts if h._first_tok_ts > 0.0 else now
+        m.histogram("ttft_s").record(max(0.0, first - h._submit_ts))
+        it = m.histogram("intertoken_s")
+        for g in h._gaps:
+            it.record(g)
+        m.histogram("e2e_s").record(max(0.0, now - h._submit_ts))
+        if self.trace:
+            self.trace.complete(
+                "request", "request", h._submit_ts, pid=self.trace_pid,
+                request=h.request_id, reason=reason,
+                tokens=len(h._out_ids), retries=h.retries,
+                cached_prompt=int(h._cached_prompt))
 
     def _refill(self, finished: List[ServeHandle]) -> None:
         """Admit queued requests into free slots under Eq. (1) — and, on
@@ -671,12 +794,26 @@ class ContinuousBatchingExecutor:
             admitted.append(h)
         if not admitted:
             return
+        admit_ts = self.clock.now()
+        qw = self.metrics.histogram("queue_wait_s")
+        for h in admitted:
+            qw.record(max(0.0, admit_ts - h._submit_ts))
+            if self.trace:
+                self.trace.instant("admit", "request", pid=self.trace_pid,
+                                   request=h.request_id, slot=h._slot)
         if self._state is None:
             self._state = self.engine.init_state()
+        t0 = self.trace.now() if self.trace else 0.0
         cache, logits, lens, cached_lens = self.engine.prefill_rows(
             [h.prompt for h in admitted])
         self.stats.prefill_batches += 1
         self.stats.refills += len(admitted)
+        if self.trace:
+            self.trace.complete(
+                "prefill", "executor", t0, pid=self.trace_pid,
+                rows=len(admitted),
+                computed=int(sum(lens) - sum(cached_lens)),
+                cached=int(sum(cached_lens)))
         tok = self.engine.tokenizer
         for row, h in enumerate(admitted):
             h._cached_prompt = cached_lens[row]
@@ -741,6 +878,7 @@ class ContinuousBatchingExecutor:
                 self._queue.remove(h)
                 self._queued_tokens -= self._need(h)
                 h.status = ACTIVE
+            t0 = self.trace.now() if self.trace else 0.0
             try:
                 rows = eng.score_rows([(h.prompt, h.score) for h in batch])
             except Exception:
@@ -756,6 +894,11 @@ class ContinuousBatchingExecutor:
                 raise
             self.stats.prefill_batches += 1
             self.stats.score_requests += len(batch)
+            if self.trace:
+                self.trace.complete("score_batch", "executor", t0,
+                                    pid=self.trace_pid, rows=len(batch))
+            done_ts = self.clock.now()
+            se = self.metrics.histogram("score_e2e_s")
             for h, row in zip(batch, rows):
                 self.stats.scored_tokens += row.cont_tokens
                 self.stats.prefill_tokens_computed += (
@@ -772,6 +915,13 @@ class ContinuousBatchingExecutor:
                 )
                 h.status = FINISHED
                 finished.append(h)
+                self.stats.requests_finished += 1
+                se.record(max(0.0, done_ts - h._submit_ts))
+                if self.trace:
+                    self.trace.complete(
+                        "score_request", "request", h._submit_ts,
+                        pid=self.trace_pid, request=h.request_id,
+                        scored=int(row.cont_tokens))
 
     def _requeue_in_flight(self) -> bool:
         """Engine failure: reset in-flight requests back onto the queue.
@@ -801,11 +951,18 @@ class ContinuousBatchingExecutor:
             h._drafted = 0
             h._accepted = 0
             h._spec_ctx = None
+            # latency state is per-attempt, like the token counters it
+            # conserves against: the successful attempt defines TTFT/gaps
+            h._first_tok_ts = 0.0
+            h._gaps = []
             h.retries += 1
             if h.retries > self.max_retries:
                 exhausted = True
             self._queue.appendleft(h)
             self._queued_tokens += self._need(h)
+            if self.trace:
+                self.trace.instant("requeue", "executor", pid=self.trace_pid,
+                                   request=h.request_id, retries=h.retries)
         # decode state may be poisoned — rebuild.  Page references were
         # dropped slot-by-slot above; release_state backstops any slot
         # that never made it into the bookkeeping.

@@ -31,10 +31,13 @@ and never touch an engine.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from collections import OrderedDict
 from typing import Mapping, Sequence
 
 from repro.core.prompts import split_shared_prefix
+from repro.obs.export import CLUSTER_PID
+from repro.obs.trace import NULL_TRACE
 
 
 def affinity_key(prompt: str) -> str:
@@ -82,8 +85,21 @@ class RouterStats:
 class Router:
     """Policy interface: map one submission to a live replica id."""
 
+    #: route-decision tracing (DESIGN.md §17): the owning cluster swaps
+    #: in its shared recorder; the class default is the falsy no-op
+    trace = NULL_TRACE
+
     def __init__(self) -> None:
         self.stats = RouterStats()
+
+    def _trace_route(self, key: str, replica: int, decision: str) -> None:
+        """Emit one route-decision instant.  The affinity key itself can
+        be long prompt text — a CRC32 carries its identity into the
+        trace deterministically (``hash()`` is per-process salted)."""
+        self.trace.instant(
+            "route", "cluster", pid=CLUSTER_PID, replica=replica,
+            decision=decision,
+            key_crc=zlib.crc32(key.encode("utf-8", "replace")))
 
     def pick(self, key: str, cost: int, view: RouterView) -> int:
         raise NotImplementedError
@@ -143,16 +159,24 @@ class PrefixAffinityRouter(Router):
         if home is None or home not in view.alive:
             if home is not None:  # home died: re-pin to a survivor
                 self.stats.rehomed_keys += 1
+                decision = "rehome"
             else:
                 self.stats.new_keys += 1
+                decision = "new"
             self._pin(key, fallback)
+            if self.trace:
+                self._trace_route(key, fallback, decision)
             return fallback
         self._home.move_to_end(key)  # LRU touch
         lag = view.outstanding[home] - view.outstanding[fallback]
         if lag <= self.spill_factor * view.capacity[home]:
             self.stats.affinity_hits += 1
+            if self.trace:
+                self._trace_route(key, home, "affinity")
             return home
         self.stats.spills += 1
+        if self.trace:
+            self._trace_route(key, fallback, "spill")
         return fallback
 
     def forget(self, replica: int) -> None:
@@ -173,6 +197,8 @@ class RoundRobinRouter(Router):
         alive = list(view.alive)
         choice = alive[self._next % len(alive)]
         self._next += 1
+        if self.trace:
+            self._trace_route(key, choice, "round_robin")
         return choice
 
 

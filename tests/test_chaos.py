@@ -10,9 +10,11 @@ stays exactly conserved.  Faults are drawn from a seeded
 :class:`~repro.serve.faults.FaultPlan`, so every failing schedule is
 replayable.
 
-The property over random fault plans runs twice: a seeded stdlib-random
-sweep that always runs, and a hypothesis-driven variant when hypothesis
-is installed (it is a dev-only dependency).
+The properties (random fault plans, injector replayability, keyed
+draws) each run twice: a seeded stdlib-random sweep that always runs,
+and hypothesis-driven variants when hypothesis is installed (it is a
+dev-only dependency) that search the plan space and shrink any
+counterexample.
 """
 
 import os
@@ -485,6 +487,43 @@ if HAVE_HYPOTHESIS:
     def test_property_random_fault_plans_hypothesis(
             params, reference_join, seed):
         _chaos_join_roundtrip(params, reference_join, _random_plan(seed))
+
+    # the cheap (engine-free) properties get a real search budget: the
+    # seeded sweeps above pin a handful of schedules, hypothesis walks
+    # the space and shrinks any counterexample to a minimal plan
+    _SEAM_NAMES = ("prefill_rows", "decode_active", "verify_active",
+                   "score_rows", "embed_rows")
+
+    @given(seed=st.integers(0, 2**32 - 1),
+           error_rate=st.floats(0.0, 0.5),
+           spike_rate=st.floats(0.0, 0.3),
+           picks=st.lists(st.integers(0, len(_SEAM_NAMES) - 1),
+                          min_size=1, max_size=200))
+    @settings(max_examples=25, deadline=None)
+    def test_property_injector_replayable_hypothesis(
+            seed, error_rate, spike_rate, picks):
+        """Any plan replays exactly: same events, counts, virtual time."""
+        plan = FaultPlan(seed=seed, step_error_rate=error_rate,
+                         latency_spike_rate=spike_rate, spike_s=0.01)
+        seams = [_SEAM_NAMES[i] for i in picks]
+        ev1, inj1 = _schedule(plan, replica=0, seams=seams)
+        ev2, inj2 = _schedule(plan, replica=0, seams=seams)
+        assert ev1 == ev2
+        assert inj1.errors_injected == inj2.errors_injected
+        assert inj1.spikes_injected == inj2.spikes_injected
+        assert inj1.clock.now() == inj2.clock.now()
+
+    @given(seed=st.integers(0, 2**32 - 1), replica=st.integers(0, 7),
+           generation=st.integers(0, 3), counter=st.integers(0, 10**6))
+    @settings(max_examples=50, deadline=None)
+    def test_property_fault_draws_hypothesis(
+            seed, replica, generation, counter):
+        """Draws are pure functions of (seed, *key), always in [0, 1)."""
+        plan = FaultPlan(seed=seed)
+        u = plan.unit("error", replica, generation, "decode_active", counter)
+        assert 0.0 <= u < 1.0
+        assert u == FaultPlan(seed=seed).unit(
+            "error", replica, generation, "decode_active", counter)
 
 
 # ---------------------------------------------------------------------------
